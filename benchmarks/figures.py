@@ -1,0 +1,190 @@
+"""One benchmark per paper figure/table (deliverable d).
+
+Each function returns ``(derived_metric, details)`` where the derived
+metric is the figure's headline number; ``benchmarks.run`` times them and
+emits the ``name,us_per_call,derived`` CSV.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bwsig import (
+    DirectionSignature,
+    fit_signature,
+    misfit_score,
+    placement_matrix,
+    predict_counters,
+)
+from repro.core.numa import (
+    E5_2630_V3,
+    E5_2699_V3,
+    mixed_workload,
+    profile_pair,
+    pure_workload,
+    simulate,
+)
+from repro.core.numa.benchmarks import benchmark_workload, suite_names
+from repro.core.numa.evaluate import (
+    evaluate_accuracy,
+    evaluate_stability,
+    evaluate_suite,
+)
+
+
+def fig01_placement_speedups():
+    """Figure 1: speedup of thread/memory placements on the two machines.
+
+    Placements: memory on socket 1 / interleaved / local x threads on one
+    socket / both.  Derived: the 8-core machine's worst/best slowdown
+    (paper: ~3x) vs the 18-core machine's (paper: 'far more forgiving')."""
+    rows = {}
+    for machine, n in ((E5_2630_V3, 8), (E5_2699_V3, 18)):
+        runs = {}
+        for mem, pattern, socket in (
+            ("first", "static", 0),
+            ("interleave", "interleaved", 0),
+            ("local", "local", 0),
+        ):
+            # memory-intensive: per-thread demand ~7 GB/s saturates the
+            # links exactly like the paper's index-chasing benchmark
+            wl = pure_workload(mem, n, pattern, read_bpi=3.0, static_socket=socket)
+            for threads, placement in (
+                ("1socket", [n, 0]),
+                ("2sockets", [n // 2, n - n // 2]),
+            ):
+                res = simulate(machine, wl, jnp.asarray(placement, jnp.int32))
+                runs[f"{mem}/{threads}"] = float(res.throughput)
+        slowest = min(runs.values())
+        rows[machine.name] = {k: v / slowest for k, v in runs.items()}
+    spread_8 = max(rows[E5_2630_V3.name].values())
+    spread_18 = max(rows[E5_2699_V3.name].values())
+    return spread_8 / spread_18, rows
+
+
+def fig02_machine_bandwidths():
+    """Figure 2: remote/local bandwidth ratios of the simulated machines
+    match the paper's measured ratios by construction; derived = max
+    deviation from the paper's numbers (0 = exact)."""
+    paper = {
+        E5_2630_V3.name: (0.16, 0.23),
+        E5_2699_V3.name: (0.59, 0.83),
+    }
+    dev = 0.0
+    details = {}
+    for m in (E5_2630_V3, E5_2699_V3):
+        rr = m.remote_read_bw / m.local_read_bw
+        rw = m.remote_write_bw / m.local_write_bw
+        pr, pw = paper[m.name]
+        dev = max(dev, abs(rr - pr), abs(rw - pw))
+        details[m.name] = {"remote_read_ratio": rr, "remote_write_ratio": rw}
+    return dev, details
+
+
+def fig05_worked_example():
+    """Figure 5: the worked example's combined placement matrix.
+    Derived: max |entry - paper value|."""
+    sig = DirectionSignature.make(1, 0.2, 0.35, 0.3)
+    m = np.asarray(placement_matrix(sig, jnp.asarray([3, 1])))
+    paper = np.array([[0.65, 0.35], [0.30, 0.70]])
+    return float(np.abs(m - paper).max()), {"matrix": m.tolist()}
+
+
+def fig12_synthetic_signatures():
+    """§6.1 / Figure 12: pure synthetic benchmarks on both machines.
+    Derived: worst miscategorized bandwidth fraction (paper: <0.9%)."""
+    worst = 0.0
+    details = {}
+    for machine, n in ((E5_2630_V3, 8), (E5_2699_V3, 16)):
+        for pattern in ("static", "local", "interleaved", "per_thread"):
+            wl = pure_workload(pattern, n, pattern)
+            sym, asym = profile_pair(machine, wl)
+            sig = fit_signature(sym, asym)
+            got = np.array(
+                [
+                    float(sig.read.static_fraction),
+                    float(sig.read.local_fraction),
+                    float(sig.read.per_thread_fraction),
+                ]
+            )
+            want = {
+                "static": [1, 0, 0],
+                "local": [0, 1, 0],
+                "per_thread": [0, 0, 1],
+                "interleaved": [0, 0, 0],
+            }[pattern]
+            mis = 0.5 * (
+                np.abs(got - np.array(want, float)).sum()
+                + abs((1 - got.sum()) - (1 - sum(want)))
+            )
+            worst = max(worst, float(mis))
+            details[f"{machine.name}/{pattern}"] = float(mis)
+    return worst, details
+
+
+def fig13_15_stability():
+    """Figures 13-15: signature stability across the two machines.
+    Derived: mean combined-signature change % (paper: mean 6.8%, median
+    4.2% on real hardware; the simulator's only cross-machine variation is
+    saturation-induced rate asymmetry, so ours must come in below)."""
+    r = evaluate_stability(E5_2630_V3, E5_2699_V3, noise_std=0.01)
+    changes = sorted(r.combined_change.values())
+    cdf = {
+        "p50": float(np.percentile(changes, 50)),
+        "p75": float(np.percentile(changes, 75)),
+        "p90": float(np.percentile(changes, 90)),
+    }
+    return r.mean_combined_pct, {"median": r.median_combined_pct, "cdf": cdf}
+
+
+def fig16_misfit_detection():
+    """Figure 16 / §6.2.1: Page-rank-like violator — prediction error and
+    the redundancy detector.  Derived: detector score ratio
+    (violator / well-behaved); large = clean separation."""
+    good = benchmark_workload("Swim", 16)
+    bad = benchmark_workload("Page rank", 16)
+    res_good = evaluate_accuracy(E5_2699_V3, good)
+    res_bad = evaluate_accuracy(E5_2699_V3, bad)
+    ratio = float(res_bad.misfit) / max(float(res_good.misfit), 1e-9)
+    return ratio, {
+        "violator_mean_err_pct": float(np.mean(np.asarray(res_bad.errors_combined))) * 100,
+        "good_mean_err_pct": float(np.mean(np.asarray(res_good.errors_combined))) * 100,
+        "violator_misfit": float(res_bad.misfit),
+        "good_misfit": float(res_good.misfit),
+    }
+
+
+def fig17_accuracy_cdf():
+    """Figure 17 / §6.2.2: error CDF over every benchmark x placement x
+    counter, with realistic counter noise.  Derived: median error % of
+    bandwidth (paper: 2.34%; ours must be <= since our ground truth is
+    in-model except the violator)."""
+    r = evaluate_suite(E5_2699_V3, noise_std=0.02)
+    e = r.all_errors
+    return r.median_error_pct, {
+        "n_measurements": int(e.size),
+        "p50": float(np.percentile(e, 50)),
+        "p75": float(np.percentile(e, 75)),
+        "p90": float(np.percentile(e, 90)),
+        "paper_median": 2.34,
+    }
+
+
+def fig18_error_vs_bandwidth():
+    """Figure 18: per-benchmark mean error vs mean bandwidth.  Derived:
+    Spearman-style sign — do large errors concentrate in low-bandwidth
+    benchmarks (negative correlation, as the paper observes)?"""
+    r = evaluate_suite(E5_2699_V3, noise_std=0.02)
+    names, errs, bws = [], [], []
+    for name, res in r.per_benchmark.items():
+        names.append(name)
+        errs.append(float(np.mean(np.asarray(res.errors_combined))) * 100)
+        bws.append(float(np.mean(np.asarray(res.total_bw))))
+    errs_a, bws_a = np.asarray(errs), np.asarray(bws)
+    rank_e = errs_a.argsort().argsort().astype(float)
+    rank_b = bws_a.argsort().argsort().astype(float)
+    corr = float(np.corrcoef(rank_e, rank_b)[0, 1])
+    top = sorted(zip(errs, names), reverse=True)[:3]
+    return corr, {"highest_error_benchmarks": top}

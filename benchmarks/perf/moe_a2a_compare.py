@@ -1,0 +1,37 @@
+"""§Perf iteration c4 (beyond-paper): gather-EP vs all-to-all EP for the
+qwen3 MoE train cell.  Run in its own process (512 host devices)."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import dataclasses, json, sys
+from repro.launch.dryrun import lower_cell
+from repro.launch import mesh as mesh_lib
+from repro.configs.base import get_config, SHAPES
+from repro.core.meshsig.hlo_counters import analyze_hlo
+
+def measure(cfg, shape):
+    mesh = mesh_lib.make_production_mesh()
+    with mesh_lib.cell_context(mesh, cfg, shape):
+        jitted, args, _ = lower_cell(cfg, shape, mesh)
+        compiled = jitted.lower(*args).compile()
+    a = analyze_hlo(compiled.as_text())
+    mem = compiled.memory_analysis()
+    return {
+        "flops": a.flops, "bytes": a.hbm_bytes,
+        "link": a.collective_summary()["link_bytes_total"],
+        "per_kind": {k: v["link_bytes"] for k, v in a.collective_summary()["per_kind"].items()},
+        "temp_gb": mem.temp_size_in_bytes / 2**30,
+    }
+
+shape = SHAPES["train_4k"]
+base = get_config("qwen3-moe-30b-a3b")
+out = {}
+for impl in ("gather", "a2a"):
+    cfg = dataclasses.replace(base, moe_impl=impl)
+    out[impl] = measure(cfg, shape)
+    r = out[impl]
+    print(f"{impl:7s} flops={r['flops']:.3e} bytes={r['bytes']:.3e} link={r['link']:.3e} temp={r['temp_gb']:.1f}GB", flush=True)
+    print(f"        kinds: {({k: f'{v:.2e}' for k, v in r['per_kind'].items()})}", flush=True)
+json_path = "benchmarks/dryrun_results/moe_a2a_compare.json"
+json.dump(out, open(json_path, "w"), indent=1)
+print("saved", json_path)

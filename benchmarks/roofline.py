@@ -1,0 +1,147 @@
+"""Roofline analysis (deliverable g) over the dry-run artifacts.
+
+For every (arch x shape x mesh) cell, derive the three roofline terms from
+the compiled dry-run (TPU v5e-class constants):
+
+    compute    = HLO_FLOPs / peak_FLOPs          (197 TFLOP/s bf16 / chip)
+    memory     = HLO_bytes / HBM_bw              (819 GB/s / chip)
+    collective = collective link bytes / ICI_bw  (~50 GB/s / link)
+
+FLOPs/bytes come from the repo's own HLO analyzer (loop trip counts
+multiplied through — XLA's cost_analysis counts while bodies once);
+collective bytes use ring-algorithm link formulas per op.  NOTE on the
+memory term: the byte counter treats every top-level HLO op boundary as
+HBM traffic.  Fusion granularity on this CPU-compiled module is coarser
+than a real TPU pass, so the memory term is an UPPER BOUND (flagged in
+EXPERIMENTS.md).
+
+MODEL_FLOPS uses 6*N*D for training (N = active params, D = tokens),
+2*N*D for prefill and 2*N*B for decode steps.  ``useful fraction`` =
+(MODEL_FLOPS / peak) / dominant-term — how close the step is to ideal
+compute-bound time; this is the score §Perf hillclimbs.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+RESULTS = Path(__file__).resolve().parent / "dryrun_results"
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+SHAPE_TOKENS = {
+    "train_4k": (4096, 256),
+    "prefill_32k": (32768, 32),
+    "decode_32k": (32768, 128),
+    "long_500k": (524288, 1),
+}
+
+
+def model_flops_per_device(rec: dict, devices: int) -> float:
+    seq, batch = SHAPE_TOKENS[rec["shape"]]
+    # active params come from the live config (metric definition), not the
+    # compile-time artifact snapshot
+    from repro.configs.base import get_config
+
+    n = get_config(rec["arch"]).active_param_count()
+    if rec["shape"] == "train_4k":
+        return 6.0 * n * seq * batch / devices
+    if rec["shape"] == "prefill_32k":
+        return 2.0 * n * seq * batch / devices
+    return 2.0 * n * batch / devices  # decode: one token per sequence
+
+
+def load_cells() -> list[dict]:
+    cells = []
+    for p in sorted(RESULTS.glob("*__*.json")):
+        if p.name.startswith("meshsig"):
+            continue
+        cells.append(json.loads(p.read_text()))
+    return cells
+
+
+def roofline_row(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    devices = 512 if rec["mesh"] == "multi" else 256
+    flops = rec.get("hlo_flops", 0.0)
+    hbm = rec.get("hlo_bytes", 0.0)
+    link = rec.get("collectives", {}).get("link_bytes_total", 0.0)
+    t_c = flops / PEAK_FLOPS
+    t_m = hbm / HBM_BW
+    t_l = link / ICI_BW
+    dominant = max(
+        ("compute", t_c), ("memory", t_m), ("collective", t_l), key=lambda kv: kv[1]
+    )
+    mf = model_flops_per_device(rec, devices)
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "compute_s": t_c,
+        "memory_s": t_m,
+        "collective_s": t_l,
+        "dominant": dominant[0],
+        "dominant_s": dominant[1],
+        "model_flops": mf,
+        "flops_ratio": mf / flops if flops else 0.0,
+        "useful_fraction": (mf / PEAK_FLOPS) / dominant[1] if dominant[1] else 0.0,
+        "hbm_gb_per_dev": rec.get("memory", {}).get("temp_size_in_bytes", 0) / 2**30,
+    }
+
+
+def analyze(mesh: str = "single") -> list[dict]:
+    rows = []
+    for rec in load_cells():
+        if rec.get("mesh") != mesh:
+            continue
+        row = roofline_row(rec)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def pick_hillclimb_cells(rows: list[dict]) -> dict[str, dict]:
+    """The three §Perf cells: worst useful-fraction, most collective-bound,
+    most paper-representative (the MoE EP cell — all-to-all traffic is the
+    paper's Per-thread class)."""
+    train = [r for r in rows if r["shape"] == "train_4k"]
+    worst = min(rows, key=lambda r: r["useful_fraction"])
+    coll = max(rows, key=lambda r: r["collective_s"])
+    moe = max(
+        (r for r in train if r["arch"].startswith(("qwen3", "jamba", "mixtral"))),
+        key=lambda r: r["collective_s"],
+        default=None,
+    )
+    return {"worst_fraction": worst, "most_collective": coll, "paper_representative": moe}
+
+
+def main() -> None:
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "single"
+    rows = analyze(mesh)
+    hdr = (
+        f"{'arch':24s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
+        f"{'collect_s':>10s} {'dominant':>10s} {'6ND/HLO':>8s} {'useful%':>8s}"
+    )
+    print(hdr)
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        print(
+            f"{r['arch']:24s} {r['shape']:12s} {r['compute_s']:10.4f} "
+            f"{r['memory_s']:10.4f} {r['collective_s']:10.4f} {r['dominant']:>10s} "
+            f"{r['flops_ratio']:8.3f} {100*r['useful_fraction']:8.2f}"
+        )
+    picks = pick_hillclimb_cells(rows)
+    print("\nhillclimb picks:")
+    for why, r in picks.items():
+        if r:
+            print(f"  {why:22s} -> {r['arch']} / {r['shape']} ({r['dominant']}-bound, useful {100*r['useful_fraction']:.2f}%)")
+
+
+if __name__ == "__main__":
+    main()

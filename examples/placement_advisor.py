@@ -1,0 +1,81 @@
+"""Placement advisor: the Pandia use-case on a TPU mesh.
+
+Loads the fitted mesh signature from the validation artifact (produced by
+``python -m repro.core.meshsig.validate``) and ranks candidate mesh aspect
+ratios for llama3-8b training WITHOUT compiling them.  Falls back to a
+NUMA-domain advisor demo when the artifact is missing.
+
+    PYTHONPATH=src python examples/placement_advisor.py
+"""
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "benchmarks" / "dryrun_results"
+
+
+def mesh_demo(rec: dict) -> None:
+    from repro.core.meshsig.advisor import rank_meshes
+    from repro.core.meshsig.fit import MeshSignature
+
+    terms = {}
+    for key, t in rec["terms"].items():
+        cls, axis = key.split("/")
+        terms[(cls, axis)] = (float(t["beta"]), float(t["e"]))
+    sig = MeshSignature(
+        terms=terms,
+        local_bytes0=1.0,  # HBM term not needed for collective ranking
+        flops0=float(rec.get("flops0", 1e14)),
+        batch_shards0=32,
+    )
+    candidates = [
+        {"data": 256, "model": 1},
+        {"data": 64, "model": 4},
+        {"data": 32, "model": 8},
+        {"data": 16, "model": 16},
+        {"data": 8, "model": 32},
+        {"data": 4, "model": 64},
+    ]
+    print(f"advisor ranking for {rec['arch']}/{rec['shape']} (no compilation):")
+    for r in rank_meshes(sig, candidates):
+        axes = "x".join(str(v) for v in r.axis_sizes.values())
+        print(
+            f"  mesh {axes:8s} collective={r.collective_s*1e3:8.2f} ms/step "
+            f"(per-axis: { {a: f'{v*1e3:.1f}ms' for a, v in r.per_axis_s.items()} })"
+        )
+
+
+def numa_demo() -> None:
+    import jax.numpy as jnp
+
+    from repro.core.bwsig import fit_signature, placement_matrix
+    from repro.core.numa import E5_2630_V3, mixed_workload, profile_pair, simulate
+
+    wl = mixed_workload("app", 8, read_mix=(0.5, 0.1, 0.2), read_bpi=1.2)
+    sym, asym = profile_pair(E5_2630_V3, wl)
+    sig = fit_signature(sym, asym)
+    print("NUMA advisor: throughput of every placement (8 threads, 8-core box):")
+    best = None
+    for i in range(0, 9):
+        placement = jnp.asarray([i, 8 - i], jnp.int32)
+        thr = float(simulate(E5_2630_V3, wl, placement).throughput)
+        m = placement_matrix(sig.read, placement)
+        w = placement / placement.sum()  # thread-weighted local traffic
+        remote = 1.0 - float((w * jnp.diagonal(m)).sum())
+        print(f"  ({i},{8-i}): throughput={thr:.2f}  predicted-remote={100*remote:.0f}%")
+        if best is None or thr > best[1]:
+            best = (placement.tolist(), thr)
+    print(f"best placement: {best[0]}")
+
+
+def main() -> None:
+    recs = sorted(RESULTS.glob("meshsig_validation__*.json"))
+    if recs:
+        mesh_demo(json.loads(recs[0].read_text()))
+    else:
+        print("(no mesh validation artifact; showing the NUMA advisor)")
+    numa_demo()
+
+
+if __name__ == "__main__":
+    main()

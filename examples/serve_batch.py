@@ -1,0 +1,25 @@
+"""Batched serving example: prefill a batch of prompts through the decode
+path, then greedy-decode continuations with the KV cache.
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+
+import sys
+
+from repro.launch.serve import main as serve_main
+
+
+def main() -> None:
+    sys.argv = [
+        "serve",
+        "--arch", "llama3-8b",
+        "--reduced",
+        "--batch", "4",
+        "--prompt-len", "12",
+        "--gen", "12",
+    ]
+    serve_main()
+
+
+if __name__ == "__main__":
+    main()

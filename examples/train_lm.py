@@ -1,0 +1,39 @@
+"""End-to-end training driver: a small LM trained for a few hundred steps
+with the full production substrate (AdamW, cosine schedule, grad accum,
+async checkpointing, restart, straggler monitor).
+
+Defaults are CPU-sized (~9M params, 200 steps, a couple of minutes).  On a
+pod, pass --arch llama3-8b (full config) and --mesh single.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+
+import argparse
+import sys
+
+sys.argv = [sys.argv[0]] + (sys.argv[1:] or [])
+
+from repro.launch.train import main as train_main  # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="h2o-danube-1.8b")
+    args, extra = ap.parse_known_args()
+    sys.argv = [
+        "train",
+        "--arch", args.arch,
+        "--reduced",
+        "--steps", str(args.steps),
+        "--batch", "8",
+        "--seq", "128",
+        "--lr", "3e-3",
+        "--ckpt-dir", "/tmp/repro_train_lm",
+        *extra,
+    ]
+    train_main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,172 @@
+"""Topology-independent sharded checkpointing.
+
+Design (DESIGN.md §7):
+
+* Every leaf is saved as one ``.npy`` per *logical shard chunk* (chunked on
+  the leading axis) plus a JSON manifest describing the pytree, dtypes and
+  chunking — the on-disk layout never references a mesh, so a checkpoint
+  written on 512 chips restores onto 256 (elastic re-shard) or onto 1 CPU.
+* Commits are atomic: everything is written into ``step_XXXX.tmp/`` and the
+  directory is renamed only after the manifest lands.  A crashed writer
+  leaves a ``.tmp`` that restore ignores — the previous step stays valid.
+* ``AsyncCheckpointer`` moves serialization off the training thread
+  (device-to-host happens at save() call; disk writes overlap the next
+  steps), bounded to one in-flight save.
+"""
+
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any
+
+import jax
+import ml_dtypes
+import numpy as np
+
+_MANIFEST = "manifest.json"
+
+
+def _is_native(dtype: np.dtype) -> bool:
+    return dtype.kind in "biufc"
+
+
+def _to_savable(arr: np.ndarray) -> np.ndarray:
+    """ml_dtypes (bfloat16, fp8) round-trip as raw same-width uints."""
+    if _is_native(arr.dtype):
+        return arr
+    return arr.view(np.dtype(f"u{arr.dtype.itemsize}"))
+
+
+def _from_savable(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    if arr.dtype.name == dtype_name:
+        return arr
+    return arr.view(np.dtype(getattr(ml_dtypes, dtype_name)))
+
+
+def _flatten(tree: Any) -> tuple[list[tuple[str, Any]], Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    items = []
+    for path, leaf in flat:
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) if hasattr(p, "idx") else str(p.name)
+            for p in path
+        )
+        items.append((key, leaf))
+    return items, treedef
+
+
+def save(directory: str | Path, step: int, tree: Any, *, chunk_mb: int = 512) -> Path:
+    """Write one checkpoint synchronously; returns the committed path."""
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    final = directory / f"step_{step:08d}"
+    tmp = directory / f"step_{step:08d}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    items, _ = _flatten(tree)
+    manifest: dict[str, Any] = {"step": step, "leaves": {}, "time": time.time()}
+    for i, (key, leaf) in enumerate(items):
+        arr = np.asarray(leaf)
+        n_chunks = 1
+        if arr.ndim and arr.nbytes > chunk_mb << 20:
+            n_chunks = min(arr.shape[0], -(-arr.nbytes // (chunk_mb << 20)))
+            while arr.shape[0] % n_chunks:
+                n_chunks -= 1
+        fname = f"leaf_{i:05d}"
+        for c in range(n_chunks):
+            lo = arr.shape[0] * c // n_chunks if arr.ndim else 0
+            hi = arr.shape[0] * (c + 1) // n_chunks if arr.ndim else 0
+            part = arr[lo:hi] if n_chunks > 1 else arr
+            np.save(tmp / f"{fname}.{c:03d}.npy", _to_savable(part))
+        manifest["leaves"][key] = {
+            "file": fname,
+            "chunks": n_chunks,
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+        }
+    (tmp / _MANIFEST).write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)  # atomic commit
+    return final
+
+
+def latest_step(directory: str | Path) -> int | None:
+    directory = Path(directory)
+    if not directory.exists():
+        return None
+    steps = []
+    for p in directory.iterdir():
+        if p.is_dir() and p.name.startswith("step_") and not p.name.endswith(".tmp"):
+            if (p / _MANIFEST).exists():
+                steps.append(int(p.name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(
+    directory: str | Path,
+    step: int,
+    like: Any,
+    *,
+    shardings: Any = None,
+) -> Any:
+    """Restore a pytree saved by :func:`save` onto the current topology.
+
+    ``like`` provides the tree structure (e.g. from ``jax.eval_shape``).
+    ``shardings`` (same structure, optional) re-shards every leaf onto the
+    *current* mesh — this is the elastic-scaling path: the checkpoint knows
+    nothing about the mesh it was written from.
+    """
+    path = Path(directory) / f"step_{step:08d}"
+    manifest = json.loads((path / _MANIFEST).read_text())
+    items, treedef = _flatten(like)
+    sh_items = None
+    if shardings is not None:
+        sh_items, _ = _flatten(shardings)
+
+    leaves = []
+    for i, (key, leaf_like) in enumerate(items):
+        meta = manifest["leaves"][key]
+        parts = [
+            _from_savable(
+                np.load(path / f"{meta['file']}.{c:03d}.npy"), meta["dtype"]
+            )
+            for c in range(meta["chunks"])
+        ]
+        arr = parts[0] if len(parts) == 1 else np.concatenate(parts, axis=0)
+        assert list(arr.shape) == meta["shape"], key
+        if sh_items is not None:
+            arr = jax.device_put(arr, sh_items[i][1])
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class AsyncCheckpointer:
+    """Background-thread checkpoint writer, one save in flight."""
+
+    def __init__(self, directory: str | Path):
+        self.directory = Path(directory)
+        self._thread: threading.Thread | None = None
+        self.saved_steps: list[int] = []
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save(self, step: int, tree: Any) -> None:
+        self.wait()  # bound to one in-flight write
+        host_tree = jax.tree.map(np.asarray, tree)  # d2h on the caller
+
+        def work():
+            save(self.directory, step, host_tree)
+            self.saved_steps.append(step)
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()

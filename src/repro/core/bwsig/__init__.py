@@ -1,0 +1,43 @@
+"""Bandwidth-signature engine — the paper's core contribution.
+
+This package is domain independent: it consumes performance-counter samples
+(:class:`CounterSample`) and produces/consumes bandwidth signatures
+(:class:`BandwidthSignature`).  Two domains drive it:
+
+* ``repro.core.numa`` — the faithful reproduction: counters come from a
+  simulated NUMA machine's memory-bank monitors (paper §2.1).
+* ``repro.core.meshsig`` — the TPU adaptation: counters come from compiled-HLO
+  collective-byte accounting on a device mesh.
+"""
+
+from repro.core.bwsig.signature import (
+    BandwidthSignature,
+    DirectionSignature,
+    interleaved_fraction,
+    placement_matrix,
+    predict_counters,
+    predict_flows,
+)
+from repro.core.bwsig.counters import CounterSample, counters_from_flows
+from repro.core.bwsig.fit import (
+    fit_direction,
+    fit_signature,
+    normalize_sample,
+)
+from repro.core.bwsig.detect import misfit_score, signature_distance
+
+__all__ = [
+    "BandwidthSignature",
+    "DirectionSignature",
+    "CounterSample",
+    "counters_from_flows",
+    "interleaved_fraction",
+    "placement_matrix",
+    "predict_counters",
+    "predict_flows",
+    "fit_direction",
+    "fit_signature",
+    "normalize_sample",
+    "misfit_score",
+    "signature_distance",
+]

@@ -1,0 +1,99 @@
+"""Performance-counter samples — the data the model is fitted from.
+
+Paper §2.1: the counters of interest are, per memory bank, the volume of
+data moved for the *local* socket and for *remote* sockets (reported from the
+bank's perspective, not the CPU's), plus per-socket instruction counts and
+the elapsed time.  :class:`CounterSample` is that record.
+
+``counters_from_flows`` reduces a ground-truth ``(s, s)`` flow matrix (which
+only a simulator — or a hypothetical perfect counter set — can see) to the
+bank-perspective view real hardware exposes.  The fitting code in
+``fit.py`` only ever consumes the reduced view, exactly as the paper's
+method does.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+from jax import Array
+
+
+class CounterSample(NamedTuple):
+    """One profiling run's counter readings on an ``s``-socket machine.
+
+    All per-bank arrays have shape ``(s,)``; ``instructions`` is per socket
+    (CPU perspective — paper Figure 8 caption); ``elapsed`` is scalar
+    seconds; ``n_per_socket`` records the thread placement of the run (the
+    fitting equations need it).
+    """
+
+    local_read: Array
+    remote_read: Array
+    local_write: Array
+    remote_write: Array
+    instructions: Array
+    elapsed: Array
+    n_per_socket: Array
+
+    @property
+    def sockets(self) -> int:
+        return self.local_read.shape[-1]
+
+    def totals(self, direction: str) -> Array:
+        """Total per-bank traffic for one direction (paper §5.3)."""
+        if direction == "read":
+            return self.local_read + self.remote_read
+        if direction == "write":
+            return self.local_write + self.remote_write
+        if direction == "combined":
+            return (
+                self.local_read
+                + self.remote_read
+                + self.local_write
+                + self.remote_write
+            )
+        raise ValueError(f"unknown direction {direction!r}")
+
+    def combined(self) -> "CounterSample":
+        """Collapse reads and writes into a single direction.
+
+        Paper §6.2.1 evaluates a combined-bandwidth signature when one
+        direction has too little traffic to give a usable signal (e.g.
+        equake's writes).  The combined sample carries the summed traffic in
+        the *read* slots and zeros in the write slots.
+        """
+        return CounterSample(
+            local_read=self.local_read + self.local_write,
+            remote_read=self.remote_read + self.remote_write,
+            local_write=jnp.zeros_like(self.local_write),
+            remote_write=jnp.zeros_like(self.remote_write),
+            instructions=self.instructions,
+            elapsed=self.elapsed,
+            n_per_socket=self.n_per_socket,
+        )
+
+
+def counters_from_flows(
+    read_flows: Array,
+    write_flows: Array,
+    instructions: Array,
+    elapsed: Array,
+    n_per_socket: Array,
+) -> CounterSample:
+    """Reduce ground-truth ``flows[i, j]`` (socket ``i`` CPUs -> bank ``j``,
+    bytes) to the bank-perspective counters of paper §2.1."""
+    l_read = jnp.diagonal(read_flows)
+    r_read = read_flows.sum(axis=0) - l_read
+    l_write = jnp.diagonal(write_flows)
+    r_write = write_flows.sum(axis=0) - l_write
+    return CounterSample(
+        local_read=l_read,
+        remote_read=r_read,
+        local_write=l_write,
+        remote_write=r_write,
+        instructions=instructions,
+        elapsed=jnp.asarray(elapsed),
+        n_per_socket=jnp.asarray(n_per_socket),
+    )

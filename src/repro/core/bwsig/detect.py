@@ -1,0 +1,87 @@
+"""Detecting workloads the model cannot represent — paper §6.2.1.
+
+"Fortunately it is possible to detect when situations like this occur as
+there is redundant information in the program counters that highlights the
+inconsistency.  For example once we remove the static fraction with the
+symmetric placement we expect the placement to be symmetric.  If when we
+examine the local remote ratio for each socket we find that it is not
+symmetric this is a sign that the application does not fit the model.  The
+bigger the difference the worse the fit."
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import Array
+
+from repro.core.bwsig.counters import CounterSample
+from repro.core.bwsig.fit import fit_static, normalize_sample
+from repro.core.bwsig.signature import (
+    BandwidthSignature,
+    DirectionSignature,
+    interleaved_fraction,
+)
+
+_EPS = 1e-20
+
+
+def misfit_score(sym_sample: CounterSample, direction: str = "read") -> Array:
+    """Redundancy check on the *symmetric* profiling run.
+
+    After the static component is removed, both the per-bank residual totals
+    and the per-bank remote ratios must be equal across banks for any
+    workload the 4-class model can represent.  The score is the combined
+    normalized spread of the two; 0 = perfect fit, larger = worse.
+    """
+    sym = normalize_sample(sym_sample, direction)
+    static_socket, static_fraction = fit_static(sym)
+
+    local, remote = sym["local"], sym["remote"]
+    s = local.shape[0]
+    total = jnp.maximum((local + remote).sum(), _EPS)
+    static_total = static_fraction * total
+    onehot = jnp.arange(s) == static_socket
+    local = jnp.maximum(jnp.where(onehot, local - static_total / s, local), 0.0)
+    remote = jnp.maximum(
+        jnp.where(onehot, remote - static_total * (s - 1) / s, remote), 0.0
+    )
+
+    residual_totals = local + remote
+    mean_total = jnp.maximum(residual_totals.mean(), _EPS)
+    total_spread = jnp.abs(residual_totals - mean_total).max() / mean_total
+
+    r = remote / jnp.maximum(local + remote, _EPS)
+    r_spread = jnp.abs(r - r.mean()).max()
+
+    return total_spread + r_spread
+
+
+def _class_vector(sig: DirectionSignature, s: int) -> Array:
+    """Expand a direction signature into a distribution over traffic
+    classes: one slot per possible static socket + local + per-thread +
+    interleaved.  Moving the static socket therefore counts as a full
+    reallocation of the static bandwidth."""
+    static = (jnp.arange(s) == sig.static_socket) * sig.static_fraction
+    rest = jnp.stack(
+        [sig.local_fraction, sig.per_thread_fraction, interleaved_fraction(sig)]
+    )
+    return jnp.concatenate([static, rest])
+
+
+def signature_distance(
+    a: BandwidthSignature | DirectionSignature,
+    b: BandwidthSignature | DirectionSignature,
+    s: int = 2,
+) -> Array:
+    """Fraction of the bandwidth reallocated between two signatures
+    (the metric of paper Figure 14) — half the L1 distance between the
+    class distributions, in [0, 1]."""
+    if isinstance(a, BandwidthSignature):
+        assert isinstance(b, BandwidthSignature)
+        return 0.5 * (
+            signature_distance(a.read, b.read, s)
+            + signature_distance(a.write, b.write, s)
+        )
+    va = _class_vector(a, s)
+    vb = _class_vector(b, s)
+    return 0.5 * jnp.abs(va - vb).sum()

@@ -1,0 +1,251 @@
+"""Fitting a bandwidth signature from two profiling runs — paper §5.
+
+The protocol:
+
+1. Run the workload twice: once with a *symmetric* placement (equal thread
+   counts per socket) and once with an *asymmetric* one (same total thread
+   count, unequal split) — paper §5.1, Figure 7.
+2. Normalize each run's bank counters by the per-thread instruction rate of
+   the socket the traffic is to/from — §5.2.
+3. Static socket + static fraction from the symmetric run's bank imbalance —
+   §5.3.
+4. Local fraction from the symmetric run's remote-access ratio — §5.4.
+5. Per-thread fraction from the asymmetric run by interpolating between the
+   all-per-thread and all-interleaved expectations — §5.5.
+
+The code is written for general socket counts ``s`` but reduces *exactly* to
+the paper's equations at ``s = 2`` (the case the paper's Intel counters
+support directly).  For ``s > 2`` the only extra assumption is that a bank's
+``remote`` counter is apportioned to the other sockets in proportion to
+their thread counts (the hardware merges all remote sources into one
+counter; the paper never needs to split it because with two sockets there is
+only one possible source).
+
+Everything is pure ``jnp`` and differentiable apart from the static-socket
+argmax, so fits can be vmapped over large batches of counter samples.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import Array
+
+from repro.core.bwsig.counters import CounterSample
+from repro.core.bwsig.signature import BandwidthSignature, DirectionSignature
+
+_EPS = 1e-20
+
+
+class NormalizedDirection(dict):
+    pass
+
+
+def _per_thread_rate(sample: CounterSample) -> Array:
+    """Average per-thread instruction rate per socket (paper §5.2 — the
+    paper records instructions and elapsed time instead of IPC, §2.1.1)."""
+    n = sample.n_per_socket.astype(jnp.float32)
+    denom = jnp.maximum(n * sample.elapsed, _EPS)
+    rate = sample.instructions / denom
+    # An empty socket executed nothing; use rate 1 so division is a no-op
+    # (its counters are zero anyway).
+    return jnp.where(n > 0, rate, 1.0)
+
+
+def _remote_source_weights(n_per_socket: Array) -> Array:
+    """``w[j, i]``: fraction of bank ``j``'s remote counter sourced from
+    socket ``i``.  Exact (=1 on the single other socket) for s == 2."""
+    n = n_per_socket.astype(jnp.float32)
+    s = n.shape[0]
+    off = 1.0 - jnp.eye(s)
+    w = off * n[None, :]
+    denom = jnp.maximum(w.sum(axis=1, keepdims=True), _EPS)
+    return w / denom
+
+
+def normalize_sample(sample: CounterSample, direction: str) -> dict[str, Array]:
+    """Paper §5.2: divide each bank counter by the average per-thread
+    instruction rate of the socket the traffic was to or from.
+
+    Returns per-bank ``local`` and ``remote`` normalized traffic for one
+    direction, the remote source-weight matrix, and the run's placement.
+    """
+    rate = _per_thread_rate(sample)
+    if direction == "read":
+        local, remote = sample.local_read, sample.remote_read
+    elif direction == "write":
+        local, remote = sample.local_write, sample.remote_write
+    else:
+        raise ValueError(f"unknown direction {direction!r}")
+
+    w = _remote_source_weights(sample.n_per_socket)
+    # Local traffic at bank j is from socket j's threads.
+    local_n = local / jnp.maximum(rate, _EPS)
+    # Remote traffic at bank j is from the other sockets; normalize each
+    # attributed share by its source socket's rate and re-sum.
+    shares = w * remote[:, None]  # [bank j, source i]
+    remote_n = (shares / jnp.maximum(rate[None, :], _EPS)).sum(axis=1)
+    return {
+        "local": local_n,
+        "remote": remote_n,
+        "source_weights": w,
+        "n_per_socket": sample.n_per_socket,
+    }
+
+
+# ---------------------------------------------------------------------------
+# §5.3 static fraction
+# ---------------------------------------------------------------------------
+
+
+def fit_static(sym: dict[str, Array]) -> tuple[Array, Array]:
+    """Static socket = the bank moving the most data in the symmetric run;
+    static fraction = its excess over the other banks' mean, divided by the
+    total (reduces to ``(b2 - b1) / (b1 + b2)`` for s = 2 — paper §5.3)."""
+    totals = sym["local"] + sym["remote"]
+    s = totals.shape[0]
+    static_socket = jnp.argmax(totals).astype(jnp.int32)
+    peak = totals[static_socket]
+    others_mean = (totals.sum() - peak) / jnp.maximum(s - 1, 1)
+    total = jnp.maximum(totals.sum(), _EPS)
+    static_fraction = jnp.clip((peak - others_mean) / total, 0.0, 1.0)
+    return static_socket, static_fraction
+
+
+# ---------------------------------------------------------------------------
+# §5.4 local fraction
+# ---------------------------------------------------------------------------
+
+
+def fit_local(
+    sym: dict[str, Array], static_socket: Array, static_fraction: Array
+) -> Array:
+    """Paper §5.4.
+
+    After removing the static component from the static bank (in the
+    symmetric run ``1/s`` of static traffic is local to that bank, the rest
+    remote), the measured remote ratio obeys
+
+        r = (s-1)/s * (1 - local / (1 - static))
+
+    which is rearranged for the local fraction.
+    """
+    local, remote = sym["local"], sym["remote"]
+    s = local.shape[0]
+    total = jnp.maximum((local + remote).sum(), _EPS)
+    static_total = static_fraction * total
+
+    onehot = jnp.arange(s) == static_socket
+    local = jnp.where(onehot, local - static_total / s, local)
+    remote = jnp.where(onehot, remote - static_total * (s - 1) / s, remote)
+    local = jnp.maximum(local, 0.0)
+    remote = jnp.maximum(remote, 0.0)
+
+    r_per_bank = remote / jnp.maximum(local + remote, _EPS)
+    r = r_per_bank.mean()
+    frac = 1.0 - r * s / (s - 1)
+    local_fraction = frac * (1.0 - static_fraction)
+    return jnp.clip(local_fraction, 0.0, 1.0 - static_fraction)
+
+
+# ---------------------------------------------------------------------------
+# §5.5 per-thread fraction
+# ---------------------------------------------------------------------------
+
+
+def fit_per_thread(
+    asym: dict[str, Array],
+    static_socket: Array,
+    static_fraction: Array,
+    local_fraction: Array,
+) -> Array:
+    """Paper §5.5: disambiguate Per-thread from Interleaved using the
+    asymmetric run."""
+    local, remote = asym["local"], asym["remote"]
+    w = asym["source_weights"]
+    n = asym["n_per_socket"].astype(jnp.float32)
+    s = local.shape[0]
+
+    # Per-CPU demand totals: local traffic at a CPU's own bank plus its share
+    # of every other bank's remote counter (for s = 2 this is exactly
+    # ``reads_CPU1 = l_bank1 + r_bank2`` as in the paper).
+    per_cpu = local + (w * remote[:, None]).sum(axis=0)
+
+    # Remove the static component from the static bank's counters: remote
+    # static traffic comes from the other CPUs, local static traffic from the
+    # static bank's own CPU (paper's two subtraction equations).
+    onehot = jnp.arange(s) == static_socket
+    remote_static = static_fraction * ((1.0 - onehot) * per_cpu).sum()
+    local_static = static_fraction * (onehot * per_cpu).sum()
+    remote = jnp.where(onehot, remote - remote_static, remote)
+    local = jnp.where(onehot, local - local_static, local)
+
+    # Remove each CPU's thread-local traffic from its own bank.
+    local = local - local_fraction * per_cpu
+    local = jnp.maximum(local, 0.0)
+    remote = jnp.maximum(remote, 0.0)
+
+    # Fraction of each CPU's remaining traffic that stays on its local bank.
+    remote_from_cpu = (w * remote[:, None]).sum(axis=0)
+    l_measured = local / jnp.maximum(local + remote_from_cpu, _EPS)
+
+    # Expectations if everything were Per-thread vs everything Interleaved.
+    used = (n > 0).astype(jnp.float32)
+    s_used = jnp.maximum(used.sum(), 1.0)
+    pt_expect = n / jnp.maximum(n.sum(), _EPS)
+    il_expect = used / s_used
+
+    # Interpolate l = PT*p + IL*(1-p) and solve for p by least squares over
+    # sockets (exactly the paper's rearrangement when s = 2).
+    active = used * jnp.where(local + remote_from_cpu > _EPS, 1.0, 0.0)
+    dx = (pt_expect - il_expect) * active
+    dy = (l_measured - il_expect) * active
+    p = (dx * dy).sum() / jnp.maximum((dx * dx).sum(), _EPS)
+    p = jnp.clip(p, 0.0, 1.0)
+
+    per_thread = p * (1.0 - local_fraction - static_fraction)
+    return jnp.clip(per_thread, 0.0, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Whole-signature drivers
+# ---------------------------------------------------------------------------
+
+
+def fit_direction(
+    sym_sample: CounterSample, asym_sample: CounterSample, direction: str
+) -> DirectionSignature:
+    """Fit one direction's 4 properties from the two profiling runs."""
+    sym = normalize_sample(sym_sample, direction)
+    asym = normalize_sample(asym_sample, direction)
+    static_socket, static_fraction = fit_static(sym)
+    local_fraction = fit_local(sym, static_socket, static_fraction)
+    per_thread = fit_per_thread(asym, static_socket, static_fraction, local_fraction)
+    return DirectionSignature(
+        static_socket=static_socket,
+        static_fraction=static_fraction,
+        local_fraction=local_fraction,
+        per_thread_fraction=per_thread,
+    )
+
+
+def fit_signature(
+    sym_sample: CounterSample,
+    asym_sample: CounterSample,
+    *,
+    combined: bool = False,
+) -> BandwidthSignature:
+    """Fit the full 8-property signature (paper §5).
+
+    With ``combined=True``, reads and writes are merged before fitting and
+    the same direction signature is used for both slots — the fallback the
+    paper applies when one direction carries too little traffic (§6.2.1).
+    """
+    if combined:
+        sym_sample = sym_sample.combined()
+        asym_sample = asym_sample.combined()
+        d = fit_direction(sym_sample, asym_sample, "read")
+        return BandwidthSignature(read=d, write=d)
+    return BandwidthSignature(
+        read=fit_direction(sym_sample, asym_sample, "read"),
+        write=fit_direction(sym_sample, asym_sample, "write"),
+    )

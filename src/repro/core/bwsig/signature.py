@@ -1,0 +1,156 @@
+"""The bandwidth signature and its application to thread placements.
+
+Implements paper §3 (the 4-class traffic taxonomy and the 8-property
+signature) and §4 (applying a signature to a placement as a matrix
+computation).
+
+Conventions
+-----------
+* ``s`` denotes the number of sockets; placements are integer vectors
+  ``n_per_socket`` of shape ``(s,)`` giving the thread count on each socket.
+* All fractions live in ``[0, 1]`` and ``static + local + per_thread <= 1``;
+  the remainder is the Interleaved fraction (paper §3).
+* Matrices are indexed ``[cpu_socket, memory_bank]``; every row of a
+  placement matrix for a socket that hosts at least one thread sums to 1
+  (paper Figure 5: "every row sums to 1, but not every column").
+
+Everything here is pure ``jnp`` so it can be ``jit``/``vmap``-ed over
+thousands of candidate placements — that is exactly the use the paper puts
+the model to (Pandia-style placement search).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+
+class DirectionSignature(NamedTuple):
+    """Signature for one traffic direction (reads or writes) — paper §3.
+
+    ``static_socket`` is the socket index the Static class is pinned to;
+    the three fractions describe the Per-thread / Local / Static classes and
+    the Interleaved class is the remainder ``1 - (static + local + per_thread)``.
+    """
+
+    static_socket: Array  # int32 scalar
+    static_fraction: Array  # float scalar in [0, 1]
+    local_fraction: Array  # float scalar in [0, 1]
+    per_thread_fraction: Array  # float scalar in [0, 1]
+
+    @staticmethod
+    def make(
+        static_socket: int = 0,
+        static_fraction: float = 0.0,
+        local_fraction: float = 0.0,
+        per_thread_fraction: float = 0.0,
+    ) -> "DirectionSignature":
+        return DirectionSignature(
+            jnp.asarray(static_socket, jnp.int32),
+            jnp.asarray(static_fraction, jnp.float64 if jax.config.x64_enabled else jnp.float32),
+            jnp.asarray(local_fraction, jnp.float64 if jax.config.x64_enabled else jnp.float32),
+            jnp.asarray(per_thread_fraction, jnp.float64 if jax.config.x64_enabled else jnp.float32),
+        )
+
+
+class BandwidthSignature(NamedTuple):
+    """The full 8-property signature: separate read and write directions."""
+
+    read: DirectionSignature
+    write: DirectionSignature
+
+
+def interleaved_fraction(sig: DirectionSignature) -> Array:
+    """The remainder class — paper §3: "Any remaining bandwidth is deemed
+    to be Interleaved"."""
+    return jnp.clip(
+        1.0 - sig.static_fraction - sig.local_fraction - sig.per_thread_fraction,
+        0.0,
+        1.0,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Paper §4 — the four per-class matrices and their weighted combination.
+# ---------------------------------------------------------------------------
+
+
+def _static_matrix(static_socket: Array, s: int) -> Array:
+    """All traffic lands on the static bank: one-hot column (paper §4)."""
+    cols = jnp.arange(s)
+    return jnp.broadcast_to((cols == static_socket).astype(jnp.float32), (s, s))
+
+
+def _local_matrix(s: int) -> Array:
+    """Each socket talks to its own bank: the identity (paper §4)."""
+    return jnp.eye(s, dtype=jnp.float32)
+
+
+def _per_thread_matrix(n_per_socket: Array) -> Array:
+    """Columns weighted by the fraction of threads on each socket:
+    ``column_i = n_i / sum_j n_j`` (paper §4)."""
+    n = n_per_socket.astype(jnp.float32)
+    total = jnp.maximum(n.sum(), 1.0)
+    weights = n / total
+    s = n_per_socket.shape[0]
+    return jnp.broadcast_to(weights[None, :], (s, s))
+
+
+def _interleaved_matrix(n_per_socket: Array) -> Array:
+    """Traffic spread evenly over the *used* sockets: cells where both the
+    CPU and the bank belong to used sockets hold ``1/s_used`` (paper §4)."""
+    used = (n_per_socket > 0).astype(jnp.float32)
+    s_used = jnp.maximum(used.sum(), 1.0)
+    return (used[:, None] * used[None, :]) / s_used
+
+
+def placement_matrix(sig: DirectionSignature, n_per_socket: Array) -> Array:
+    """Combine the four class matrices, weighted by the signature fractions.
+
+    Returns the ``(s, s)`` row-stochastic matrix mapping a thread's socket to
+    the fraction of its bandwidth predicted on each CPU->bank link — the
+    matrix of paper Figure 5.
+    """
+    n_per_socket = jnp.asarray(n_per_socket)
+    s = n_per_socket.shape[0]
+    inter = interleaved_fraction(sig)
+    m = (
+        sig.static_fraction * _static_matrix(sig.static_socket, s)
+        + sig.local_fraction * _local_matrix(s)
+        + sig.per_thread_fraction * _per_thread_matrix(n_per_socket)
+        + inter * _interleaved_matrix(n_per_socket)
+    )
+    return m
+
+
+def predict_flows(
+    sig: DirectionSignature,
+    demand_per_socket: Array,
+    n_per_socket: Array,
+) -> Array:
+    """Scale the placement matrix rows by per-socket bandwidth demand.
+
+    ``demand_per_socket[i]`` is the total bytes/s the threads on socket ``i``
+    want to move in this direction (computed independently of the model, as
+    the paper prescribes in §4).  Returns ``flows[i, j]`` = bytes/s from the
+    CPUs on socket ``i`` to memory bank ``j``.
+    """
+    m = placement_matrix(sig, n_per_socket)
+    return demand_per_socket[:, None] * m
+
+
+def predict_counters(
+    sig: DirectionSignature,
+    demand_per_socket: Array,
+    n_per_socket: Array,
+) -> tuple[Array, Array]:
+    """Reduce predicted flows to the bank-perspective counters the hardware
+    exposes (paper §2.1): per-bank ``local`` (from the bank's own socket) and
+    ``remote`` (from every other socket) traffic."""
+    flows = predict_flows(sig, demand_per_socket, n_per_socket)
+    local = jnp.diagonal(flows)
+    remote = flows.sum(axis=0) - local
+    return local, remote

@@ -1,0 +1,12 @@
+"""Mesh-domain bandwidth signatures — the paper's technique on TPU meshes.
+
+``hlo_counters`` is the performance-counter layer: it reads a compiled
+SPMD module the way the paper reads PCM — producing per-class traffic
+counters (FLOPs, HBM bytes, per-axis collective bytes, multiplied through
+loop trip counts).  ``fit`` turns two profiling *compilations* into a mesh
+bandwidth signature; ``advisor`` applies it to rank candidate meshes.
+"""
+
+from repro.core.meshsig.hlo_counters import HloAnalysis, analyze_hlo
+
+__all__ = ["HloAnalysis", "analyze_hlo"]

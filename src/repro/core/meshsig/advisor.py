@@ -1,0 +1,70 @@
+"""Placement advisor — the Pandia use-case (paper §1) on a TPU mesh.
+
+Given a fitted :class:`MeshSignature`, rank candidate mesh aspect ratios by
+predicted step time WITHOUT compiling them: the three roofline terms are
+evaluated from the signature's predicted per-axis link bytes, predicted
+local HBM traffic, and compute scaling.  The launcher (or the straggler
+hook) can then pick a mesh before paying a single extra compilation.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core.meshsig.fit import MeshSignature
+
+# TPU v5e-class chip constants (per chip)
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s per link
+
+
+@dataclass
+class MeshRanking:
+    axis_sizes: dict[str, int]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    per_axis_s: dict[str, float]
+
+    @property
+    def step_s(self) -> float:
+        # collectives overlap compute at best; the bound is the max term
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+
+def rank_meshes(
+    sig: MeshSignature,
+    candidates: list[dict[str, int]],
+    *,
+    peak_flops: float = PEAK_FLOPS,
+    hbm_bw: float = HBM_BW,
+    ici_bw: float = ICI_BW,
+) -> list[MeshRanking]:
+    """Evaluate every candidate mesh; returns rankings sorted by predicted
+    step time (best first)."""
+    out = []
+    for axes in candidates:
+        b = axes.get("data", 1) * axes.get("pod", 1)
+        flops = sig.flops0 * sig.batch_shards0 / b  # per-device compute
+        per_axis_bytes = sig.predict_axis_bytes(axes)
+        per_axis_s = {a: v / ici_bw for a, v in per_axis_bytes.items()}
+        out.append(
+            MeshRanking(
+                axis_sizes=axes,
+                compute_s=flops / peak_flops,
+                memory_s=sig.predict_local_bytes(axes) / hbm_bw,
+                collective_s=max(per_axis_s.values(), default=0.0),
+                per_axis_s=per_axis_s,
+            )
+        )
+    return sorted(out, key=lambda r: r.step_s)

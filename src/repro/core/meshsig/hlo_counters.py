@@ -1,0 +1,329 @@
+"""Performance counters for compiled SPMD modules.
+
+The paper reads PCM counters at the memory banks (§2.1); on a TPU mesh the
+equivalent observability point is the compiled HLO module.  This module
+parses post-partitioning HLO text and produces, with **loop trip counts
+multiplied through** (XLA's own ``cost_analysis`` counts while bodies only
+once — measured and worked around here):
+
+* ``flops`` — dot-product FLOPs (matmul-dominated models; elementwise ops
+  are ignored just as the MXU roofline ignores them);
+* ``hbm_bytes`` — Σ over top-level ops of (operand + result bytes): fusion
+  internals stay on-chip, so top-level operands/results approximate HBM
+  traffic;
+* ``collectives`` — every all-reduce / all-gather / reduce-scatter /
+  all-to-all / collective-permute with its result bytes, replica-group
+  size, estimated per-device link bytes, and execution count.
+
+The paper's "lessons learned" (§2.1.1) transfer directly: we do not try to
+attribute physical ICI hops (the QPI lesson — routing is opaque and noisy);
+we count bytes at the collective boundary, which is the bank-perspective
+view.  And we count *executed* work via trip counts rather than trusting a
+rate-style summary (the IPC lesson).
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z]\w*)\[([\d,]*)\]")
+_TRIP_RE = re.compile(r'known_trip_count\\?":\{\\?"n\\?":\\?"(\d+)')
+_CALLEE_RES = [
+    re.compile(r"body=%?([\w.\-]+)"),
+    re.compile(r"condition=%?([\w.\-]+)"),
+    re.compile(r"calls=%?([\w.\-]+)"),
+    re.compile(r"to_apply=%?([\w.\-]+)"),
+]
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_CALL_RE = re.compile(r"\b([a-z][\w\-]*)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+_COLLECTIVE_KINDS = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "collective-permute-start",
+}
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "iota", "copy-start", "copy-done", "partition-id",
+    "replica-id", "all-reduce-done", "all-gather-done",
+    "collective-permute-done", "reshape",
+}
+
+# Ops a TPU fusion pass melts into neighbors: counted as zero HBM traffic
+# in the fusion-idealized byte model (the raw Sum(op boundaries) figure is
+# kept separately as an upper bound — CPU-compiled modules fuse far less
+# than the TPU pipeline would).
+_ELEMENTWISE_FREE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "exponential-minus-one", "log", "log-plus-one",
+    "tanh", "logistic", "rsqrt", "sqrt", "power", "convert", "compare",
+    "select", "and", "or", "not", "xor", "broadcast", "clamp", "sign",
+    "floor", "ceil", "round-nearest-afz", "round-nearest-even", "is-finite",
+    "while", "conditional", "call", "custom-call", "optimization-barrier",
+    "rng", "rng-bit-generator", "pad", "reverse", "concatenate",
+}
+
+# Slice-like ops physically touch the slice, not the whole buffer.
+_SLICE_OPS = {"dynamic-slice", "slice"}
+_UPDATE_OPS = {"dynamic-update-slice"}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_elems(type_str: str) -> list[list[int]]:
+    out = []
+    for _, dims in _SHAPE_RE.findall(type_str):
+        out.append([int(d) for d in dims.split(",") if d])
+    return out
+
+
+@dataclass
+class Op:
+    name: str
+    kind: str
+    result_type: str
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: list[Op] = field(default_factory=list)
+    callees: list[tuple[str, float]] = field(default_factory=list)  # (name, mult)
+
+
+@dataclass
+class CollectiveOp:
+    kind: str
+    bytes: float  # result bytes x executions
+    group: int
+    count: float  # executions (trip-multiplied)
+    link_bytes: float  # per-device link traffic estimate
+
+
+@dataclass
+class HloAnalysis:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0  # fusion-idealized model (TPU-like fusion)
+    hbm_bytes_raw: float = 0.0  # every top-level op boundary (upper bound)
+    collectives: list[CollectiveOp] = field(default_factory=list)
+    n_computations: int = 0
+    unknown_trip_loops: int = 0
+
+    def collective_summary(self) -> dict:
+        per_kind: dict[str, dict] = {}
+        total_link = 0.0
+        for c in self.collectives:
+            s = per_kind.setdefault(
+                c.kind, {"count": 0.0, "bytes": 0.0, "link_bytes": 0.0}
+            )
+            s["count"] += c.count
+            s["bytes"] += c.bytes
+            s["link_bytes"] += c.link_bytes
+            total_link += c.link_bytes
+        return {"per_kind": per_kind, "link_bytes_total": total_link}
+
+
+def _parse_computations(text: str) -> tuple[dict[str, Computation], str]:
+    comps: dict[str, Computation] = {}
+    entry = ""
+    current: Computation | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if current is None:
+            if stripped.endswith("{") and ("->" in stripped or stripped.startswith("ENTRY")):
+                header = stripped
+                is_entry = header.startswith("ENTRY")
+                m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)", header)
+                if not m:
+                    continue
+                current = Computation(name=m.group(1))
+                if is_entry:
+                    entry = current.name
+            continue
+        if stripped == "}" or stripped.startswith("}"):
+            comps[current.name] = current
+            current = None
+            continue
+        om = _OP_RE.match(line)
+        if not om:
+            continue
+        name, rest = om.group(1), om.group(2)
+        cm = _CALL_RE.search(rest)
+        kind = cm.group(1) if cm else ""
+        result_type = rest[: cm.start()].strip() if cm else ""
+        op = Op(name=name, kind=kind, result_type=result_type, line=stripped)
+        current.ops.append(op)
+        if kind == "while":
+            tm = _TRIP_RE.search(stripped)
+            trip = float(tm.group(1)) if tm else -1.0
+            for cr in _CALLEE_RES[:2]:
+                c = cr.search(stripped)
+                if c:
+                    current.callees.append((c.group(1), trip))
+        else:
+            for cr in _CALLEE_RES[2:]:
+                c = cr.search(stripped)
+                if c:
+                    current.callees.append((c.group(1), 1.0))
+            bm = _BRANCH_RE.search(stripped)
+            if bm:
+                for b in bm.group(1).split(","):
+                    current.callees.append((b.strip().lstrip("%"), 1.0))
+    return comps, entry
+
+
+def _multipliers(comps: dict[str, Computation], entry: str) -> tuple[dict[str, float], int]:
+    mult: dict[str, float] = {entry: 1.0}
+    unknown = 0
+    frontier = [entry]
+    while frontier:
+        name = frontier.pop()
+        comp = comps.get(name)
+        if comp is None:
+            continue
+        m = mult[name]
+        for callee, factor in comp.callees:
+            f = factor
+            if f < 0:
+                unknown += 1
+                f = 1.0
+            new = m * f
+            if mult.get(callee, 0.0) < new:
+                mult[callee] = new
+                frontier.append(callee)
+    return mult, unknown
+
+
+def _dot_flops(op: Op, type_of: dict[str, str]) -> float:
+    """FLOPs for a dot: 2 * prod(result dims) * prod(contracting dims)."""
+    res = _shape_elems(op.result_type)
+    if not res:
+        return 0.0
+    result_elems = math.prod(res[0]) if res[0] else 1
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    operands = _OPERAND_RE.findall(op.line.split("(", 1)[1])
+    contract = 1
+    if cm and operands:
+        lhs_type = type_of.get(operands[0], "")
+        lhs_dims = _shape_elems(lhs_type)
+        if lhs_dims and cm.group(1):
+            for idx in cm.group(1).split(","):
+                i = int(idx)
+                if i < len(lhs_dims[0]):
+                    contract *= lhs_dims[0][i]
+    return 2.0 * result_elems * contract
+
+
+def _op_bytes(op: Op, type_of: dict[str, str]) -> float:
+    """HBM traffic upper bound: operand bytes read + result bytes written."""
+    total = float(_shape_bytes(op.result_type))
+    paren = op.line.split("(", 1)
+    if len(paren) == 2:
+        # operands are %refs up to the first ')'
+        args = paren[1].split(")", 1)[0]
+        for ref in _OPERAND_RE.findall(args):
+            total += _shape_bytes(type_of.get(ref, ""))
+    return total
+
+
+def _op_bytes_model(op: Op, type_of: dict[str, str]) -> float:
+    """Fusion-idealized HBM traffic (the roofline memory-term source):
+
+    * elementwise/convert/broadcast/control ops: 0 (fused on TPU),
+    * slice reads / in-place slice updates: the slice, not the buffer,
+    * dots / fusions / reductions / copies / collectives: operand + result
+      boundaries (these genuinely materialize).
+    """
+    kind = op.kind
+    if kind in _FREE_OPS or kind in _ELEMENTWISE_FREE or not kind:
+        return 0.0
+    if kind in _SLICE_OPS:
+        return 2.0 * float(_shape_bytes(op.result_type))  # read + write slice
+    if kind in _UPDATE_OPS:
+        paren = op.line.split("(", 1)
+        if len(paren) == 2:
+            refs = _OPERAND_RE.findall(paren[1].split(")", 1)[0])
+            if len(refs) >= 2:
+                return 2.0 * float(_shape_bytes(type_of.get(refs[1], "")))
+        return 0.0
+    return _op_bytes(op, type_of)
+
+
+def _collective_link_bytes(kind: str, result_bytes: float, group: int) -> float:
+    k = max(group, 1)
+    if kind == "all-reduce":
+        return 2.0 * result_bytes * (k - 1) / k
+    if kind == "all-gather":
+        return result_bytes * (k - 1) / k  # result is the gathered size
+    if kind == "reduce-scatter":
+        return result_bytes * (k - 1)  # result is the shard size
+    if kind == "all-to-all":
+        return result_bytes * (k - 1) / k
+    return result_bytes  # collective-permute
+
+
+def analyze_hlo(text: str) -> HloAnalysis:
+    comps, entry = _parse_computations(text)
+    mult, unknown = _multipliers(comps, entry)
+
+    analysis = HloAnalysis(n_computations=len(comps), unknown_trip_loops=unknown)
+    for comp in comps.values():
+        m = mult.get(comp.name)
+        if m is None:
+            continue  # unreachable (dead) computation
+        type_of = {op.name: op.result_type for op in comp.ops}
+        for op in comp.ops:
+            kind = op.kind
+            if kind in ("dot", "convolution"):
+                analysis.flops += m * _dot_flops(op, type_of)
+            analysis.hbm_bytes += m * _op_bytes_model(op, type_of)
+            if kind in _FREE_OPS or not kind:
+                continue
+            if kind in _COLLECTIVE_KINDS:
+                base = kind.replace("-start", "")
+                rb = float(_shape_bytes(op.result_type))
+                group = 0
+                gm = _GROUPS_LIST_RE.search(op.line)
+                if gm:
+                    group = len(gm.group(1).split(","))
+                else:
+                    im = _GROUPS_IOTA_RE.search(op.line)
+                    if im:
+                        group = int(im.group(2))
+                analysis.collectives.append(
+                    CollectiveOp(
+                        kind=base,
+                        bytes=rb * m,
+                        group=group,
+                        count=m,
+                        link_bytes=_collective_link_bytes(base, rb, group) * m,
+                    )
+                )
+            analysis.hbm_bytes_raw += m * _op_bytes(op, type_of)
+    return analysis

@@ -1,0 +1,43 @@
+"""A JAX-native NUMA machine simulator.
+
+Real Haswell boxes and PCM counters are unavailable in this environment, so
+the paper's experimental substrate is rebuilt as a simulator that
+
+* solves the max-min-fair bandwidth-saturation steady state of a
+  parameterized multi-socket machine (progressive filling over banks,
+  remote paths, the interconnect and core issue rates), and
+* emits exactly the counters the paper's method reads (bank-perspective
+  local/remote reads/writes + per-socket instructions + elapsed time),
+  with configurable measurement noise and background traffic.
+
+The two evaluation machines are parameterized from the paper's Figure 2
+bandwidth ratios.  Everything is ``jit``/``vmap``-able so the paper's
+"thousands of measurements" evaluation runs as a single batched call.
+"""
+
+from repro.core.numa.machine import MachineSpec, E5_2630_V3, E5_2699_V3, MACHINES
+from repro.core.numa.workload import Workload, pure_workload, mixed_workload
+from repro.core.numa.simulator import (
+    SimulationResult,
+    simulate,
+    simulate_counters,
+    profile_pair,
+    symmetric_placement,
+    asymmetric_placement,
+)
+
+__all__ = [
+    "MachineSpec",
+    "E5_2630_V3",
+    "E5_2699_V3",
+    "MACHINES",
+    "Workload",
+    "pure_workload",
+    "mixed_workload",
+    "SimulationResult",
+    "simulate",
+    "simulate_counters",
+    "profile_pair",
+    "symmetric_placement",
+    "asymmetric_placement",
+]

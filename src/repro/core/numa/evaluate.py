@@ -1,0 +1,237 @@
+"""Evaluation harness reproducing the paper's §6 methodology.
+
+* ``evaluate_accuracy``: fit a workload's signature from the 2 profiling
+  runs, then predict the bank counters of *every* other thread distribution
+  and compare against (simulated) measurements — paper §6.2.2 / Figures 16–18.
+* ``evaluate_stability``: fit the same workload on two machines and measure
+  how much bandwidth the signature reallocates — paper §6.2.1 / Figures 13–15.
+
+Errors are reported the paper's way: per counter measurement, as a
+percentage of the run's total bandwidth.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import Array
+
+from repro.core.bwsig import (
+    BandwidthSignature,
+    fit_signature,
+    misfit_score,
+    predict_counters,
+    signature_distance,
+)
+from repro.core.numa.benchmarks import benchmark_workload, suite_names
+from repro.core.numa.machine import MachineSpec
+from repro.core.numa.simulator import profile_pair, simulate
+from repro.core.numa.workload import Workload
+
+
+def sweep_placements(machine: MachineSpec, n_threads: int) -> Array:
+    """All 2-socket thread distributions that keep one thread per core
+    (paper §6.2.2: "varied the distribution of the threads between the two
+    sockets maintaining a single thread per core")."""
+    cores = machine.cores_per_socket
+    lo = max(0, n_threads - cores)
+    hi = min(cores, n_threads)
+    return jnp.asarray(
+        [[i, n_threads - i] for i in range(lo, hi + 1)], jnp.int32
+    )
+
+
+class AccuracyResult(NamedTuple):
+    placements: Array  # (P, s)
+    errors_read: Array  # (P, 2s) |pred-meas| as fraction of run bandwidth
+    errors_write: Array  # (P, 2s)
+    errors_combined: Array  # (P, 2s)
+    total_bw: Array  # (P,) bytes/s moved by the run
+    misfit: Array  # scalar §6.2.1 detector score
+    signature: BandwidthSignature
+
+
+def _direction_errors(sig_dir, placement, flows, local_meas, remote_meas):
+    demand = flows.sum(axis=1)
+    pred_local, pred_remote = predict_counters(sig_dir, demand, placement)
+    return jnp.concatenate(
+        [jnp.abs(pred_local - local_meas), jnp.abs(pred_remote - remote_meas)]
+    )
+
+
+def evaluate_accuracy(
+    machine: MachineSpec,
+    workload: Workload,
+    *,
+    noise_std: float = 0.0,
+    background_bw: float = 0.0,
+    key: Array | None = None,
+) -> AccuracyResult:
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    k_prof, k_meas = jax.random.split(key)
+    sym, asym = profile_pair(
+        machine,
+        workload,
+        noise_std=noise_std,
+        background_bw=background_bw,
+        key=k_prof,
+    )
+    sig = fit_signature(sym, asym)
+    sig_combined = fit_signature(sym, asym, combined=True)
+    detector = misfit_score(sym, "read")
+
+    placements = sweep_placements(machine, workload.n_threads)
+    keys = jax.random.split(k_meas, placements.shape[0])
+
+    def one(placement, k):
+        res = simulate(
+            machine,
+            workload,
+            placement,
+            noise_std=noise_std,
+            background_bw=background_bw,
+            key=k,
+        )
+        total = res.read_flows.sum() + res.write_flows.sum()
+        total = jnp.maximum(total, 1e-9)
+        e_read = (
+            _direction_errors(
+                sig.read,
+                placement,
+                res.read_flows,
+                res.sample.local_read,
+                res.sample.remote_read,
+            )
+            / total
+        )
+        e_write = (
+            _direction_errors(
+                sig.write,
+                placement,
+                res.write_flows,
+                res.sample.local_write,
+                res.sample.remote_write,
+            )
+            / total
+        )
+        comb_flows = res.read_flows + res.write_flows
+        e_comb = (
+            _direction_errors(
+                sig_combined.read,
+                placement,
+                comb_flows,
+                res.sample.local_read + res.sample.local_write,
+                res.sample.remote_read + res.sample.remote_write,
+            )
+            / total
+        )
+        return e_read, e_write, e_comb, total
+
+    e_read, e_write, e_comb, totals = jax.vmap(one)(placements, keys)
+    return AccuracyResult(
+        placements=placements,
+        errors_read=e_read,
+        errors_write=e_write,
+        errors_combined=e_comb,
+        total_bw=totals,
+        misfit=detector,
+        signature=sig,
+    )
+
+
+class SuiteAccuracy(NamedTuple):
+    names: list[str]
+    per_benchmark: dict[str, AccuracyResult]
+    all_errors: np.ndarray  # every counter measurement's % error
+    median_error_pct: float
+    p75_error_pct: float
+
+
+def evaluate_suite(
+    machine: MachineSpec,
+    n_threads: int | None = None,
+    *,
+    noise_std: float = 0.0,
+    include_violators: bool = True,
+    seed: int = 0,
+) -> SuiteAccuracy:
+    """Fit + predict every suite benchmark over every placement — the
+    paper's "thousands of measurements" (§6.2.2)."""
+    if n_threads is None:
+        n_threads = machine.cores_per_socket  # largest single-socket count
+    names = suite_names(include_violators)
+    key = jax.random.PRNGKey(seed)
+    results: dict[str, AccuracyResult] = {}
+    chunks = []
+    for i, name in enumerate(names):
+        wl = benchmark_workload(name, n_threads)
+        res = evaluate_accuracy(
+            machine, wl, noise_std=noise_std, key=jax.random.fold_in(key, i)
+        )
+        results[name] = res
+        chunks.append(np.asarray(res.errors_combined).ravel())
+    all_errors = np.concatenate(chunks) * 100.0
+    return SuiteAccuracy(
+        names=names,
+        per_benchmark=results,
+        all_errors=all_errors,
+        median_error_pct=float(np.median(all_errors)),
+        p75_error_pct=float(np.percentile(all_errors, 75)),
+    )
+
+
+class StabilityResult(NamedTuple):
+    names: list[str]
+    read_change: dict[str, float]
+    write_change: dict[str, float]
+    combined_change: dict[str, float]
+    mean_combined_pct: float
+    median_combined_pct: float
+
+
+def evaluate_stability(
+    machine_a: MachineSpec,
+    machine_b: MachineSpec,
+    n_threads_a: int | None = None,
+    n_threads_b: int | None = None,
+    *,
+    noise_std: float = 0.0,
+    include_violators: bool = True,
+    seed: int = 0,
+) -> StabilityResult:
+    """Fit each benchmark on both machines; report reallocated bandwidth
+    between the two signatures (paper Figures 13–15)."""
+    if n_threads_a is None:
+        n_threads_a = machine_a.cores_per_socket
+    if n_threads_b is None:
+        n_threads_b = machine_b.cores_per_socket
+    names = suite_names(include_violators)
+    key = jax.random.PRNGKey(seed)
+    read_c, write_c, comb_c = {}, {}, {}
+    for i, name in enumerate(names):
+        k = jax.random.fold_in(key, i)
+        ka, kb = jax.random.split(k)
+        wa = benchmark_workload(name, n_threads_a)
+        wb = benchmark_workload(name, n_threads_b)
+        sym_a, asym_a = profile_pair(machine_a, wa, noise_std=noise_std, key=ka)
+        sym_b, asym_b = profile_pair(machine_b, wb, noise_std=noise_std, key=kb)
+        sig_a = fit_signature(sym_a, asym_a)
+        sig_b = fit_signature(sym_b, asym_b)
+        read_c[name] = float(signature_distance(sig_a.read, sig_b.read)) * 100
+        write_c[name] = float(signature_distance(sig_a.write, sig_b.write)) * 100
+        ca = fit_signature(sym_a, asym_a, combined=True)
+        cb = fit_signature(sym_b, asym_b, combined=True)
+        comb_c[name] = float(signature_distance(ca.read, cb.read)) * 100
+    vals = np.asarray(list(comb_c.values()))
+    return StabilityResult(
+        names=names,
+        read_change=read_c,
+        write_change=write_c,
+        combined_change=comb_c,
+        mean_combined_pct=float(vals.mean()),
+        median_combined_pct=float(np.median(vals)),
+    )

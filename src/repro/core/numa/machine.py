@@ -1,0 +1,116 @@
+"""Machine descriptions for the NUMA simulator.
+
+Paper §2 / Figure 2: the evaluation machines are dual-socket Intel Haswell
+systems, Xeon E5-2630 v3 (8 cores/socket) and Xeon E5-2699 v3 (18
+cores/socket).  "Both systems have similar read and write bandwidths to
+local memory, but drastically different performance when accessing remote
+memory where the 8 core processors only have 0.16 of the bandwidth for
+remote reads and 0.23 of the bandwidth for remote writes relative to local
+reads and writes.  On the 18 core processors ... 0.59 of the bandwidth for
+remote reads and 0.83 of the bandwidth for remote writes."
+
+Absolute local bandwidths are not printed in the paper (they are in a
+figure); the values below use public STREAM-class measurements for
+quad-channel DDR4-1866/2133 Haswell parts and apply the paper's exact
+remote/local ratios.  The *model* never sees these constants — they only
+shape the simulated ground truth.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+from jax import Array
+
+GB = 1e9
+
+
+class MachineSpec(NamedTuple):
+    """A multi-socket NUMA machine.
+
+    Bandwidth capacities are bytes/s.  ``remote_*_bw`` caps each ordered
+    socket pair's path (remote controller + interconnect direction);
+    ``qpi_bw`` caps the total traffic crossing each unordered socket pair.
+    ``core_rate`` is instructions/s per thread at full speed.
+    """
+
+    name: str
+    sockets: int
+    cores_per_socket: int
+    local_read_bw: float
+    local_write_bw: float
+    remote_read_bw: float
+    remote_write_bw: float
+    qpi_bw: float
+    core_rate: float
+
+    @property
+    def total_cores(self) -> int:
+        return self.sockets * self.cores_per_socket
+
+    def bank_read_caps(self) -> Array:
+        return jnp.full((self.sockets,), self.local_read_bw)
+
+    def bank_write_caps(self) -> Array:
+        return jnp.full((self.sockets,), self.local_write_bw)
+
+
+# Xeon E5-2630 v3: 8 cores, 2.4 GHz, DDR4-1866.  The cheap machine whose
+# remote links are easily saturated (paper Figure 1: up to 3x slowdown).
+E5_2630_V3 = MachineSpec(
+    name="E5-2630v3-8c",
+    sockets=2,
+    cores_per_socket=8,
+    local_read_bw=52.0 * GB,
+    local_write_bw=28.0 * GB,
+    remote_read_bw=0.16 * 52.0 * GB,  # paper ratio 0.16
+    remote_write_bw=0.23 * 28.0 * GB,  # paper ratio 0.23
+    qpi_bw=16.0 * GB,
+    core_rate=2.4e9,
+)
+
+# Xeon E5-2699 v3: 18 cores, 2.3 GHz, DDR4-2133.  The expensive machine that
+# is "far more forgiving of thread and memory placement".
+E5_2699_V3 = MachineSpec(
+    name="E5-2699v3-18c",
+    sockets=2,
+    cores_per_socket=18,
+    local_read_bw=62.0 * GB,
+    local_write_bw=34.0 * GB,
+    remote_read_bw=0.59 * 62.0 * GB,  # paper ratio 0.59
+    remote_write_bw=0.83 * 34.0 * GB,  # paper ratio 0.83
+    qpi_bw=51.2 * GB,
+    core_rate=2.3e9,
+)
+
+MACHINES: dict[str, MachineSpec] = {
+    E5_2630_V3.name: E5_2630_V3,
+    E5_2699_V3.name: E5_2699_V3,
+}
+
+
+def make_machine(
+    name: str = "generic",
+    sockets: int = 2,
+    cores_per_socket: int = 8,
+    local_read_bw: float = 50.0 * GB,
+    local_write_bw: float = 28.0 * GB,
+    remote_read_ratio: float = 0.5,
+    remote_write_ratio: float = 0.5,
+    qpi_bw: float = 32.0 * GB,
+    core_rate: float = 2.4e9,
+) -> MachineSpec:
+    """Build a custom machine from local bandwidths and remote/local ratios
+    (the way the paper characterizes its systems)."""
+    return MachineSpec(
+        name=name,
+        sockets=sockets,
+        cores_per_socket=cores_per_socket,
+        local_read_bw=local_read_bw,
+        local_write_bw=local_write_bw,
+        remote_read_bw=remote_read_ratio * local_read_bw,
+        remote_write_bw=remote_write_ratio * local_write_bw,
+        qpi_bw=qpi_bw,
+        core_rate=core_rate,
+    )

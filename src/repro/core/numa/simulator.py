@@ -1,0 +1,315 @@
+"""Steady-state NUMA bandwidth simulator with max-min fair saturation.
+
+Given a machine, a workload and a thread placement this computes the
+execution rate of every thread under bandwidth saturation and emits the
+performance counters the paper's fitting procedure reads.
+
+The saturation model is *progressive filling* (max-min fairness): all
+threads speed up together until some resource (a memory bank's read or
+write capacity, a remote path, the interconnect, or the core issue rate)
+saturates; the threads crossing that resource freeze and the rest keep
+growing.  This reproduces the first-order behaviour the paper observes —
+e.g. a single thread saturating the QPI on the low-end machine (§5.2) and
+the rate asymmetries between sockets that motivate the normalization step.
+
+The solver is a fixed-iteration ``lax.fori_loop`` and the whole function is
+``jit``/``vmap``-able over placements, so evaluating thousands of
+placements (paper §6.2.2: 2322 data points) is a single batched call.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.core.bwsig.counters import CounterSample, counters_from_flows
+from repro.core.numa.machine import MachineSpec
+from repro.core.numa.workload import Workload
+
+_EPS = 1e-12
+
+
+class SimulationResult(NamedTuple):
+    rates: Array  # (n,) per-thread execution-rate multiplier in (0, 1]
+    read_flows: Array  # (s, s) bytes/s from socket i CPUs to bank j
+    write_flows: Array  # (s, s)
+    sample: CounterSample  # the counters the model is allowed to see
+    throughput: Array  # scalar: sum of thread rates (relative performance)
+
+
+def _thread_sockets(n_per_socket: Array, n_threads: int) -> Array:
+    """Contiguous thread->socket assignment: the first ``n_0`` threads land
+    on socket 0, the next ``n_1`` on socket 1, ...  (This ordering is what
+    makes the Page-rank violator's early-chunk threads move between sockets
+    as the placement changes.)"""
+    bounds = jnp.cumsum(n_per_socket)
+    t = jnp.arange(n_threads)
+    return jnp.searchsorted(bounds, t, side="right").astype(jnp.int32)
+
+
+def _mix_rows(
+    static_frac: Array,
+    local_frac: Array,
+    per_thread_frac: Array,
+    static_socket: Array,
+    socket_of: Array,
+    n_per_socket: Array,
+) -> Array:
+    """Ground-truth per-thread traffic mix over banks — the per-thread
+    version of the paper's §4 class matrices."""
+    s = n_per_socket.shape[0]
+    n = socket_of.shape[0]
+    nf = n_per_socket.astype(jnp.float32)
+    used = (nf > 0).astype(jnp.float32)
+    s_used = jnp.maximum(used.sum(), 1.0)
+
+    static_row = (jnp.arange(s) == static_socket).astype(jnp.float32)  # (s,)
+    local_rows = jax.nn.one_hot(socket_of, s)  # (n, s)
+    pt_row = nf / jnp.maximum(nf.sum(), 1.0)  # (s,)
+    il_row = used / s_used  # (s,)
+
+    inter = 1.0 - static_frac - local_frac - per_thread_frac
+    mix = (
+        static_frac[:, None] * static_row[None, :]
+        + local_frac[:, None] * local_rows
+        + per_thread_frac[:, None] * pt_row[None, :]
+        + inter[:, None] * il_row[None, :]
+    )
+    return mix  # (n, s)
+
+
+def _resource_tensor(
+    machine: MachineSpec,
+    read_unit: Array,  # (n, s) bytes/s to each bank at full speed
+    write_unit: Array,  # (n, s)
+    socket_of: Array,  # (n,)
+) -> tuple[Array, Array]:
+    """Build the per-thread resource-usage matrix ``U[t, r]`` and the
+    capacity vector ``caps[r]``.
+
+    Resources: bank read caps (s), bank write caps (s), remote read paths
+    (s*s, diagonal unconstrained), remote write paths (s*s), interconnect
+    pairs (s*(s-1)/2).
+    """
+    s = machine.sockets
+    n = socket_of.shape[0]
+    onehot = jax.nn.one_hot(socket_of, s)  # (n, s)
+
+    # (n, s, s): thread t's flow from its socket i to bank j.
+    rr = onehot[:, :, None] * read_unit[:, None, :]
+    ww = onehot[:, :, None] * write_unit[:, None, :]
+    off_diag = (1.0 - jnp.eye(s))[None, :, :]
+    rr_remote = rr * off_diag
+    ww_remote = ww * off_diag
+
+    # Interconnect pairs (unordered): total remote bytes both directions.
+    pair_rows = []
+    pair_caps = []
+    for i in range(s):
+        for j in range(i + 1, s):
+            pair_rows.append(
+                rr_remote[:, i, j]
+                + rr_remote[:, j, i]
+                + ww_remote[:, i, j]
+                + ww_remote[:, j, i]
+            )
+            pair_caps.append(machine.qpi_bw)
+    qpi_usage = (
+        jnp.stack(pair_rows, axis=1) if pair_rows else jnp.zeros((n, 0))
+    )
+
+    usage = jnp.concatenate(
+        [
+            read_unit,  # bank read
+            write_unit,  # bank write
+            rr_remote.reshape(n, s * s),
+            ww_remote.reshape(n, s * s),
+            qpi_usage,
+        ],
+        axis=1,
+    )
+
+    inf = jnp.inf
+    remote_read_caps = jnp.where(
+        jnp.eye(s, dtype=bool), inf, machine.remote_read_bw
+    ).reshape(s * s)
+    remote_write_caps = jnp.where(
+        jnp.eye(s, dtype=bool), inf, machine.remote_write_bw
+    ).reshape(s * s)
+    caps = jnp.concatenate(
+        [
+            machine.bank_read_caps(),
+            machine.bank_write_caps(),
+            remote_read_caps,
+            remote_write_caps,
+            jnp.asarray(pair_caps, jnp.float32)
+            if pair_caps
+            else jnp.zeros((0,)),
+        ]
+    )
+    return usage, caps
+
+
+def _progressive_fill(usage: Array, caps: Array, iterations: int) -> Array:
+    """Max-min fair rates: grow all threads together, freeze the set
+    crossing each successive bottleneck."""
+    n = usage.shape[0]
+
+    def body(_, state):
+        x, frozen = state
+        active = ~frozen
+        frozen_usage = (usage * jnp.where(frozen, x, 0.0)[:, None]).sum(0)
+        act_usage = (usage * active[:, None].astype(usage.dtype)).sum(0)
+        resid = jnp.maximum(caps - frozen_usage, 0.0)
+        lam = jnp.where(act_usage > _EPS, resid / jnp.maximum(act_usage, _EPS), jnp.inf)
+        lam_star = jnp.minimum(jnp.min(lam), 1.0)
+        bottleneck = lam <= lam_star * (1.0 + 1e-6)
+        uses_bottleneck = (usage * bottleneck[None, :]).sum(1) > _EPS
+        freeze_now = active & (uses_bottleneck | (lam_star >= 1.0))
+        x = jnp.where(freeze_now, lam_star, x)
+        frozen = frozen | freeze_now
+        return x, frozen
+
+    x0 = jnp.zeros((n,), usage.dtype)
+    frozen0 = jnp.zeros((n,), bool)
+    x, frozen = jax.lax.fori_loop(0, iterations, body, (x0, frozen0))
+    # Anything still unfrozen touches no finite resource: runs at full speed.
+    return jnp.where(frozen, x, 1.0)
+
+
+def simulate(
+    machine: MachineSpec,
+    workload: Workload,
+    n_per_socket: Array,
+    *,
+    elapsed: float = 1.0,
+    noise_std: float = 0.0,
+    background_bw: float = 0.0,
+    key: Array | None = None,
+) -> SimulationResult:
+    """Run the workload on the machine under the given placement and emit
+    ground truth + the paper-visible performance counters."""
+    s = machine.sockets
+    n = workload.n_threads
+    n_per_socket = jnp.asarray(n_per_socket)
+    socket_of = _thread_sockets(n_per_socket, n)
+
+    read_mix = _mix_rows(
+        workload.read_static,
+        workload.read_local,
+        workload.read_per_thread,
+        workload.static_socket,
+        socket_of,
+        n_per_socket,
+    )
+    write_mix = _mix_rows(
+        workload.write_static,
+        workload.write_local,
+        workload.write_per_thread,
+        workload.static_socket,
+        socket_of,
+        n_per_socket,
+    )
+    read_unit = machine.core_rate * workload.read_bpi[:, None] * read_mix
+    write_unit = machine.core_rate * workload.write_bpi[:, None] * write_mix
+
+    usage, caps = _resource_tensor(machine, read_unit, write_unit, socket_of)
+    iterations = usage.shape[1] + 2
+    rates = _progressive_fill(usage, caps, iterations)
+
+    onehot = jax.nn.one_hot(socket_of, s)
+    read_flows = onehot.T @ (rates[:, None] * read_unit) * elapsed
+    write_flows = onehot.T @ (rates[:, None] * write_unit) * elapsed
+    instructions = onehot.T @ (rates * machine.core_rate) * elapsed
+
+    if noise_std > 0.0 or background_bw > 0.0:
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        k1, k2, k3 = jax.random.split(key, 3)
+        read_flows = read_flows * jnp.exp(
+            noise_std * jax.random.normal(k1, read_flows.shape)
+        ) + background_bw * elapsed / (s * s)
+        write_flows = write_flows * jnp.exp(
+            noise_std * jax.random.normal(k2, write_flows.shape)
+        ) + background_bw * elapsed / (s * s)
+        instructions = instructions * jnp.exp(
+            0.2 * noise_std * jax.random.normal(k3, instructions.shape)
+        )
+
+    sample = counters_from_flows(
+        read_flows, write_flows, instructions, jnp.asarray(elapsed), n_per_socket
+    )
+    return SimulationResult(
+        rates=rates,
+        read_flows=read_flows,
+        write_flows=write_flows,
+        sample=sample,
+        throughput=rates.sum(),
+    )
+
+
+def simulate_counters(
+    machine: MachineSpec,
+    workload: Workload,
+    n_per_socket: Array,
+    **kwargs,
+) -> CounterSample:
+    return simulate(machine, workload, n_per_socket, **kwargs).sample
+
+
+def symmetric_placement(machine: MachineSpec, n_threads: int) -> Array:
+    """Paper §5.1 run 1: equal threads per socket, 1 thread/core."""
+    assert n_threads % machine.sockets == 0, "symmetric run needs equal split"
+    per = n_threads // machine.sockets
+    assert per <= machine.cores_per_socket
+    return jnp.full((machine.sockets,), per, jnp.int32)
+
+
+def asymmetric_placement(machine: MachineSpec, n_threads: int) -> Array:
+    """Paper §5.1 run 2: same thread count, unequal split (Figure 7 uses a
+    roughly 2:1 split on the first socket)."""
+    s = machine.sockets
+    first = min(-(-3 * n_threads // 4), machine.cores_per_socket)
+    rest = n_threads - first
+    assert rest >= 1, "asymmetric run needs at least one thread elsewhere"
+    others = [rest // (s - 1)] * (s - 1)
+    others[0] += rest - sum(others)
+    placement = jnp.asarray([first] + others, jnp.int32)
+    assert int(placement.max()) <= machine.cores_per_socket
+    return placement
+
+
+def profile_pair(
+    machine: MachineSpec,
+    workload: Workload,
+    *,
+    noise_std: float = 0.0,
+    background_bw: float = 0.0,
+    key: Array | None = None,
+) -> tuple[CounterSample, CounterSample]:
+    """The paper's 2-run profiling protocol (§5.1): one symmetric and one
+    asymmetric placement of the same thread count."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    k_sym, k_asym = jax.random.split(key)
+    sym = simulate_counters(
+        machine,
+        workload,
+        symmetric_placement(machine, workload.n_threads),
+        noise_std=noise_std,
+        background_bw=background_bw,
+        key=k_sym,
+    )
+    asym = simulate_counters(
+        machine,
+        workload,
+        asymmetric_placement(machine, workload.n_threads),
+        noise_std=noise_std,
+        background_bw=background_bw,
+        key=k_asym,
+    )
+    return sym, asym

@@ -1,0 +1,160 @@
+"""Workload descriptions for the NUMA simulator.
+
+A :class:`Workload` carries *per-thread* ground-truth access mixes.  For
+well-behaved applications every thread shares the same mix and the paper's
+4-class model is exact; model-violating workloads (paper §6.2: Page rank's
+skewed node ordering) give different threads different mixes or intensities,
+so the bandwidth pattern changes with placement in ways the model cannot
+express — which is precisely what the §6.2.1 detector must flag.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+from jax import Array
+
+
+class Workload(NamedTuple):
+    """Ground truth for ``n`` threads on an ``s``-socket machine.
+
+    Fraction arrays have shape ``(n,)`` and describe each thread's true
+    traffic mix per direction (interleaved = remainder).  ``*_bpi`` are
+    bytes/instruction intensities.  ``static_socket`` is shared (the Static
+    class is, by definition, a single allocation).
+    """
+
+    name: str
+    read_static: Array
+    read_local: Array
+    read_per_thread: Array
+    write_static: Array
+    write_local: Array
+    write_per_thread: Array
+    read_bpi: Array
+    write_bpi: Array
+    static_socket: Array  # int32 scalar
+
+    @property
+    def n_threads(self) -> int:
+        return self.read_static.shape[0]
+
+    def read_interleaved(self) -> Array:
+        return 1.0 - self.read_static - self.read_local - self.read_per_thread
+
+    def write_interleaved(self) -> Array:
+        return 1.0 - self.write_static - self.write_local - self.write_per_thread
+
+
+def mixed_workload(
+    name: str,
+    n_threads: int,
+    *,
+    read_mix: tuple[float, float, float] = (0.0, 0.0, 0.0),
+    write_mix: tuple[float, float, float] | None = None,
+    read_bpi: float = 0.6,
+    write_bpi: float = 0.2,
+    static_socket: int = 0,
+) -> Workload:
+    """A homogeneous workload: every thread shares the same
+    ``(static, local, per_thread)`` mix — the model-representable case."""
+    if write_mix is None:
+        write_mix = read_mix
+    for mix in (read_mix, write_mix):
+        assert min(mix) >= 0.0 and sum(mix) <= 1.0 + 1e-6, mix
+    ones = jnp.ones((n_threads,), jnp.float32)
+    return Workload(
+        name=name,
+        read_static=ones * read_mix[0],
+        read_local=ones * read_mix[1],
+        read_per_thread=ones * read_mix[2],
+        write_static=ones * write_mix[0],
+        write_local=ones * write_mix[1],
+        write_per_thread=ones * write_mix[2],
+        read_bpi=ones * read_bpi,
+        write_bpi=ones * write_bpi,
+        static_socket=jnp.asarray(static_socket, jnp.int32),
+    )
+
+
+def pure_workload(
+    name: str,
+    n_threads: int,
+    pattern: str,
+    *,
+    read_bpi: float = 0.6,
+    write_bpi: float = 0.2,
+    static_socket: int = 0,
+) -> Workload:
+    """The §6.1 synthetic benchmarks: index-chasing arrays placed with a
+    single pure pattern (Static / Local / Interleaved / Per-thread)."""
+    mixes = {
+        "static": (1.0, 0.0, 0.0),
+        "local": (0.0, 1.0, 0.0),
+        "per_thread": (0.0, 0.0, 1.0),
+        "interleaved": (0.0, 0.0, 0.0),
+    }
+    if pattern not in mixes:
+        raise ValueError(f"unknown pattern {pattern!r}")
+    return mixed_workload(
+        name,
+        n_threads,
+        read_mix=mixes[pattern],
+        write_mix=mixes[pattern],
+        read_bpi=read_bpi,
+        write_bpi=write_bpi,
+        static_socket=static_socket,
+    )
+
+
+def violator_workload(
+    name: str,
+    n_threads: int,
+    *,
+    base_read_mix: tuple[float, float, float] = (0.05, 0.15, 0.4),
+    hot_fraction: float = 0.5,
+    hot_intensity: float = 2.0,
+    hot_extra_static: float = 0.35,
+    read_bpi: float = 0.7,
+    write_bpi: float = 0.15,
+    static_socket: int = 0,
+) -> Workload:
+    """A Page-rank-like model violator (paper §6.2, Figure 16).
+
+    The graph's early chunks hold the well-connected nodes, so the threads
+    that own them (the first ``hot_fraction`` of the thread range, which a
+    contiguous placement maps to the first socket) are hotter and lean much
+    harder on the shared early region — effectively extra static traffic
+    that moves with the threads instead of staying put.  The 4-class model
+    cannot represent this.
+    """
+    n = n_threads
+    t = jnp.arange(n)
+    hot = (t < jnp.round(hot_fraction * n)).astype(jnp.float32)
+    ones = jnp.ones((n,), jnp.float32)
+    rs, rl, rp = base_read_mix
+    read_static = ones * rs + hot * hot_extra_static
+    read_local = ones * rl * (1.0 - hot * 0.5)
+    read_per_thread = ones * rp * (1.0 - hot * 0.5)
+    # keep each thread's mix a valid distribution
+    total = read_static + read_local + read_per_thread
+    scale = jnp.minimum(1.0, 1.0 / jnp.maximum(total, 1e-9))
+    read_static, read_local, read_per_thread = (
+        read_static * scale,
+        read_local * scale,
+        read_per_thread * scale,
+    )
+    bpi = ones * read_bpi * (1.0 + hot * (hot_intensity - 1.0))
+    return Workload(
+        name=name,
+        read_static=read_static,
+        read_local=read_local,
+        read_per_thread=read_per_thread,
+        write_static=ones * 0.05,
+        write_local=ones * 0.6,
+        write_per_thread=ones * 0.2,
+        read_bpi=bpi,
+        write_bpi=ones * write_bpi,
+        static_socket=jnp.asarray(static_socket, jnp.int32),
+    )

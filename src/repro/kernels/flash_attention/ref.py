@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Naive direct attention (materialized logits, f32 softmax) — deliberately
+the simplest correct implementation, used as the allclose reference for
+the Pallas kernel across the shape/dtype sweep.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import Array
+
+
+def attention_ref(
+    q: Array,  # (B, H, Sq, dh)
+    k: Array,  # (B, Kv, Skv, dh)
+    v: Array,  # (B, Kv, Skv, dh)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    logit_cap: float = 0.0,
+) -> Array:
+    B, H, Sq, dh = q.shape
+    Kv, Skv = k.shape[1], k.shape[2]
+    G = H // Kv
+    k = jnp.repeat(k, G, axis=1)
+    v = jnp.repeat(v, G, axis=1)
+    logits = jnp.einsum(
+        "bhqd,bhsd->bhqs", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * (dh**-0.5)
+    if logit_cap > 0.0:
+        logits = logit_cap * jnp.tanh(logits / logit_cap)
+    rows = jnp.arange(Sq)[:, None] + (Skv - Sq)  # right-aligned queries
+    cols = jnp.arange(Skv)[None, :]
+    ok = jnp.ones((Sq, Skv), bool)
+    if causal:
+        ok &= cols <= rows
+    if window:
+        ok &= cols > rows - window
+    logits = jnp.where(ok[None, None], logits, -1e30)
+    w = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    w = w / w.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhqs,bhsd->bhqd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,46 @@
+"""Jit'd public wrapper for the selective-scan kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.kernels.mamba_scan.kernel import selective_scan
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssm_scan(
+    dt: Array,
+    a: Array,
+    b: Array,
+    c: Array,
+    x: Array,
+    *,
+    interpret: bool | None = None,
+) -> Array:
+    if interpret is None:
+        interpret = not on_tpu()
+    block_d = 512
+    di = x.shape[-1]
+    while di % block_d:
+        block_d //= 2
+    chunk = 256
+    while x.shape[1] % chunk:
+        chunk //= 2
+    return selective_scan(
+        dt.astype(jnp.float32),
+        a.astype(jnp.float32),
+        b.astype(jnp.float32),
+        c.astype(jnp.float32),
+        x.astype(jnp.float32),
+        block_d=block_d,
+        chunk=chunk,
+        interpret=interpret,
+    )

@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the selective-scan kernel: naive sequential
+recurrence h_t = exp(dt_t * A) * h_{t-1} + (dt_t * x_t) B_t,
+y_t = (h_t . C_t)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+
+def selective_scan_ref(
+    dt: Array,  # (B, S, di) f32 (post-softplus)
+    a: Array,  # (di, N) f32 (negative)
+    b: Array,  # (B, S, N) f32
+    c: Array,  # (B, S, N) f32
+    x: Array,  # (B, S, di) f32
+    h0: Array | None = None,  # (B, di, N)
+) -> tuple[Array, Array]:
+    B, S, di = x.shape
+    n = a.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((B, di, n), jnp.float32)
+
+    def step(h, inputs):
+        dt_t, b_t, c_t, x_t = inputs  # (B, di), (B, N), (B, N), (B, di)
+        da = jnp.exp(dt_t[..., None] * a[None])  # (B, di, N)
+        h = h * da + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    hT, ys = jax.lax.scan(
+        step,
+        h0,
+        (
+            dt.transpose(1, 0, 2),
+            b.transpose(1, 0, 2),
+            c.transpose(1, 0, 2),
+            x.transpose(1, 0, 2),
+        ),
+    )
+    return ys.transpose(1, 0, 2), hT  # (B, S, di), (B, di, N)

@@ -1,0 +1,252 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input-shape) cell, on the single-pod 16x16 mesh
+AND the 2x16x16 multi-pod mesh:
+
+    with mesh:
+        lowered = jax.jit(step, in_shardings=..., out_shardings=...)\
+            .lower(**input_specs(arch))
+        compiled = lowered.compile()
+        compiled.memory_analysis()   # proves it fits
+        compiled.cost_analysis()     # FLOPs/bytes for the roofline
+
+plus a parse of the post-partitioning HLO for collective bytes (the
+roofline's third term and the meshsig performance counters).  Results are
+cached as JSON under ``benchmarks/dryrun_results/`` so reruns only compile
+missing cells.
+
+NOTE: the two XLA_FLAGS lines above MUST stay the first statements — jax
+locks the device count on first initialization.
+"""
+
+import argparse
+import json
+import time
+import traceback
+from functools import partial
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, cell_supported, get_config, list_configs
+from repro.core.meshsig.hlo_counters import analyze_hlo
+from repro.data.pipeline import batch_struct, decode_struct
+from repro.launch import mesh as mesh_lib
+from repro.launch import steps
+from repro.models import model as M
+from repro.optim import adamw
+from repro.parallel import context as ctx
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "dryrun_results"
+
+
+def _replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def _key_struct():
+    k = jax.random.PRNGKey(0)
+    return jax.ShapeDtypeStruct(k.shape, k.dtype)
+
+
+def lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh) -> tuple:
+    """Build (jitted_fn, arg_structs, arg_shardings, out_shardings, meta)."""
+    meta: dict = {}
+    if shape.kind == "train":
+        param_structs = jax.eval_shape(partial(M.init_params, cfg), _key_struct())
+        opt_structs = jax.eval_shape(
+            partial(adamw.init, moment_dtype=cfg.moment_dtype), param_structs
+        )
+        params_sh = mesh_lib.tree_shardings(mesh, M.param_specs(cfg))
+        opt_sh = adamw.AdamWState(step=_replicated(mesh), m=params_sh, v=params_sh)
+        b_structs = batch_struct(cfg, shape)
+        b_sh = mesh_lib.batch_shardings(mesh, b_structs)
+        step_struct = jax.ShapeDtypeStruct((), jnp.int32)
+        accum = steps.auto_accum(cfg, shape.global_batch)
+        meta["accum"] = accum
+        fn = steps.make_train_step(cfg, accum=accum)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(params_sh, opt_sh, b_sh, _replicated(mesh)),
+            out_shardings=(params_sh, opt_sh, None),
+            donate_argnums=(0, 1),
+        )
+        args = (param_structs, opt_structs, b_structs, step_struct)
+    elif shape.kind == "prefill":
+        serve_params = jax.eval_shape(
+            lambda k: M.cast_for_compute(cfg, M.init_params(cfg, k)), _key_struct()
+        )
+        params_sh = mesh_lib.tree_shardings(mesh, M.param_specs(cfg))
+        b_structs = batch_struct(cfg, shape)
+        b_sh = mesh_lib.batch_shardings(mesh, b_structs)
+        fn = steps.make_prefill_step(cfg)
+        jitted = jax.jit(fn, in_shardings=(params_sh, b_sh), out_shardings=None)
+        args = (serve_params, b_structs)
+    else:  # decode
+        serve_params = jax.eval_shape(
+            lambda k: M.cast_for_compute(cfg, M.init_params(cfg, k)), _key_struct()
+        )
+        if mesh_lib.serve_params_replicated(cfg):
+            params_sh = mesh_lib.tree_shardings(mesh, M.param_specs(cfg))
+        else:  # §Perf d2: 2D-TP weights, zero per-token gathers
+            params_sh = mesh_lib.serve_decode_param_shardings(mesh, cfg)
+        cache_structs = jax.eval_shape(
+            partial(M.init_cache, cfg, shape.global_batch, shape.seq_len, jnp.bfloat16)
+        )
+        cache_sh = mesh_lib.tree_shardings(mesh, M.cache_specs(cfg))
+        d = decode_struct(cfg, shape)
+        tok_sh = mesh_lib.batch_shardings(mesh, {"tokens": d["tokens"]})["tokens"]
+        next_sh = mesh_lib.batch_shardings(
+            mesh, {"n": jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)}
+        )["n"]
+        fn = steps.make_decode_step(cfg)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(params_sh, cache_sh, tok_sh, _replicated(mesh)),
+            out_shardings=(next_sh, None, cache_sh),
+            donate_argnums=(1,),
+        )
+        args = (serve_params, cache_structs, d["tokens"], d["pos"])
+    return jitted, args, meta
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *, force: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    out_path = RESULTS_DIR / f"{arch}__{shape_name}__{mesh_kind}.json"
+    if out_path.exists() and not force:
+        cached = json.loads(out_path.read_text())
+        if cached.get("status") != "failed":  # failures always retry
+            return cached
+
+    record: dict = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "family": cfg.family,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    ok, why = cell_supported(cfg, shape)
+    if not ok:
+        record["status"] = "skipped"
+        record["skip_reason"] = why
+        _write(out_path, record)
+        return record
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    try:
+        with mesh_lib.cell_context(mesh, cfg, shape):
+            t0 = time.time()
+            jitted, args, meta = lower_cell(cfg, shape, mesh)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            t0 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t0
+
+        record.update(meta)
+        record["lower_s"] = round(t_lower, 2)
+        record["compile_s"] = round(t_compile, 2)
+
+        try:
+            mem = compiled.memory_analysis()
+            record["memory"] = {
+                k: int(getattr(mem, k))
+                for k in (
+                    "argument_size_in_bytes",
+                    "output_size_in_bytes",
+                    "temp_size_in_bytes",
+                    "alias_size_in_bytes",
+                    "generated_code_size_in_bytes",
+                )
+                if hasattr(mem, k)
+            }
+        except Exception as e:  # pragma: no cover
+            record["memory"] = {"error": str(e)}
+
+        try:
+            cost = compiled.cost_analysis()
+            record["cost"] = {
+                k: float(v)
+                for k, v in cost.items()
+                if isinstance(v, (int, float)) and (
+                    k in ("flops", "transcendentals", "optimal_seconds")
+                    or k.startswith("bytes accessed")
+                )
+            }
+        except Exception as e:  # pragma: no cover
+            record["cost"] = {"error": str(e)}
+
+        try:
+            hlo = compiled.as_text()
+            record["hlo_chars"] = len(hlo)
+            analysis = analyze_hlo(hlo)
+            del hlo
+            record["hlo_flops"] = analysis.flops  # per device, trip-multiplied
+            record["hlo_bytes"] = analysis.hbm_bytes  # fusion-idealized model
+            record["hlo_bytes_raw"] = analysis.hbm_bytes_raw  # upper bound
+            record["unknown_trip_loops"] = analysis.unknown_trip_loops
+            record["collectives"] = analysis.collective_summary()
+        except Exception as e:  # pragma: no cover
+            record["collectives"] = {"error": str(e)}
+
+        record["status"] = "ok"
+    except Exception as e:
+        record["status"] = "failed"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+    _write(out_path, record)
+    return record
+
+
+def _write(path: Path, record: dict) -> None:
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(record, indent=1, default=str))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", choices=["all", *SHAPES])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = list_configs() if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    n_fail = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for mesh_kind in meshes:
+                t0 = time.time()
+                rec = run_cell(arch, shape_name, mesh_kind, force=args.force)
+                status = rec.get("status")
+                extra = ""
+                if status == "ok":
+                    flops = rec.get("hlo_flops", 0)
+                    link = rec.get("collectives", {}).get("link_bytes_total", 0)
+                    extra = f"flops/dev={flops:.3e} link_bytes/dev={link:.3e} compile={rec.get('compile_s')}s"
+                elif status == "failed":
+                    n_fail += 1
+                    extra = rec.get("error", "")[:200]
+                elif status == "skipped":
+                    extra = rec.get("skip_reason", "")
+                print(
+                    f"[{time.strftime('%H:%M:%S')}] {arch:24s} {shape_name:12s} {mesh_kind:6s} "
+                    f"{status:8s} ({time.time()-t0:6.1f}s) {extra}",
+                    flush=True,
+                )
+    if n_fail:
+        raise SystemExit(f"{n_fail} cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,293 @@
+"""Attention: blocked (flash-style) training/prefill path + cached decode.
+
+Design notes (hardware adaptation):
+
+* The training path is a statically *blocked* online-softmax attention —
+  the pure-JAX twin of the Pallas kernel in ``repro.kernels.flash_attention``.
+  Blocks that are fully masked (future causal blocks, blocks outside a
+  sliding window) are skipped at trace time, so SWA prefill at 32k touches
+  only O(S * window) work.
+* GQA is computed by repeating K/V heads per block: the full Q-head dim is
+  then cleanly TP-shardable (every assigned arch has n_heads % 16 == 0),
+  while K/V stay small.  The Pallas kernel avoids the repeat in VMEM.
+* Decode keeps the KV cache *sequence-sharded* ("seq" logical dim) so a
+  32k x 128 cache fits per-chip HBM; the online-softmax reduction over the
+  sharded dim becomes a psum — flash-decode in GSPMD form.
+* SWA decode uses a ring buffer of window size: 500k-token contexts cost
+  O(window) memory (this is why SWA archs run the ``long_500k`` cell).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import rope, softcap
+from repro.parallel import context as ctx
+
+DEFAULT_BLOCK_Q = 1024
+DEFAULT_BLOCK_KV = 1024
+
+_NEG_INF = -1e30
+
+
+def init_attn_params(key: Array, cfg: ModelConfig, dtype) -> dict:
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    scale = d**-0.5
+    return {
+        "wq": (jax.random.normal(k1, (d, h * dh)) * scale).astype(dtype),
+        "wk": (jax.random.normal(k2, (d, kv * dh)) * scale).astype(dtype),
+        "wv": (jax.random.normal(k3, (d, kv * dh)) * scale).astype(dtype),
+        "wo": (jax.random.normal(k4, (h * dh, d)) * (h * dh) ** -0.5).astype(dtype),
+    }
+
+
+def attn_param_specs(cfg: ModelConfig) -> dict:
+    return {
+        "wq": ("fsdp", "tp"),
+        "wk": ("fsdp", "tp"),
+        "wv": ("fsdp", "tp"),
+        "wo": ("tp", "fsdp"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Blocked online-softmax attention (training / prefill / encoder)
+# ---------------------------------------------------------------------------
+
+
+def _block_bounds(size: int, block: int) -> list[tuple[int, int]]:
+    if size <= block:
+        return [(0, size)]
+    assert size % block == 0, (size, block)
+    return [(i * block, block) for i in range(size // block)]
+
+
+def blocked_attention(
+    q: Array,  # (B, Sq, H, dh)
+    k: Array,  # (B, Skv, Kv, dh)
+    v: Array,  # (B, Skv, Kv, dh)
+    *,
+    causal: bool,
+    window: int = 0,  # 0 = unbounded
+    logit_cap: float = 0.0,
+    q_offset: int = 0,  # absolute position of q[0] (prefill continuation)
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_kv: int = DEFAULT_BLOCK_KV,
+) -> Array:
+    """Statically-blocked attention with online softmax.
+
+    Fully-masked blocks are skipped at trace time; partially-masked blocks
+    get an explicit iota mask; interior blocks skip masking entirely.
+    """
+    B, Sq, H, dh = q.shape
+    Skv, Kv = k.shape[1], k.shape[2]
+    G = H // Kv
+    scale = dh**-0.5
+
+    q_blocks = _block_bounds(Sq, block_q)
+    kv_blocks = _block_bounds(Skv, block_kv)
+
+    outs = []
+    for q0, bq in q_blocks:
+        qi = q[:, q0 : q0 + bq].astype(jnp.float32) * scale
+        row0, row1 = q_offset + q0, q_offset + q0 + bq - 1  # absolute rows
+        m = jnp.full((B, H, bq), _NEG_INF, jnp.float32)
+        l = jnp.zeros((B, H, bq), jnp.float32)
+        acc = jnp.zeros((B, H, bq, dh), jnp.float32)
+        for k0, bk in kv_blocks:
+            col0, col1 = k0, k0 + bk - 1
+            if causal and col0 > row1:
+                continue  # block entirely in the future
+            if window and col1 < row0 - window + 1:
+                continue  # block entirely outside the sliding window
+            kj = jnp.repeat(k[:, k0 : k0 + bk], G, axis=2)  # (B, bk, H, dh)
+            vj = jnp.repeat(v[:, k0 : k0 + bk], G, axis=2)
+            logits = jnp.einsum(
+                "bqhd,bshd->bhqs", qi, kj.astype(jnp.float32)
+            )  # (B, H, bq, bk)
+            if logit_cap > 0.0:
+                logits = softcap(logits, logit_cap)
+            needs_causal = causal and col1 > row0
+            needs_window = window and col0 < row1 - window + 1
+            if needs_causal or needs_window:
+                rows = row0 + jnp.arange(bq)[:, None]
+                cols = col0 + jnp.arange(bk)[None, :]
+                ok = jnp.ones((bq, bk), bool)
+                if needs_causal:
+                    ok &= cols <= rows
+                if needs_window:
+                    ok &= cols > rows - window
+                logits = jnp.where(ok[None, None], logits, _NEG_INF)
+            m_new = jnp.maximum(m, logits.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(logits - m_new[..., None])
+            l = l * alpha + p.sum(axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhqs,bshd->bhqd", p, vj.astype(jnp.float32)
+            )
+            m = m_new
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B, H, bq, dh)
+        outs.append(out.transpose(0, 2, 1, 3))  # (B, bq, H, dh)
+    return jnp.concatenate(outs, axis=1).astype(q.dtype)
+
+
+def mha(
+    cfg: ModelConfig,
+    p: dict,
+    x: Array,  # (B, S, D)
+    positions: Array,  # (S,) absolute positions
+    *,
+    kind: str = "full",  # full | swa
+    causal: bool = True,
+    use_rope: bool = True,
+    kv_override: tuple[Array, Array] | None = None,  # cross-attention
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_kv: int = DEFAULT_BLOCK_KV,
+) -> Array:
+    """Full multi-head attention layer (projections + blocked core)."""
+    B, S, D = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, h, dh)
+    q = ctx.shard(q, "batch", None, "tp", None)
+    if kv_override is None:
+        k = (x @ p["wk"]).reshape(B, S, kv, dh)
+        v = (x @ p["wv"]).reshape(B, S, kv, dh)
+        if use_rope:
+            q = rope(q, positions[None], cfg.rope_theta)
+            k = rope(k, positions[None], cfg.rope_theta)
+        k = ctx.shard(k, "batch", None, None, None)
+        v = ctx.shard(v, "batch", None, None, None)
+    else:
+        k, v = kv_override
+    out = blocked_attention(
+        q,
+        k,
+        v,
+        causal=causal,
+        window=cfg.sliding_window if kind == "swa" else 0,
+        logit_cap=cfg.attn_logit_softcap,
+        block_q=block_q,
+        block_kv=block_kv,
+    )
+    out = ctx.shard(out, "batch", None, "tp", None)
+    out = out.reshape(B, S, h * dh) @ p["wo"]
+    return ctx.shard(out, "batch", None, None)
+
+
+def cross_kv(cfg: ModelConfig, p: dict, enc_out: Array) -> tuple[Array, Array]:
+    """Project encoder output once; reused by every decode step."""
+    B, S, _ = enc_out.shape
+    kv, dh = cfg.n_kv_heads, cfg.head_dim
+    k = (enc_out @ p["wk"]).reshape(B, S, kv, dh)
+    v = (enc_out @ p["wv"]).reshape(B, S, kv, dh)
+    k = ctx.shard(k, "cache_batch", "cache_seq", None, None)
+    v = ctx.shard(v, "cache_batch", "cache_seq", None, None)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# Decode (single new token against a cache)
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    k: Array  # (B, S_cache, Kv, dh) — ring buffer of size window for SWA
+    v: Array
+
+
+def init_kv_cache(
+    cfg: ModelConfig, batch: int, seq_len: int, *, kind: str, dtype
+) -> KVCache:
+    size = min(seq_len, cfg.sliding_window) if kind == "swa" else seq_len
+    shape = (batch, size, cfg.n_kv_heads, cfg.head_dim)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def cache_pspec_dims() -> tuple:
+    return ("cache_batch", "cache_seq", None, None)
+
+
+def mha_decode(
+    cfg: ModelConfig,
+    p: dict,
+    x: Array,  # (B, 1, D)
+    cache: KVCache,
+    pos: Array,  # scalar int32: index of the new token
+    *,
+    kind: str = "full",
+    use_rope: bool = True,
+    cross: bool = False,  # attend a static cross cache; no update, no mask
+) -> tuple[Array, KVCache]:
+    B, _, D = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = h // kv
+    S = cache.k.shape[1]
+    windowed = kind == "swa" and S == cfg.sliding_window
+
+    q = (x @ p["wq"]).reshape(B, h, dh)
+    # The cache is sequence-sharded; keep q replicated over "tp" so the
+    # online-softmax reduction becomes a psum over the cache shards
+    # (flash-decode) instead of a cache all-gather.
+    q = ctx.shard(q, "batch", None, None)
+    if use_rope and not cross:
+        q = rope(q[:, None], pos[None, None], cfg.rope_theta)[:, 0]
+
+    if cross:
+        k, v = cache.k, cache.v
+        valid = None
+    else:
+        k_new = (x @ p["wk"]).reshape(B, 1, kv, dh)
+        v_new = (x @ p["wv"]).reshape(B, 1, kv, dh)
+        if use_rope:
+            k_new = rope(k_new, pos[None, None], cfg.rope_theta)
+        slot = pos % S if windowed else jnp.minimum(pos, S - 1)
+        k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new.astype(cache.k.dtype), slot, 1)
+        v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new.astype(cache.v.dtype), slot, 1)
+        k = ctx.shard(k, *cache_pspec_dims())
+        v = ctx.shard(v, *cache_pspec_dims())
+        idx = jnp.arange(S)
+        if windowed:
+            valid = idx < jnp.minimum(pos + 1, S)  # ring: all slots live once full
+        else:
+            valid = idx <= pos
+
+    # Flash-decode sharding (§Perf iterations b1+b2):
+    # b1 — the logits chain must STAY sequence-sharded like the cache;
+    #      without constraints GSPMD reshards the whole cache to a
+    #      head-sharded layout (involuntary full rematerialization:
+    #      ~64 GB of all-gather per decode step on llama3 decode_32k).
+    #      With them the softmax reduction over the sharded seq dim
+    #      lowers to a small psum (link bytes 64.5 GB -> 30 MB, 2149x).
+    # b2 — GQA via a grouped einsum against the UNREPEATED cache:
+    #      jnp.repeat materialized G x the cache per step (~34 GB/layer
+    #      HBM traffic on llama3).  No sharding conflict: the cache is
+    #      seq-sharded, heads stay local.
+    # b3 — keep the QK/PV dots in the cache dtype with f32 ACCUMULATION
+    #      (preferred_element_type) instead of materializing f32 copies of
+    #      every K/V slice (~268 MB/layer of pure convert traffic).
+    qg = q.reshape(B, kv, G, dh)
+    logits = jnp.einsum(
+        "bkgd,bskd->bkgs", qg, k, preferred_element_type=jnp.float32
+    ) * (dh**-0.5)
+    logits = ctx.shard(logits, "cache_batch", None, None, "cache_seq")
+    if cfg.attn_logit_softcap > 0.0:
+        logits = softcap(logits, cfg.attn_logit_softcap)
+    if valid is not None:
+        logits = jnp.where(valid[None, None, None], logits, _NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum(
+        "bkgs,bskd->bkgd",
+        w.astype(v.dtype),
+        v,
+        preferred_element_type=jnp.float32,
+    )
+    out = out.astype(x.dtype).reshape(B, 1, h * dh) @ p["wo"]
+    new_cache = cache if cross else KVCache(k=k, v=v)
+    return ctx.shard(out, "batch", None, None), new_cache

@@ -1,0 +1,73 @@
+"""Shared layers: norms, rotary embeddings, SwiGLU FFN, embeddings."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.parallel import context as ctx
+
+
+def rms_norm(x: Array, weight: Array, eps: float) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def softcap(x: Array, cap: float) -> Array:
+    """gemma2-style logit soft capping."""
+    if cap <= 0.0:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """Rotary position embedding.
+
+    ``x``: (..., seq, heads, head_dim); ``positions``: (..., seq) int32.
+    """
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq  # (..., seq, half)
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def swiglu(x: Array, w_gate: Array, w_up: Array, w_down: Array) -> Array:
+    """SwiGLU FFN with Megatron-style TP sharding annotations:
+    ``w_gate``/``w_up`` are column-parallel, ``w_down`` row-parallel."""
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    h = ctx.shard(h, "batch", None, "tp")
+    out = h @ w_down
+    return ctx.shard(out, "batch", None, None)
+
+
+def embed(tokens: Array, table: Array) -> Array:
+    out = jnp.take(table, tokens, axis=0)
+    return ctx.shard(out, "batch", None, None)
+
+
+def unembed(x: Array, table: Array, *, transpose: bool, cap: float = 0.0) -> Array:
+    """Project to (padded) vocab logits; vocab dim is TP-sharded."""
+    logits = x @ (table.T if transpose else table)
+    logits = ctx.shard(logits, "batch", None, "tp")
+    if cap > 0.0:
+        logits = softcap(logits, cap)
+    return logits
+
+
+def sinusoidal_positions(length: int, dim: int) -> Array:
+    """Fixed sinusoidal embeddings (whisper encoder)."""
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    idx = jnp.arange(dim // 2, dtype=jnp.float32)[None, :]
+    angles = pos / jnp.power(10_000.0, 2 * idx / dim)
+    return jnp.concatenate([jnp.sin(angles), jnp.cos(angles)], axis=-1)

@@ -1,0 +1,238 @@
+"""Mamba-1 (selective state space) block.
+
+TPU adaptation notes:
+
+* Training/prefill uses a **chunked scan**: an outer ``lax.scan`` over
+  sequence chunks carries the (B, d_inner, N) state, and a parallel
+  ``associative_scan`` runs inside each chunk.  This bounds the
+  materialized state tensor to (B, chunk, d_inner, N) — the VMEM-sized
+  working set the Pallas kernel (``repro.kernels.mamba_scan``) tiles — while
+  keeping O(log chunk) depth instead of the GPU kernel's
+  thread-sequential recurrence.
+* All channel dimensions (``d_inner``) are independent across the scan, so
+  tensor parallelism shards ``d_inner`` over the ``model`` axis with zero
+  per-step communication; only the small x_proj/dt_proj matmuls psum.
+* Decode carries (conv window, ssm state) — O(1) per token, which is why
+  SSM/hybrid archs run the ``long_500k`` cell.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.configs.base import ModelConfig
+from repro.parallel import context as ctx
+
+DEFAULT_CHUNK = 4096  # see EXPERIMENTS.md SPerf a1/a2: outer-loop carry copies dominate, fewer chunks win
+
+
+def init_mamba_params(key: Array, cfg: ModelConfig, dtype) -> dict:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    dtr, kconv = cfg.dt_rank_actual, cfg.ssm_conv
+    keys = jax.random.split(key, 6)
+    scale = d**-0.5
+    a = jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))
+    return {
+        "in_proj": (jax.random.normal(keys[0], (d, 2 * di)) * scale).astype(dtype),
+        "conv_w": (jax.random.normal(keys[1], (kconv, di)) * kconv**-0.5).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": (jax.random.normal(keys[2], (di, dtr + 2 * n)) * di**-0.5).astype(dtype),
+        "dt_proj": (jax.random.normal(keys[3], (dtr, di)) * dtr**-0.5).astype(dtype),
+        "dt_bias": jnp.full((di,), -4.6, dtype),  # softplus^-1(0.01)
+        "A_log": jnp.log(a).astype(jnp.float32),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": (jax.random.normal(keys[4], (di, d)) * di**-0.5).astype(dtype),
+    }
+
+
+def mamba_param_specs(cfg: ModelConfig) -> dict:
+    return {
+        "in_proj": ("fsdp", "tp"),
+        "conv_w": (None, "tp"),
+        "conv_b": ("tp",),
+        "x_proj": ("tp", None),
+        "dt_proj": (None, "tp"),
+        "dt_bias": ("tp",),
+        "A_log": ("tp", None),
+        "D": ("tp",),
+        "out_proj": ("tp", "fsdp"),
+    }
+
+
+class MambaCache(NamedTuple):
+    conv: Array  # (B, K-1, d_inner) — trailing conv window
+    ssm: Array  # (B, d_inner, N) — recurrent state
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype) -> MambaCache:
+    return MambaCache(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+        ssm=jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+    )
+
+
+def _causal_conv(x: Array, w: Array, b: Array, history: Array | None) -> Array:
+    """Depthwise causal conv over seq; (B, S, di), kernel (K, di)."""
+    k = w.shape[0]
+    if history is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = history.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(
+        xp[:, i : i + x.shape[1]] * w[i][None, None, :] for i in range(k)
+    )
+    return out + b[None, None, :]
+
+
+def _ssm_inputs(cfg: ModelConfig, p: dict, x_conv: Array):
+    """Shared pre-scan projections: dt, dA-exponent, B, C."""
+    dtr, n = cfg.dt_rank_actual, cfg.ssm_state
+    x_dbl = x_conv @ p["x_proj"]  # (B, S, dtr + 2N) — psum over tp
+    dt, b_ssm, c_ssm = jnp.split(x_dbl, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"] + p["dt_bias"].astype(x_conv.dtype))
+    dt = ctx.shard(dt.astype(jnp.float32), "batch", None, "tp")
+    a = -jnp.exp(p["A_log"])  # (di, N)
+    return dt, a, b_ssm.astype(jnp.float32), c_ssm.astype(jnp.float32)
+
+
+def _combine(l, r):
+    al, bl = l
+    ar, br = r
+    return al * ar, bl * ar + br
+
+
+@jax.custom_vjp
+def _linear_scan(da: Array, dbx: Array, h0: Array) -> Array:
+    """h_t = da_t * h_{t-1} + dbx_t over axis 1; returns all h_t.
+
+    §Perf iteration a5: XLA's autodiff of ``associative_scan`` materializes
+    f32 even/odd slice pyramids (~50% of the falcon-mamba train cell's HBM
+    bytes).  The backward of a *linear* recurrence is itself a linear
+    recurrence (reverse time): lambda_t = dh_t + da_{t+1} * lambda_{t+1},
+    then d(da_t) = lambda_t * h_{t-1} and d(dbx_t) = lambda_t — one more
+    scan plus elementwise work, no pyramid.
+    """
+    cum_a, cum_b = jax.lax.associative_scan(_combine, (da, dbx), axis=1)
+    return cum_a * h0[:, None].astype(cum_a.dtype) + cum_b
+
+
+def _linear_scan_fwd(da, dbx, h0):
+    h = _linear_scan(da, dbx, h0)
+    return h, (da, h, h0)
+
+
+def _linear_scan_bwd(res, dh):
+    da, h, h0 = res
+    dh = dh.astype(da.dtype)
+    # a_{t+1}, with a_{T+1} := 0 (nothing downstream of the last step)
+    a_next = jnp.concatenate([da[:, 1:], jnp.zeros_like(da[:, :1])], axis=1)
+    rev = lambda t: jnp.flip(t, axis=1)
+    _, lam_rev = jax.lax.associative_scan(
+        _combine, (rev(a_next), rev(dh)), axis=1
+    )
+    lam = rev(lam_rev)  # lambda_t
+    h_prev = jnp.concatenate(
+        [h0[:, None].astype(h.dtype), h[:, :-1]], axis=1
+    )
+    d_da = lam * h_prev
+    d_dbx = lam
+    d_h0 = (da[:, 0] * lam[:, 0]).astype(h0.dtype)
+    return d_da, d_dbx, d_h0
+
+
+_linear_scan.defvjp(_linear_scan_fwd, _linear_scan_bwd)
+
+
+def _chunk_scan(da: Array, dbx: Array, h0: Array):
+    """Within-chunk linear scan.  ``da``/``dbx``: (B, c, di, N);
+    ``h0``: (B, di, N).  Returns per-step states and the final state."""
+    h = _linear_scan(da, dbx, h0)
+    return h, h[:, -1]
+
+
+def mamba_mixer(
+    cfg: ModelConfig,
+    p: dict,
+    x: Array,  # (B, S, D)
+    *,
+    chunk: int = DEFAULT_CHUNK,
+) -> Array:
+    """Training/prefill path (full sequence)."""
+    B, S, D = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+
+    xz = x @ p["in_proj"]  # (B, S, 2*di)
+    xz = ctx.shard(xz, "batch", None, "tp")
+    xin, z = jnp.split(xz, 2, axis=-1)
+    x_conv = jax.nn.silu(_causal_conv(xin, p["conv_w"], p["conv_b"], None))
+    x_conv = ctx.shard(x_conv, "batch", None, "tp")
+
+    dt, a, b_ssm, c_ssm = _ssm_inputs(cfg, p, x_conv)
+    xf = x_conv.astype(jnp.float32)
+
+    c = min(chunk, S)
+    assert S % c == 0, (S, c)
+    n_chunks = S // c
+
+    def step(h, idx):
+        sl = lambda t: jax.lax.dynamic_slice_in_dim(t, idx * c, c, axis=1)
+        dt_c, b_c, c_c, x_c = sl(dt), sl(b_ssm), sl(c_ssm), sl(xf)
+        da = jnp.exp(dt_c[..., None] * a[None, None])  # (B, c, di, N)
+        dbx = (dt_c * x_c)[..., None] * b_c[:, :, None, :]
+        # §Perf iteration a3: the associative-scan level tensors dominate
+        # the memory term; storing them in bf16 halves that traffic.  The
+        # chunk-boundary state stays f32, bounding drift to one chunk's
+        # log-depth of combines.
+        hs, h_last = _chunk_scan(
+            da.astype(jnp.bfloat16), dbx.astype(jnp.bfloat16), h
+        )
+        # a4: contract in bf16 with f32 accumulation — casting hs back to
+        # f32 would re-materialize the (B, c, di, N) tensor it just saved.
+        y = jnp.einsum(
+            "bcdn,bcn->bcd",
+            hs,
+            c_c.astype(jnp.bfloat16),
+            preferred_element_type=jnp.float32,
+        )
+        return h_last.astype(jnp.float32), y
+
+    h0 = jnp.zeros((B, di, n), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, jnp.arange(n_chunks))
+    # ys: (n_chunks, B, c, di) -> (B, S, di)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, di)
+    y = y + xf * p["D"][None, None]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    y = ctx.shard(y, "batch", None, "tp")
+    out = y @ p["out_proj"]
+    return ctx.shard(out, "batch", None, None)
+
+
+def mamba_decode(
+    cfg: ModelConfig,
+    p: dict,
+    x: Array,  # (B, 1, D)
+    cache: MambaCache,
+) -> tuple[Array, MambaCache]:
+    """O(1) single-token step."""
+    B, _, D = x.shape
+    xz = x @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)  # (B, 1, di)
+    x_conv = jax.nn.silu(
+        _causal_conv(xin, p["conv_w"], p["conv_b"], cache.conv)
+    )
+    new_conv = jnp.concatenate([cache.conv[:, 1:], xin.astype(cache.conv.dtype)], axis=1)
+
+    dt, a, b_ssm, c_ssm = _ssm_inputs(cfg, p, x_conv)
+    xf = x_conv.astype(jnp.float32)
+    da = jnp.exp(dt[:, 0, :, None] * a[None])  # (B, di, N)
+    dbx = (dt[:, 0] * xf[:, 0])[..., None] * b_ssm[:, 0, None, :]
+    h = cache.ssm * da + dbx
+    y = jnp.einsum("bdn,bn->bd", h, c_ssm[:, 0]) + xf[:, 0] * p["D"][None]
+    y = (y[:, None] * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = y @ p["out_proj"]
+    return ctx.shard(out, "batch", None, None), MambaCache(conv=new_conv, ssm=h)

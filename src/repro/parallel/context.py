@@ -1,0 +1,148 @@
+"""Mesh context + logical-axis sharding helpers.
+
+Models never name physical mesh axes directly; they annotate tensors with
+*logical* dims which this module maps onto whatever mesh is active:
+
+=========  =====================================================
+logical    physical axes
+=========  =====================================================
+"batch"    ("pod", "data") — whichever exist on the active mesh
+"fsdp"     "data" (parameter sharding for ZeRO-3 style gathers)
+"expert"   "model" (expert-parallel dimension)
+"tp"       "model" (tensor-parallel dimension)
+"seq"      "model" (sequence sharding for long-context caches)
+None       replicated
+=========  =====================================================
+
+With no active mesh (unit tests, smoke tests on 1 CPU device) every helper
+degrades to the identity, so model code is mesh-agnostic.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Iterable
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+_LOGICAL = {
+    "batch": ("pod", "data"),
+    "fsdp": ("data",),
+    "dp_all": ("pod", "data"),
+    "tp": ("model",),
+    "expert": ("model",),
+    "efsdp": ("data",),  # expert-weight FSDP dim (kept under serve remaps)
+    "seq": ("model",),
+    # Decode-cache dims; the launcher overrides these per (arch, shape) so
+    # e.g. a global_batch=1 long-context cell can spread the sequence over
+    # every mesh axis.
+    "cache_batch": ("data",),
+    "cache_seq": ("model",),
+}
+
+
+@contextlib.contextmanager
+def use_logical_rules(**overrides: tuple[str, ...]):
+    """Temporarily remap logical dims to different physical axes."""
+    saved = {k: _LOGICAL[k] for k in overrides}
+    _LOGICAL.update(overrides)
+    try:
+        yield
+    finally:
+        _LOGICAL.update(saved)
+
+
+def current_mesh() -> Mesh | None:
+    return getattr(_STATE, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh | None):
+    prev = current_mesh()
+    _STATE.mesh = mesh
+    try:
+        yield mesh
+    finally:
+        _STATE.mesh = prev
+
+
+def resolve(*logical_dims: str | None) -> P:
+    """Map logical dims to a PartitionSpec for the active mesh."""
+    mesh = current_mesh()
+    if mesh is None:
+        return P()
+    names = set(mesh.axis_names)
+    out = []
+    for dim in logical_dims:
+        if dim is None:
+            out.append(None)
+            continue
+        axes = tuple(a for a in _LOGICAL[dim] if a in names)
+        if not axes:
+            out.append(None)
+        elif len(axes) == 1:
+            out.append(axes[0])
+        else:
+            out.append(axes)
+    return P(*out)
+
+
+def sharding(*logical_dims: str | None) -> NamedSharding | None:
+    mesh = current_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, resolve(*logical_dims))
+
+
+def shard(x: jax.Array, *logical_dims: str | None) -> jax.Array:
+    """``with_sharding_constraint`` against the active mesh (identity when
+    no mesh is active)."""
+    s = sharding(*logical_dims)
+    if s is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, s)
+
+
+def axis_size(logical: str) -> int:
+    """Product of the mesh axes a logical dim maps to (1 with no mesh)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return 1
+    names = set(mesh.axis_names)
+    size = 1
+    for a in _LOGICAL[logical]:
+        if a in names:
+            size *= mesh.shape[a]
+    return size
+
+
+def physical_axes(logical: str) -> tuple[str, ...]:
+    mesh = current_mesh()
+    if mesh is None:
+        return ()
+    names = set(mesh.axis_names)
+    return tuple(a for a in _LOGICAL[logical] if a in names)
+
+
+def divisible(n: int, logical: str) -> bool:
+    return n % axis_size(logical) == 0
+
+
+def divisible_batch_axes(n: int) -> tuple[str, ...]:
+    """The largest prefix of the batch axes whose product divides ``n``
+    (empty for n=1: replicate instead of shard)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return ()
+    names = set(mesh.axis_names)
+    axes: list[str] = []
+    prod = 1
+    for a in _LOGICAL["batch"]:
+        if a in names and n % (prod * mesh.shape[a]) == 0:
+            axes.append(a)
+            prod *= mesh.shape[a]
+    return tuple(axes)

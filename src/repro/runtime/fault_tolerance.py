@@ -1,0 +1,140 @@
+"""Fault-tolerant training runtime.
+
+The pieces a 1000+-node deployment needs (DESIGN.md §7), built so they are
+testable on one host:
+
+* ``TrainLoop`` — checkpoint/restart orchestration: periodic async saves,
+  automatic resume from the latest valid manifest, deterministic data
+  replay (the :class:`~repro.data.pipeline.TokenStream` is counter-based,
+  so a restart replays the exact failed step).
+* ``StragglerMonitor`` — EWMA step-time outlier detection with a pluggable
+  reaction hook (in production: re-plan placement via
+  ``repro.core.meshsig.advisor``; in tests: a recorded flag).
+* ``remesh`` — elastic scaling: move a live state pytree onto a different
+  mesh (512 -> 256 chips) through the topology-independent checkpoint
+  shardings; used together with ``checkpoint.restore(..., shardings=...)``.
+* ``FailureInjector`` — deterministic fault injection for integration
+  tests (kill at step k, resume, verify bit-identical continuation).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.checkpoint import store
+from repro.launch import mesh as mesh_lib
+
+
+class StragglerMonitor:
+    """Flags steps whose wall time exceeds ``threshold`` x the EWMA.
+
+    On a real cluster the per-host step times come from the coordinator's
+    heartbeats; the reaction hook can evict the straggler's host or ask the
+    meshsig advisor for a placement that routes around it.
+    """
+
+    def __init__(self, alpha: float = 0.2, threshold: float = 2.0,
+                 on_straggler: Callable[[int, float, float], None] | None = None):
+        self.alpha = alpha
+        self.threshold = threshold
+        self.ewma: float | None = None
+        self.flagged: list[tuple[int, float, float]] = []
+        self.on_straggler = on_straggler
+
+    def observe(self, step: int, seconds: float) -> bool:
+        is_straggler = False
+        if self.ewma is not None and seconds > self.threshold * self.ewma:
+            is_straggler = True
+            self.flagged.append((step, seconds, self.ewma))
+            if self.on_straggler:
+                self.on_straggler(step, seconds, self.ewma)
+            # outliers do not poison the average
+        else:
+            self.ewma = (
+                seconds
+                if self.ewma is None
+                else (1 - self.alpha) * self.ewma + self.alpha * seconds
+            )
+        return is_straggler
+
+
+class FailureInjector:
+    """Raises a simulated node failure at the configured steps."""
+
+    class NodeFailure(RuntimeError):
+        pass
+
+    def __init__(self, fail_at: set[int] | None = None):
+        self.fail_at = set(fail_at or ())
+        self.fired: set[int] = set()
+
+    def check(self, step: int) -> None:
+        if step in self.fail_at and step not in self.fired:
+            self.fired.add(step)
+            raise self.NodeFailure(f"injected node failure at step {step}")
+
+
+@dataclass
+class TrainLoop:
+    """Checkpoint/restart training driver.
+
+    ``state`` is any pytree (params, opt state); ``step_fn(state, step) ->
+    (state, metrics)`` hides the jit'd train step + data plumbing.
+    """
+
+    step_fn: Callable[[Any, int], tuple[Any, dict]]
+    ckpt_dir: str | Path
+    save_every: int = 50
+    monitor: StragglerMonitor = field(default_factory=StragglerMonitor)
+    injector: FailureInjector | None = None
+
+    def resume_step(self) -> int | None:
+        return store.latest_step(self.ckpt_dir)
+
+    def run(self, state: Any, n_steps: int, *, start_step: int | None = None) -> tuple[Any, int, list[dict]]:
+        """Run up to ``n_steps`` total; resumes from the latest checkpoint
+        when ``start_step`` is None.  Returns (state, step, metrics)."""
+        ckpt = store.AsyncCheckpointer(self.ckpt_dir)
+        step = start_step
+        if step is None:
+            latest = self.resume_step()
+            if latest is not None:
+                like = jax.eval_shape(lambda x: x, state)
+                state = store.restore(self.ckpt_dir, latest, like)
+                step = latest
+            else:
+                step = 0
+        history: list[dict] = []
+        while step < n_steps:
+            if self.injector is not None:
+                self.injector.check(step)
+            t0 = time.time()
+            state, metrics = self.step_fn(state, step)
+            jax.block_until_ready(jax.tree.leaves(state)[0])
+            dt = time.time() - t0
+            self.monitor.observe(step, dt)
+            history.append({"step": step, "seconds": dt, **metrics})
+            step += 1
+            if step % self.save_every == 0 or step == n_steps:
+                ckpt.save(step, state)
+        ckpt.wait()
+        return state, step, history
+
+
+def remesh(state: Any, spec_tree: Any, new_mesh) -> Any:
+    """Elastic re-shard: place ``state`` onto ``new_mesh`` according to the
+    logical ``spec_tree`` (the same tree used at init).  Works across
+    device-count changes because logical specs are mesh-relative."""
+    from repro.parallel import context as ctx
+
+    with ctx.use_mesh(new_mesh):
+        shardings = mesh_lib.tree_shardings(new_mesh, spec_tree)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(np.asarray(x), s), state, shardings
+    )

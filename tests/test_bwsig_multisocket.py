@@ -1,0 +1,66 @@
+"""Beyond-paper: the fit generalizes past s=2 (the paper's equations are
+written for 2 sockets; ours reduce to them there and extend to s>2 with a
+documented remote-attribution assumption)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bwsig import fit_signature, predict_counters
+from repro.core.numa.machine import make_machine
+from repro.core.numa.simulator import simulate, simulate_counters
+from repro.core.numa.workload import mixed_workload
+
+MACHINE4 = make_machine(
+    "quad", sockets=4, cores_per_socket=8, remote_read_ratio=0.4,
+    remote_write_ratio=0.5, qpi_bw=40e9,
+)
+
+
+def _profile4(wl):
+    sym = simulate_counters(MACHINE4, wl, jnp.asarray([4, 4, 4, 4], jnp.int32))
+    asym = simulate_counters(MACHINE4, wl, jnp.asarray([7, 5, 3, 1], jnp.int32))
+    return sym, asym
+
+
+@pytest.mark.parametrize(
+    "mix,socket",
+    [
+        ((1.0, 0.0, 0.0), 2),
+        ((0.0, 1.0, 0.0), 0),
+        ((0.0, 0.0, 1.0), 0),
+        ((0.2, 0.35, 0.3), 1),
+    ],
+)
+def test_four_socket_fit_recovers_mix(mix, socket):
+    wl = mixed_workload("m4", 16, read_mix=mix, static_socket=socket, read_bpi=0.3)
+    sym, asym = _profile4(wl)
+    sig = fit_signature(sym, asym)
+    got = np.array(
+        [
+            float(sig.read.static_fraction),
+            float(sig.read.local_fraction),
+            float(sig.read.per_thread_fraction),
+        ]
+    )
+    np.testing.assert_allclose(got, np.array(mix), atol=0.05)
+    if mix[0] > 0.1:
+        assert int(sig.read.static_socket) == socket
+
+
+def test_four_socket_prediction_unseen_placement():
+    wl = mixed_workload("m4p", 16, read_mix=(0.2, 0.35, 0.3), static_socket=1)
+    sym, asym = _profile4(wl)
+    sig = fit_signature(sym, asym)
+    target = jnp.asarray([8, 4, 2, 2], jnp.int32)
+    res = simulate(MACHINE4, wl, target)
+    demand = res.read_flows.sum(axis=1)
+    pred_local, pred_remote = predict_counters(sig.read, demand, target)
+    total = float((res.sample.local_read + res.sample.remote_read).sum())
+    err = (
+        np.abs(np.asarray(pred_local - res.sample.local_read)).sum()
+        + np.abs(np.asarray(pred_remote - res.sample.remote_read)).sum()
+    ) / total
+    # s>2 remote attribution is approximate (hardware merges remote
+    # sources); stay within a few % of bandwidth
+    assert err < 0.05, err

@@ -1,0 +1,124 @@
+"""Tests for the signature model and its application (paper §3–§4)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.bwsig import (
+    DirectionSignature,
+    interleaved_fraction,
+    placement_matrix,
+    predict_counters,
+    predict_flows,
+)
+
+
+def test_worked_example_figure5():
+    """Paper §4 worked example: static=0.2@socket2, local=0.35,
+    per-thread=0.3, interleaved=0.15, placement (3, 1) threads.
+
+    Figure 5's combined matrix:
+      socket1 row: 0.65 local, 0.35 to bank 2
+      socket2 row: 0.30 to bank 1, 0.70 local
+    """
+    sig = DirectionSignature.make(
+        static_socket=1,  # paper's "socket 2", 0-indexed
+        static_fraction=0.2,
+        local_fraction=0.35,
+        per_thread_fraction=0.3,
+    )
+    assert np.isclose(float(interleaved_fraction(sig)), 0.15)
+    m = placement_matrix(sig, jnp.asarray([3, 1]))
+    expected = np.array([[0.65, 0.35], [0.30, 0.70]])
+    np.testing.assert_allclose(np.asarray(m), expected, atol=1e-6)
+
+
+def test_rows_sum_to_one_worked_example():
+    sig = DirectionSignature.make(1, 0.2, 0.35, 0.3)
+    m = placement_matrix(sig, jnp.asarray([3, 1]))
+    np.testing.assert_allclose(np.asarray(m.sum(axis=1)), [1.0, 1.0], atol=1e-6)
+
+
+def test_pure_class_matrices():
+    n = jnp.asarray([3, 1])
+    np.testing.assert_allclose(
+        np.asarray(placement_matrix(DirectionSignature.make(0, 1.0, 0, 0), n)),
+        [[1, 0], [1, 0]],
+        atol=1e-6,
+    )
+    np.testing.assert_allclose(
+        np.asarray(placement_matrix(DirectionSignature.make(0, 0, 1.0, 0), n)),
+        np.eye(2),
+        atol=1e-6,
+    )
+    np.testing.assert_allclose(
+        np.asarray(placement_matrix(DirectionSignature.make(0, 0, 0, 1.0), n)),
+        [[0.75, 0.25], [0.75, 0.25]],
+        atol=1e-6,
+    )
+    np.testing.assert_allclose(  # interleaved = remainder class
+        np.asarray(placement_matrix(DirectionSignature.make(0, 0, 0, 0), n)),
+        [[0.5, 0.5], [0.5, 0.5]],
+        atol=1e-6,
+    )
+
+
+def test_interleaved_uses_only_used_sockets():
+    """Paper §4: interleaved cells are 1/s over *used* sockets."""
+    sig = DirectionSignature.make(0, 0, 0, 0)  # pure interleaved
+    m = placement_matrix(sig, jnp.asarray([4, 0]))
+    np.testing.assert_allclose(np.asarray(m[0]), [1.0, 0.0], atol=1e-6)
+
+
+def test_predict_counters_reduction():
+    sig = DirectionSignature.make(1, 0.2, 0.35, 0.3)
+    demand = jnp.asarray([30.0, 10.0])
+    local, remote = predict_counters(sig, demand, jnp.asarray([3, 1]))
+    flows = predict_flows(sig, demand, jnp.asarray([3, 1]))
+    np.testing.assert_allclose(np.asarray(local), np.diag(np.asarray(flows)))
+    np.testing.assert_allclose(
+        np.asarray(local + remote), np.asarray(flows.sum(0)), rtol=1e-6
+    )
+    # Conservation: all demand lands on some bank.
+    np.testing.assert_allclose(float((local + remote).sum()), 40.0, rtol=1e-6)
+
+
+@st.composite
+def signatures(draw, s: int = 2):
+    fracs = draw(
+        st.lists(st.floats(0.0, 1.0), min_size=3, max_size=3).filter(
+            lambda f: sum(f) <= 1.0
+        )
+    )
+    socket = draw(st.integers(0, s - 1))
+    return DirectionSignature.make(socket, fracs[0], fracs[1], fracs[2])
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    sig=signatures(),
+    n0=st.integers(0, 16),
+    n1=st.integers(0, 16),
+)
+def test_placement_matrix_row_stochastic(sig, n0, n1):
+    """Property (paper Fig 5 caption): every used socket's row sums to 1,
+    all entries are in [0, 1]."""
+    if n0 + n1 == 0:
+        return
+    n = jnp.asarray([n0, n1])
+    m = np.asarray(placement_matrix(sig, n))
+    assert (m >= -1e-6).all() and (m <= 1 + 1e-6).all()
+    for i, cnt in enumerate([n0, n1]):
+        if cnt > 0:
+            assert np.isclose(m[i].sum(), 1.0, atol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(sig=signatures(), scale=st.floats(0.1, 100.0))
+def test_flow_conservation(sig, scale):
+    """Total predicted flow equals total demand regardless of signature."""
+    demand = jnp.asarray([2.0, 3.0]) * scale
+    flows = predict_flows(sig, demand, jnp.asarray([2, 2]))
+    assert np.isclose(float(flows.sum()), float(demand.sum()), rtol=1e-5)

@@ -1,0 +1,158 @@
+"""Pallas kernel sweeps: shapes x dtypes, allclose vs the pure-jnp oracles
+(interpret mode — the kernel body executes in Python on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ops import mha_flash
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.mamba_scan.kernel import selective_scan
+from repro.kernels.mamba_scan.ops import ssm_scan
+from repro.kernels.mamba_scan.ref import selective_scan_ref
+
+
+def _qkv(key, B, H, Kv, Sq, Skv, dh, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = (jax.random.normal(k1, (B, H, Sq, dh)) * 0.5).astype(dtype)
+    k = (jax.random.normal(k2, (B, Kv, Skv, dh)) * 0.5).astype(dtype)
+    v = (jax.random.normal(k3, (B, Kv, Skv, dh)) * 0.5).astype(dtype)
+    return q, k, v
+
+
+TOL = {jnp.float32: dict(atol=2e-5, rtol=2e-5), jnp.bfloat16: dict(atol=2e-2, rtol=2e-2)}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,H,Kv,Sq,Skv,dh,block",
+    [
+        (1, 4, 4, 128, 128, 64, 64),  # MHA square
+        (2, 8, 2, 128, 128, 64, 64),  # GQA 4:1
+        (1, 4, 1, 64, 256, 32, 64),  # MQA, Skv > Sq (right-aligned)
+        (1, 2, 2, 256, 256, 128, 128),  # wide head
+    ],
+)
+def test_flash_attention_sweep(dtype, B, H, Kv, Sq, Skv, dh, block):
+    q, k, v = _qkv(jax.random.PRNGKey(0), B, H, Kv, Sq, Skv, dh, dtype)
+    got = flash_attention(
+        q, k, v, causal=True, block_q=block, block_kv=block, interpret=True
+    )
+    want = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **TOL[dtype]
+    )
+
+
+@pytest.mark.parametrize("window", [32, 64])
+def test_flash_attention_sliding_window(window):
+    q, k, v = _qkv(jax.random.PRNGKey(1), 1, 4, 2, 128, 128, 64, jnp.float32)
+    got = flash_attention(
+        q, k, v, causal=True, window=window, block_q=64, block_kv=64, interpret=True
+    )
+    want = attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_softcap():
+    q, k, v = _qkv(jax.random.PRNGKey(2), 1, 2, 2, 64, 64, 32, jnp.float32)
+    got = flash_attention(
+        q, k, v, causal=True, logit_cap=30.0, block_q=32, block_kv=32, interpret=True
+    )
+    want = attention_ref(q, k, v, causal=True, logit_cap=30.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_noncausal():
+    q, k, v = _qkv(jax.random.PRNGKey(3), 1, 2, 2, 64, 64, 32, jnp.float32)
+    got = flash_attention(q, k, v, causal=False, block_q=32, block_kv=32, interpret=True)
+    want = attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+def test_flash_matches_model_xla_path():
+    """The kernel agrees with the model's blocked-XLA attention too."""
+    from repro.models.attention import blocked_attention
+
+    B, H, Kv, S, dh = 2, 8, 4, 128, 32
+    q, k, v = _qkv(jax.random.PRNGKey(4), B, H, Kv, S, S, dh, jnp.float32)
+    got = mha_flash(
+        q.transpose(0, 2, 1, 3),
+        k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3),
+        causal=True,
+        interpret=True,
+    )
+    want = blocked_attention(
+        q.transpose(0, 2, 1, 3),
+        k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3),
+        causal=True,
+        block_q=64,
+        block_kv=64,
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# mamba selective scan
+# ---------------------------------------------------------------------------
+
+
+def _ssm_inputs(key, B, S, di, n):
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    dt = jax.nn.softplus(jax.random.normal(k1, (B, S, di)) - 2.0)
+    a = -jnp.exp(jax.random.normal(k2, (di, n)) * 0.3)
+    b = jax.random.normal(k3, (B, S, n)) * 0.5
+    c = jax.random.normal(k4, (B, S, n)) * 0.5
+    x = jax.random.normal(k5, (B, S, di))
+    return dt, a, b, c, x
+
+
+@pytest.mark.parametrize(
+    "B,S,di,n,block_d,chunk",
+    [
+        (1, 64, 32, 8, 16, 32),
+        (2, 128, 64, 16, 32, 64),
+        (1, 96, 48, 16, 16, 32),  # chunk not dividing S/2 exercises chunk=32x3
+        (2, 64, 128, 4, 128, 16),
+    ],
+)
+def test_selective_scan_sweep(B, S, di, n, block_d, chunk):
+    dt, a, b, c, x = _ssm_inputs(jax.random.PRNGKey(0), B, S, di, n)
+    got = selective_scan(dt, a, b, c, x, block_d=block_d, chunk=chunk, interpret=True)
+    want, _ = selective_scan_ref(dt, a, b, c, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-4)
+
+
+def test_ssm_scan_wrapper_matches_model_chunked_scan():
+    """Kernel vs the model's associative chunked scan (mamba.py)."""
+    from repro.models.mamba import _chunk_scan
+
+    B, S, di, n = 1, 64, 32, 8
+    dt, a, b, c, x = _ssm_inputs(jax.random.PRNGKey(1), B, S, di, n)
+    got = ssm_scan(dt, a, b, c, x, interpret=True)
+
+    da = jnp.exp(dt[..., None] * a[None, None])
+    dbx = (dt * x)[..., None] * b[:, :, None, :]
+    hs, _ = _chunk_scan(da, dbx, jnp.zeros((B, di, n)))
+    want = jnp.einsum("bsdn,bsn->bsd", hs, c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-4)
+
+
+def test_selective_scan_dtype_bf16_inputs():
+    B, S, di, n = 1, 64, 32, 8
+    dt, a, b, c, x = _ssm_inputs(jax.random.PRNGKey(2), B, S, di, n)
+    got = ssm_scan(
+        dt.astype(jnp.bfloat16), a, b.astype(jnp.bfloat16),
+        c.astype(jnp.bfloat16), x.astype(jnp.bfloat16), interpret=True,
+    )
+    want, _ = selective_scan_ref(
+        dt.astype(jnp.bfloat16).astype(jnp.float32), a,
+        b.astype(jnp.bfloat16).astype(jnp.float32),
+        c.astype(jnp.bfloat16).astype(jnp.float32),
+        x.astype(jnp.bfloat16).astype(jnp.float32),
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-2, rtol=2e-2)

@@ -1,0 +1,70 @@
+"""Integration tests for the §6 evaluation harness (paper-claim anchors)."""
+
+import numpy as np
+import pytest
+
+from repro.core.numa import E5_2630_V3, E5_2699_V3
+from repro.core.numa.benchmarks import benchmark_workload, suite_names
+from repro.core.numa.evaluate import (
+    evaluate_accuracy,
+    evaluate_stability,
+    evaluate_suite,
+    sweep_placements,
+)
+
+
+def test_sweep_respects_one_thread_per_core():
+    p = np.asarray(sweep_placements(E5_2630_V3, 8))
+    assert p.sum(axis=1).tolist() == [8] * len(p)
+    assert p.max() <= 8
+    assert len(p) == 9  # 0..8 on socket 0
+
+
+def test_suite_has_23_benchmarks():
+    names = suite_names(include_violators=True)
+    assert len(names) == 23  # paper Table 1
+    assert "Page rank" in names and "EP" in names
+
+
+def test_noise_free_accuracy_is_exact_for_representable_workloads():
+    """With perfect counters and an in-model workload the fit+predict
+    pipeline must reproduce measurements exactly — the correctness anchor
+    behind the paper's Figure 17."""
+    wl = benchmark_workload("Swim", 16)
+    res = evaluate_accuracy(E5_2699_V3, wl)
+    assert float(np.asarray(res.errors_combined).max()) < 1e-3
+
+
+def test_violator_has_much_larger_error_than_representable():
+    wl_good = benchmark_workload("Swim", 16)
+    wl_bad = benchmark_workload("Page rank", 16)
+    good = evaluate_accuracy(E5_2699_V3, wl_good)
+    bad = evaluate_accuracy(E5_2699_V3, wl_bad)
+    assert float(np.asarray(bad.errors_combined).mean()) > 10 * float(
+        np.asarray(good.errors_combined).mean() + 1e-6
+    )
+    # and the §6.2.1 detector ranks them accordingly
+    assert float(bad.misfit) > 10 * float(good.misfit)
+
+
+@pytest.mark.slow
+def test_suite_median_error_within_paper_band():
+    """Paper §6.2.2: median error 2.34% of bandwidth over thousands of
+    measurements.  Our ground truth is in-model by construction (except the
+    violator), so the median with realistic counter noise must land *below*
+    the paper's 2.34%."""
+    r = evaluate_suite(E5_2699_V3, noise_std=0.02)
+    assert r.all_errors.size > 1000  # "thousands of measurements"
+    assert r.median_error_pct < 2.34
+    # errors are not degenerate zeros under noise
+    assert r.median_error_pct > 0.01
+
+
+@pytest.mark.slow
+def test_stability_across_machines():
+    """Paper Figure 14: mean combined-signature change 6.8%, median 4.2%.
+    Our simulated machines differ only through saturation-induced rate
+    asymmetries, so changes must be small and below the paper's levels."""
+    r = evaluate_stability(E5_2630_V3, E5_2699_V3, noise_std=0.01)
+    assert r.mean_combined_pct < 6.8
+    assert r.median_combined_pct < 4.2
