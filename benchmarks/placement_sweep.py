@@ -1,0 +1,90 @@
+"""Throughput benchmark for the batched multi-socket placement-sweep engine.
+
+Sweeps every one-thread-per-core placement on the quad-socket preset
+(1469 compositions of 24 threads over 4 x 12 cores — the paper's §6.2.2
+protocol at beyond-paper socket count) through the single jitted
+``evaluate_batch`` trace and reports
+
+* placements/sec (fit + simulate + predict + error, per placement,
+  steady-state after compilation), and
+* the median model error as % of run bandwidth (paper's headline metric:
+  2.34% at s = 2).
+
+Run directly:
+
+    PYTHONPATH=src python benchmarks/placement_sweep.py
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def numa_placement_sweep(
+    machine=None,
+    n_threads: int | None = None,
+    *,
+    benchmarks: tuple[str, ...] = ("Swim", "CG", "EP", "NPO"),
+    noise_std: float = 0.02,
+    min_placements: int = 500,
+) -> tuple[float, dict]:
+    """Returns ``(placements_per_sec, details)`` for the harness."""
+    from repro.core.numa import E7_4830_V3
+    from repro.core.numa.benchmarks import benchmark_workload
+    from repro.core.numa.evaluate import evaluate_batch, sweep_placements
+
+    if machine is None:
+        machine = E7_4830_V3
+    if n_threads is None:
+        n_threads = 2 * machine.cores_per_socket  # the largest sweep space
+
+    placements = sweep_placements(machine, n_threads)
+    n_p = placements.shape[0]
+    assert n_p >= min_placements, (n_p, min_placements)
+    workloads = [benchmark_workload(b, n_threads) for b in benchmarks]
+    keys = jax.numpy.stack(
+        [jax.random.fold_in(jax.random.PRNGKey(0), i) for i in range(len(workloads))]
+    )
+
+    def run():
+        batch = evaluate_batch(
+            machine, workloads, placements, noise_std=noise_std, keys=keys
+        )
+        jax.block_until_ready(batch.errors_combined)
+        return batch
+
+    t0 = time.time()
+    batch = run()  # includes compilation
+    compile_s = time.time() - t0
+    t0 = time.time()
+    batch = run()  # steady state (one cached trace)
+    steady_s = time.time() - t0
+
+    evaluated = n_p * len(workloads)
+    errors_pct = np.asarray(batch.errors_combined).reshape(-1) * 100.0
+    details = {
+        "machine": machine.name,
+        "sockets": machine.sockets,
+        "n_threads": n_threads,
+        "placements": n_p,
+        "benchmarks": len(workloads),
+        "median_error_pct": round(float(np.median(errors_pct)), 4),
+        "p95_error_pct": round(float(np.percentile(errors_pct, 95)), 4),
+        "compile_s": round(compile_s, 3),
+        "steady_s": round(steady_s, 3),
+    }
+    return evaluated / steady_s, details
+
+
+def main() -> None:
+    pps, details = numa_placement_sweep()
+    print(f"placements/sec: {pps:,.0f}")
+    for k, v in details.items():
+        print(f"  {k}: {v}")
+
+
+if __name__ == "__main__":
+    main()

@@ -68,6 +68,32 @@ def numa_demo() -> None:
     print(f"best placement: {best[0]}")
 
 
+def numa_multisocket_demo() -> None:
+    """The generalized engine: rank every 16-thread placement on the
+    quad-socket preset from 2 profiling runs, then verify the extremes by
+    simulating only those two candidates."""
+    from repro.core.meshsig.advisor import rank_numa_placements
+    from repro.core.numa import E7_4830_V3, mixed_workload, simulate
+    from repro.core.numa.evaluate import count_placements
+
+    wl = mixed_workload("app4", 16, read_mix=(0.35, 0.25, 0.2), read_bpi=3.0)
+    total = count_placements(E7_4830_V3, 16)
+    ranked = rank_numa_placements(E7_4830_V3, wl)
+    print(
+        f"\nNUMA advisor on {E7_4830_V3.name}: ranked {total} placements "
+        "of 16 threads from 2 profiling runs (no per-candidate measurement)"
+    )
+    import jax.numpy as jnp
+
+    for label, r in (("best", ranked[0]), ("worst", ranked[-1])):
+        thr = float(simulate(E7_4830_V3, wl, jnp.asarray(r.placement, jnp.int32)).throughput)
+        print(
+            f"  {label}: {r.placement}  predicted-throughput="
+            f"{r.predicted_throughput:.2f}  predicted-remote="
+            f"{100 * r.remote_fraction:.0f}%  measured-throughput={thr:.2f}"
+        )
+
+
 def main() -> None:
     recs = sorted(RESULTS.glob("meshsig_validation__*.json"))
     if recs:
@@ -75,6 +101,7 @@ def main() -> None:
     else:
         print("(no mesh validation artifact; showing the NUMA advisor)")
     numa_demo()
+    numa_multisocket_demo()
 
 
 if __name__ == "__main__":

@@ -16,7 +16,10 @@ Design (DESIGN.md §7):
 
 from __future__ import annotations
 
+import contextlib
+import itertools
 import json
+import os
 import shutil
 import threading
 import time
@@ -28,6 +31,35 @@ import ml_dtypes
 import numpy as np
 
 _MANIFEST = "manifest.json"
+_TMP_MARK = ".tmp"
+_uid = itertools.count()
+
+
+def _remove_dir_atomic(path: Path, *, attempts: int = 5) -> None:
+    """Remove a directory another thread may still be writing into.
+
+    A plain ``rmtree`` races the writer two ways: the writer's ``open``
+    fails midway (FileNotFoundError) and ``rmtree`` itself dies with
+    ``OSError: Directory not empty`` when a file lands between the listing
+    and the ``rmdir``.  Renaming first is atomic — the writer keeps writing
+    into the renamed (doomed) directory and never touches the new path —
+    after which the remove only needs a retry for files still arriving.
+    """
+    trash = path.with_name(f"{path.name}.trash-{os.getpid()}-{next(_uid)}")
+    try:
+        path.rename(trash)
+    except FileNotFoundError:
+        return  # someone else already cleaned it up
+    for i in range(attempts):
+        try:
+            shutil.rmtree(trash)
+            return
+        except FileNotFoundError:
+            return
+        except OSError:
+            if i == attempts - 1:
+                raise
+            time.sleep(0.05 * (i + 1))
 
 
 def _is_native(dtype: np.dtype) -> bool:
@@ -64,9 +96,12 @@ def save(directory: str | Path, step: int, tree: Any, *, chunk_mb: int = 512) ->
     directory = Path(directory)
     directory.mkdir(parents=True, exist_ok=True)
     final = directory / f"step_{step:08d}"
-    tmp = directory / f"step_{step:08d}.tmp"
-    if tmp.exists():
-        shutil.rmtree(tmp)
+    # Unique scratch dir per call: two writers for the same step never share
+    # a staging directory, so neither can delete files under the other.
+    tmp = directory / f"step_{step:08d}{_TMP_MARK}-{os.getpid()}-{next(_uid)}"
+    stale = directory / f"step_{step:08d}{_TMP_MARK}"
+    if stale.exists():  # pre-fix layout left by a crashed writer
+        _remove_dir_atomic(stale)
     tmp.mkdir(parents=True)
 
     items, _ = _flatten(tree)
@@ -91,10 +126,34 @@ def save(directory: str | Path, step: int, tree: Any, *, chunk_mb: int = 512) ->
             "dtype": str(arr.dtype),
         }
     (tmp / _MANIFEST).write_text(json.dumps(manifest))
-    if final.exists():
-        shutil.rmtree(final)
-    tmp.rename(final)  # atomic commit
-    return final
+    last_err: OSError | None = None
+    try:
+        for attempt in range(5):
+            if final.exists():
+                if attempt and (final / _MANIFEST).exists():
+                    # A concurrent writer committed a complete checkpoint
+                    # for this step while we were retrying — ours is
+                    # redundant.
+                    _remove_dir_atomic(tmp)
+                    return final
+                _remove_dir_atomic(final)
+            try:
+                tmp.rename(final)  # atomic commit
+                return final
+            except OSError as e:
+                last_err = e  # lost a create/remove race with another writer
+        if (final / _MANIFEST).exists():
+            _remove_dir_atomic(tmp)
+            return final
+    except BaseException:
+        # Never leak the uniquely-named staging dir: it is invisible to
+        # latest_step and no later save would reclaim it.
+        with contextlib.suppress(OSError):
+            _remove_dir_atomic(tmp)
+        raise
+    with contextlib.suppress(OSError):
+        _remove_dir_atomic(tmp)
+    raise OSError(f"could not commit checkpoint {final}") from last_err
 
 
 def latest_step(directory: str | Path) -> int | None:
@@ -103,9 +162,13 @@ def latest_step(directory: str | Path) -> int | None:
         return None
     steps = []
     for p in directory.iterdir():
-        if p.is_dir() and p.name.startswith("step_") and not p.name.endswith(".tmp"):
-            if (p / _MANIFEST).exists():
-                steps.append(int(p.name.split("_")[1]))
+        if not (p.is_dir() and p.name.startswith("step_")):
+            continue
+        suffix = p.name[len("step_"):]
+        if not suffix.isdigit():  # .tmp-* staging / .trash-* cleanup dirs
+            continue
+        if (p / _MANIFEST).exists():
+            steps.append(int(suffix))
     return max(steps) if steps else None
 
 

@@ -1,0 +1,53 @@
+"""Version-compat shims for the pinned JAX.
+
+The repo targets the newest JAX API surface, but the container pins
+jax 0.4.37 where two spellings differ:
+
+* ``jax.shard_map`` does not exist yet — it lives at
+  ``jax.experimental.shard_map.shard_map`` and takes ``check_rep``
+  instead of ``check_vma``.
+* ``pltpu.CompilerParams`` is still called ``pltpu.TPUCompilerParams``.
+
+Import from here instead of guessing which spelling the runtime has.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+try:  # modern spelling (jax >= 0.6)
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True, **kw):
+    """``jax.shard_map`` accepting the modern ``check_vma`` kwarg on every
+    supported JAX version."""
+    kw[_CHECK_KW] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+def axis_size(name) -> int:
+    """``jax.lax.axis_size`` for JAX versions that predate it.
+
+    ``psum(1, name)`` resolves to a static int inside shard_map on every
+    supported version; ``name`` may be a single axis or a tuple (product).
+    """
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(name)
+    return jax.lax.psum(1, name)
+
+
+def tpu_compiler_params(**kwargs: Any):
+    """Build ``pltpu.CompilerParams`` (``TPUCompilerParams`` on older JAX)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)

@@ -15,7 +15,15 @@ bandwidth ratios.  Everything is ``jit``/``vmap``-able so the paper's
 "thousands of measurements" evaluation runs as a single batched call.
 """
 
-from repro.core.numa.machine import MachineSpec, E5_2630_V3, E5_2699_V3, MACHINES
+from repro.core.numa.machine import (
+    MachineSpec,
+    E5_2630_V3,
+    E5_2699_V3,
+    E7_4830_V3,
+    E7_8860_V3,
+    MACHINES,
+    make_machine,
+)
 from repro.core.numa.workload import Workload, pure_workload, mixed_workload
 from repro.core.numa.simulator import (
     SimulationResult,
@@ -30,7 +38,10 @@ __all__ = [
     "MachineSpec",
     "E5_2630_V3",
     "E5_2699_V3",
+    "E7_4830_V3",
+    "E7_8860_V3",
     "MACHINES",
+    "make_machine",
     "Workload",
     "pure_workload",
     "mixed_workload",

@@ -1,18 +1,32 @@
-"""Evaluation harness reproducing the paper's §6 methodology.
+"""Evaluation harness reproducing the paper's §6 methodology — batched.
 
-* ``evaluate_accuracy``: fit a workload's signature from the 2 profiling
-  runs, then predict the bank counters of *every* other thread distribution
-  and compare against (simulated) measurements — paper §6.2.2 / Figures 16–18.
+* ``sweep_placements`` / ``enumerate_placements``: every thread
+  distribution over ``s >= 2`` sockets keeping one thread per core
+  (compositions of ``n_threads``), with a deterministic subsampling budget
+  for the combinatorial counts that appear at 4+ sockets.
+* ``evaluate_batch``: the single jitted entry point — fit each workload's
+  signature from the 2 profiling runs, then predict the bank counters of
+  *every* placement and compare against (simulated) measurements, vmapped
+  over placements *and* benchmarks in one trace (paper §6.2.2 at the
+  paper's "thousands of measurements" scale).
+* ``evaluate_accuracy`` / ``evaluate_suite``: thin routes through
+  ``evaluate_batch`` (paper Figures 16–18).
 * ``evaluate_stability``: fit the same workload on two machines and measure
-  how much bandwidth the signature reallocates — paper §6.2.1 / Figures 13–15.
+  how much bandwidth the signature reallocates — one batched fit trace per
+  machine (paper §6.2.1 / Figures 13–15).
 
 Errors are reported the paper's way: per counter measurement, as a
-percentage of the run's total bandwidth.
+percentage of the run's total bandwidth.  Fitted signatures are cached
+keyed on ``(machine, workload, noise, key)`` so repeated evaluations (the
+advisor's inner loop) never re-profile.
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple
+import hashlib
+import random as _pyrandom
+from functools import partial
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -21,6 +35,7 @@ from jax import Array
 
 from repro.core.bwsig import (
     BandwidthSignature,
+    DirectionSignature,
     fit_signature,
     misfit_score,
     predict_counters,
@@ -31,17 +46,94 @@ from repro.core.numa.machine import MachineSpec
 from repro.core.numa.simulator import profile_pair, simulate
 from repro.core.numa.workload import Workload
 
+# ---------------------------------------------------------------------------
+# Placement enumeration: compositions of n_threads over s sockets
+# ---------------------------------------------------------------------------
 
-def sweep_placements(machine: MachineSpec, n_threads: int) -> Array:
-    """All 2-socket thread distributions that keep one thread per core
-    (paper §6.2.2: "varied the distribution of the threads between the two
-    sockets maintaining a single thread per core")."""
-    cores = machine.cores_per_socket
-    lo = max(0, n_threads - cores)
-    hi = min(cores, n_threads)
-    return jnp.asarray(
-        [[i, n_threads - i] for i in range(lo, hi + 1)], jnp.int32
+
+def _composition_table(s: int, cap: int, n: int) -> list[list[int]]:
+    """``T[k][m]``: number of compositions of ``m`` into ``k`` ordered parts
+    each in ``[0, cap]`` (python ints — exact at any scale)."""
+    T = [[0] * (n + 1) for _ in range(s + 1)]
+    T[0][0] = 1
+    for k in range(1, s + 1):
+        prev, cur = T[k - 1], T[k]
+        for m in range(n + 1):
+            cur[m] = sum(prev[m - j] for j in range(min(cap, m) + 1))
+    return T
+
+
+def count_placements(machine: MachineSpec, n_threads: int) -> int:
+    """How many one-thread-per-core distributions of ``n_threads`` exist."""
+    table = _composition_table(machine.sockets, machine.cores_per_socket, n_threads)
+    return table[machine.sockets][n_threads]
+
+
+def enumerate_placements(
+    machine: MachineSpec,
+    n_threads: int,
+    *,
+    max_placements: int | None = None,
+    seed: int = 0,
+) -> Array:
+    """All (or a deterministic sample of) thread distributions over the
+    machine's sockets keeping one thread per core — the s >= 2
+    generalization of the paper's §6.2.2 sweep.
+
+    Placements are emitted in lexicographic order (socket-0 count
+    ascending), which at ``s = 2`` is exactly the classic ``[i, n - i]``
+    sweep.  When the composition count exceeds ``max_placements`` a
+    uniform sample of ranks (seeded, deterministic) is drawn and unranked
+    through the counting table, so huge 8-socket spaces never need to be
+    materialized.
+    """
+    s, cap = machine.sockets, machine.cores_per_socket
+    if not 0 <= n_threads <= s * cap:
+        raise ValueError(
+            f"{n_threads} threads do not fit {s} sockets x {cap} cores"
+        )
+    table = _composition_table(s, cap, n_threads)
+    total = table[s][n_threads]
+    if max_placements is not None and total > max_placements:
+        ranks: Sequence[int] = sorted(
+            _pyrandom.Random(seed).sample(range(total), max_placements)
+        )
+    else:
+        ranks = range(total)
+
+    out = np.empty((len(ranks), s), np.int32)
+    for row, rank in enumerate(ranks):
+        r, m = rank, n_threads
+        for k in range(s, 0, -1):
+            for j in range(min(cap, m) + 1):
+                c = table[k - 1][m - j]
+                if r < c:
+                    out[row, s - k] = j
+                    m -= j
+                    break
+                r -= c
+    return jnp.asarray(out)
+
+
+def sweep_placements(
+    machine: MachineSpec,
+    n_threads: int,
+    *,
+    max_placements: int | None = None,
+    seed: int = 0,
+) -> Array:
+    """All thread distributions that keep one thread per core (paper
+    §6.2.2: "varied the distribution of the threads between the two
+    sockets maintaining a single thread per core") — generalized to any
+    socket count via :func:`enumerate_placements`."""
+    return enumerate_placements(
+        machine, n_threads, max_placements=max_placements, seed=seed
     )
+
+
+# ---------------------------------------------------------------------------
+# The batched fit + predict engine
+# ---------------------------------------------------------------------------
 
 
 class AccuracyResult(NamedTuple):
@@ -54,12 +146,310 @@ class AccuracyResult(NamedTuple):
     signature: BandwidthSignature
 
 
+class BatchAccuracy(NamedTuple):
+    """`evaluate_batch` output: leading axis = benchmark (B), then placement."""
+
+    placements: Array  # (P, s)
+    errors_read: Array  # (B, P, 2s)
+    errors_write: Array  # (B, P, 2s)
+    errors_combined: Array  # (B, P, 2s)
+    total_bw: Array  # (B, P)
+    misfit: Array  # (B,)
+    signatures: BandwidthSignature  # leaves stacked over B
+    combined_signatures: BandwidthSignature  # leaves stacked over B
+
+
 def _direction_errors(sig_dir, placement, flows, local_meas, remote_meas):
     demand = flows.sum(axis=1)
     pred_local, pred_remote = predict_counters(sig_dir, demand, placement)
     return jnp.concatenate(
         [jnp.abs(pred_local - local_meas), jnp.abs(pred_remote - remote_meas)]
     )
+
+
+def _workload_arrays(wl: Workload) -> tuple[Array, ...]:
+    """The array fields of a Workload (everything but the name) — the jit
+    boundary cannot carry the string leaf."""
+    return tuple(wl[1:])
+
+
+def _as_workload_list(
+    workloads: Workload | Sequence[Workload],
+) -> list[Workload]:
+    wl_list = [workloads] if isinstance(workloads, Workload) else list(workloads)
+    n_threads = {w.n_threads for w in wl_list}
+    if len(n_threads) != 1:
+        raise ValueError(f"workloads must share a thread count, got {n_threads}")
+    return wl_list
+
+
+def _stack_workloads(wl_list: Sequence[Workload]) -> tuple[Array, ...]:
+    """Stack each array field over a leading benchmark axis."""
+    return tuple(
+        jnp.stack(parts)
+        for parts in zip(*(_workload_arrays(w) for w in wl_list))
+    )
+
+
+def _normalize_keys(keys: Array | None, n: int) -> Array:
+    """One PRNG key per workload: default PRNGKey(0), broadcast a single
+    key, pass a (n, 2) stack through."""
+    if keys is None:
+        return jnp.stack([jax.random.PRNGKey(0)] * n)
+    keys = jnp.asarray(keys)
+    if keys.ndim == 1:
+        keys = jnp.broadcast_to(keys, (n,) + keys.shape)
+    return keys
+
+
+def _fit_one(machine, arrays, prof_key, noise_std, background_bw):
+    wl = Workload("batched", *arrays)
+    sym, asym = profile_pair(
+        machine,
+        wl,
+        noise_std=noise_std,
+        background_bw=background_bw,
+        key=prof_key,
+    )
+    sig = fit_signature(sym, asym)
+    sig_combined = fit_signature(sym, asym, combined=True)
+    detector = misfit_score(sym, "read")
+    return sig, sig_combined, detector
+
+
+@partial(jax.jit, static_argnames=("machine", "noise_std", "background_bw"))
+def _evaluate_batch_jit(
+    machine: MachineSpec,
+    wl_arrays: tuple[Array, ...],  # leaves carry a leading benchmark axis B
+    placements: Array,  # (P, s)
+    base_keys: Array,  # (B, 2)
+    noise_std: float,
+    background_bw: float,
+):
+    """One trace: vmap over benchmarks of (fit, then vmap over placements
+    of predict-vs-measure)."""
+
+    def per_benchmark(arrays, base_key):
+        k_prof, k_meas = jax.random.split(base_key)
+        sig, sig_combined, detector = _fit_one(
+            machine, arrays, k_prof, noise_std, background_bw
+        )
+        wl = Workload("batched", *arrays)
+        keys = jax.random.split(k_meas, placements.shape[0])
+
+        def per_placement(placement, k):
+            res = simulate(
+                machine,
+                wl,
+                placement,
+                noise_std=noise_std,
+                background_bw=background_bw,
+                key=k,
+            )
+            total = res.read_flows.sum() + res.write_flows.sum()
+            total = jnp.maximum(total, 1e-9)
+            e_read = (
+                _direction_errors(
+                    sig.read,
+                    placement,
+                    res.read_flows,
+                    res.sample.local_read,
+                    res.sample.remote_read,
+                )
+                / total
+            )
+            e_write = (
+                _direction_errors(
+                    sig.write,
+                    placement,
+                    res.write_flows,
+                    res.sample.local_write,
+                    res.sample.remote_write,
+                )
+                / total
+            )
+            comb_flows = res.read_flows + res.write_flows
+            e_comb = (
+                _direction_errors(
+                    sig_combined.read,
+                    placement,
+                    comb_flows,
+                    res.sample.local_read + res.sample.local_write,
+                    res.sample.remote_read + res.sample.remote_write,
+                )
+                / total
+            )
+            return e_read, e_write, e_comb, total
+
+        e_read, e_write, e_comb, totals = jax.vmap(per_placement)(
+            placements, keys
+        )
+        return e_read, e_write, e_comb, totals, detector, sig, sig_combined
+
+    return jax.vmap(per_benchmark)(wl_arrays, base_keys)
+
+
+def evaluate_batch(
+    machine: MachineSpec,
+    workloads: Workload | Sequence[Workload],
+    placements: Array,
+    *,
+    noise_std: float = 0.0,
+    background_bw: float = 0.0,
+    keys: Array | None = None,
+) -> BatchAccuracy:
+    """Fit + predict every workload over every placement in ONE jitted,
+    doubly-vmapped trace.
+
+    ``keys`` is one PRNG key per workload (or a single key, split/shared
+    exactly like :func:`evaluate_accuracy` does); defaults to
+    ``PRNGKey(0)`` per workload.
+    """
+    wl_list = _as_workload_list(workloads)
+    keys = _normalize_keys(keys, len(wl_list))
+    placements = jnp.asarray(placements)
+
+    stacked = _stack_workloads(wl_list)
+    e_read, e_write, e_comb, totals, misfit, sigs, csigs = _evaluate_batch_jit(
+        machine, stacked, placements, keys, float(noise_std), float(background_bw)
+    )
+    result = BatchAccuracy(
+        placements=placements,
+        errors_read=e_read,
+        errors_write=e_write,
+        errors_combined=e_comb,
+        total_bw=totals,
+        misfit=misfit,
+        signatures=sigs,
+        combined_signatures=csigs,
+    )
+    # Cache under the *profiling* key each fit actually consumed (the batch
+    # trace splits its base key), so `fitted_signatures` — whose keys ARE
+    # profiling keys — agrees with these entries.
+    prof_keys = jax.vmap(lambda k: jax.random.split(k)[0])(keys)
+    for i, wl in enumerate(wl_list):
+        _cache_signatures(
+            machine,
+            wl,
+            noise_std,
+            background_bw,
+            prof_keys[i],
+            (
+                _tree_index(sigs, i),
+                _tree_index(csigs, i),
+                misfit[i],
+            ),
+        )
+    return result
+
+
+def _tree_index(tree, i: int):
+    return jax.tree.map(lambda x: x[i], tree)
+
+
+def _accuracy_from_batch(batch: BatchAccuracy, i: int) -> AccuracyResult:
+    return AccuracyResult(
+        placements=batch.placements,
+        errors_read=batch.errors_read[i],
+        errors_write=batch.errors_write[i],
+        errors_combined=batch.errors_combined[i],
+        total_bw=batch.total_bw[i],
+        misfit=batch.misfit[i],
+        signature=_tree_index(batch.signatures, i),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Fitted-signature cache
+# ---------------------------------------------------------------------------
+
+_SIG_CACHE: dict[tuple, tuple[BandwidthSignature, BandwidthSignature, Array]] = {}
+_SIG_CACHE_MAX = 4096
+
+
+def _workload_fingerprint(wl: Workload) -> tuple:
+    digest = hashlib.blake2b(digest_size=16)
+    for field in _workload_arrays(wl):
+        a = np.asarray(field)
+        digest.update(str(a.shape).encode())
+        digest.update(str(a.dtype).encode())
+        digest.update(a.tobytes())
+    return (wl.name, wl.n_threads, digest.hexdigest())
+
+
+def _cache_key(machine, wl, noise_std, background_bw, key) -> tuple:
+    return (
+        machine,
+        _workload_fingerprint(wl),
+        float(noise_std),
+        float(background_bw),
+        np.asarray(key).tobytes(),
+    )
+
+
+def _evict_cache_if_full() -> None:
+    if len(_SIG_CACHE) > _SIG_CACHE_MAX:
+        _SIG_CACHE.clear()
+
+
+def _cache_signatures(machine, wl, noise_std, background_bw, key, value) -> None:
+    _SIG_CACHE[_cache_key(machine, wl, noise_std, background_bw, key)] = value
+    _evict_cache_if_full()
+
+
+@partial(jax.jit, static_argnames=("machine", "noise_std", "background_bw"))
+def _fit_batch_jit(machine, wl_arrays, prof_keys, noise_std, background_bw):
+    def per_benchmark(arrays, prof_key):
+        return _fit_one(machine, arrays, prof_key, noise_std, background_bw)
+
+    return jax.vmap(per_benchmark)(wl_arrays, prof_keys)
+
+
+def fitted_signatures(
+    machine: MachineSpec,
+    workloads: Workload | Sequence[Workload],
+    *,
+    noise_std: float = 0.0,
+    background_bw: float = 0.0,
+    keys: Array | None = None,
+) -> list[tuple[BandwidthSignature, BandwidthSignature, Array]]:
+    """Cached 2-run fits: ``(signature, combined_signature, misfit)`` per
+    workload.  ``keys`` are the *profiling* keys handed straight to
+    ``profile_pair`` (the seed implementation's stream).  Cache key =
+    (machine, workload, noise, key); misses are fitted in a single
+    vmapped trace."""
+    wl_list = _as_workload_list(workloads)
+    keys = _normalize_keys(keys, len(wl_list))
+
+    cache_keys = [
+        _cache_key(machine, wl, noise_std, background_bw, keys[i])
+        for i, wl in enumerate(wl_list)
+    ]
+    results = {i: _SIG_CACHE[ck] for i, ck in enumerate(cache_keys) if ck in _SIG_CACHE}
+    missing = [i for i in range(len(wl_list)) if i not in results]
+    if missing:
+        stacked = _stack_workloads([wl_list[i] for i in missing])
+        sigs, csigs, mis = _fit_batch_jit(
+            machine,
+            stacked,
+            keys[jnp.asarray(missing)],
+            float(noise_std),
+            float(background_bw),
+        )
+        for row, i in enumerate(missing):
+            results[i] = (
+                _tree_index(sigs, row),
+                _tree_index(csigs, row),
+                mis[row],
+            )
+            _SIG_CACHE[cache_keys[i]] = results[i]
+        _evict_cache_if_full()
+    return [results[i] for i in range(len(wl_list))]
+
+
+# ---------------------------------------------------------------------------
+# Paper §6 drivers
+# ---------------------------------------------------------------------------
 
 
 def evaluate_accuracy(
@@ -69,78 +459,22 @@ def evaluate_accuracy(
     noise_std: float = 0.0,
     background_bw: float = 0.0,
     key: Array | None = None,
+    max_placements: int | None = None,
 ) -> AccuracyResult:
     if key is None:
         key = jax.random.PRNGKey(0)
-    k_prof, k_meas = jax.random.split(key)
-    sym, asym = profile_pair(
+    placements = sweep_placements(
+        machine, workload.n_threads, max_placements=max_placements
+    )
+    batch = evaluate_batch(
         machine,
-        workload,
+        [workload],
+        placements,
         noise_std=noise_std,
         background_bw=background_bw,
-        key=k_prof,
+        keys=jnp.stack([key]),
     )
-    sig = fit_signature(sym, asym)
-    sig_combined = fit_signature(sym, asym, combined=True)
-    detector = misfit_score(sym, "read")
-
-    placements = sweep_placements(machine, workload.n_threads)
-    keys = jax.random.split(k_meas, placements.shape[0])
-
-    def one(placement, k):
-        res = simulate(
-            machine,
-            workload,
-            placement,
-            noise_std=noise_std,
-            background_bw=background_bw,
-            key=k,
-        )
-        total = res.read_flows.sum() + res.write_flows.sum()
-        total = jnp.maximum(total, 1e-9)
-        e_read = (
-            _direction_errors(
-                sig.read,
-                placement,
-                res.read_flows,
-                res.sample.local_read,
-                res.sample.remote_read,
-            )
-            / total
-        )
-        e_write = (
-            _direction_errors(
-                sig.write,
-                placement,
-                res.write_flows,
-                res.sample.local_write,
-                res.sample.remote_write,
-            )
-            / total
-        )
-        comb_flows = res.read_flows + res.write_flows
-        e_comb = (
-            _direction_errors(
-                sig_combined.read,
-                placement,
-                comb_flows,
-                res.sample.local_read + res.sample.local_write,
-                res.sample.remote_read + res.sample.remote_write,
-            )
-            / total
-        )
-        return e_read, e_write, e_comb, total
-
-    e_read, e_write, e_comb, totals = jax.vmap(one)(placements, keys)
-    return AccuracyResult(
-        placements=placements,
-        errors_read=e_read,
-        errors_write=e_write,
-        errors_combined=e_comb,
-        total_bw=totals,
-        misfit=detector,
-        signature=sig,
-    )
+    return _accuracy_from_batch(batch, 0)
 
 
 class SuiteAccuracy(NamedTuple):
@@ -158,23 +492,25 @@ def evaluate_suite(
     noise_std: float = 0.0,
     include_violators: bool = True,
     seed: int = 0,
+    max_placements: int | None = None,
 ) -> SuiteAccuracy:
     """Fit + predict every suite benchmark over every placement — the
-    paper's "thousands of measurements" (§6.2.2)."""
+    paper's "thousands of measurements" (§6.2.2) — in a single jitted
+    ``evaluate_batch`` trace (no per-benchmark retracing)."""
     if n_threads is None:
         n_threads = machine.cores_per_socket  # largest single-socket count
     names = suite_names(include_violators)
     key = jax.random.PRNGKey(seed)
-    results: dict[str, AccuracyResult] = {}
-    chunks = []
-    for i, name in enumerate(names):
-        wl = benchmark_workload(name, n_threads)
-        res = evaluate_accuracy(
-            machine, wl, noise_std=noise_std, key=jax.random.fold_in(key, i)
-        )
-        results[name] = res
-        chunks.append(np.asarray(res.errors_combined).ravel())
-    all_errors = np.concatenate(chunks) * 100.0
+    workloads = [benchmark_workload(name, n_threads) for name in names]
+    keys = jnp.stack([jax.random.fold_in(key, i) for i in range(len(names))])
+    placements = sweep_placements(machine, n_threads, max_placements=max_placements)
+    batch = evaluate_batch(
+        machine, workloads, placements, noise_std=noise_std, keys=keys
+    )
+    results = {
+        name: _accuracy_from_batch(batch, i) for i, name in enumerate(names)
+    }
+    all_errors = np.asarray(batch.errors_combined).reshape(-1) * 100.0
     return SuiteAccuracy(
         names=names,
         per_benchmark=results,
@@ -204,28 +540,35 @@ def evaluate_stability(
     seed: int = 0,
 ) -> StabilityResult:
     """Fit each benchmark on both machines; report reallocated bandwidth
-    between the two signatures (paper Figures 13–15)."""
+    between the two signatures (paper Figures 13–15).  Each machine's
+    suite is fitted through one batched (cached) trace."""
     if n_threads_a is None:
         n_threads_a = machine_a.cores_per_socket
     if n_threads_b is None:
         n_threads_b = machine_b.cores_per_socket
     names = suite_names(include_violators)
     key = jax.random.PRNGKey(seed)
+    keys_a, keys_b = [], []
+    for i in range(len(names)):
+        ka, kb = jax.random.split(jax.random.fold_in(key, i))
+        keys_a.append(ka)
+        keys_b.append(kb)
+    wl_a = [benchmark_workload(name, n_threads_a) for name in names]
+    wl_b = [benchmark_workload(name, n_threads_b) for name in names]
+    fits_a = fitted_signatures(
+        machine_a, wl_a, noise_std=noise_std, keys=jnp.stack(keys_a)
+    )
+    fits_b = fitted_signatures(
+        machine_b, wl_b, noise_std=noise_std, keys=jnp.stack(keys_b)
+    )
+
     read_c, write_c, comb_c = {}, {}, {}
-    for i, name in enumerate(names):
-        k = jax.random.fold_in(key, i)
-        ka, kb = jax.random.split(k)
-        wa = benchmark_workload(name, n_threads_a)
-        wb = benchmark_workload(name, n_threads_b)
-        sym_a, asym_a = profile_pair(machine_a, wa, noise_std=noise_std, key=ka)
-        sym_b, asym_b = profile_pair(machine_b, wb, noise_std=noise_std, key=kb)
-        sig_a = fit_signature(sym_a, asym_a)
-        sig_b = fit_signature(sym_b, asym_b)
+    for name, (sig_a, csig_a, _), (sig_b, csig_b, _) in zip(
+        names, fits_a, fits_b
+    ):
         read_c[name] = float(signature_distance(sig_a.read, sig_b.read)) * 100
         write_c[name] = float(signature_distance(sig_a.write, sig_b.write)) * 100
-        ca = fit_signature(sym_a, asym_a, combined=True)
-        cb = fit_signature(sym_b, asym_b, combined=True)
-        comb_c[name] = float(signature_distance(ca.read, cb.read)) * 100
+        comb_c[name] = float(signature_distance(csig_a.read, csig_b.read)) * 100
     vals = np.asarray(list(comb_c.values()))
     return StabilityResult(
         names=names,

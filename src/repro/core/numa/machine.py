@@ -84,9 +84,50 @@ E5_2699_V3 = MachineSpec(
     core_rate=2.3e9,
 )
 
+# ---------------------------------------------------------------------------
+# Beyond-paper presets: 4- and 8-socket machines.  The paper's method is
+# derived for 2 sockets; these presets drive the generalized (s >= 2)
+# placement-sweep engine where NUMA effects are most severe.  The simulator
+# models every remote path with one capacity (no hop-count asymmetry), which
+# matches a fully QPI-connected quad-socket Haswell-EX; the glued 8-socket
+# topology is approximated the same way.
+# ---------------------------------------------------------------------------
+
+# Xeon E7-4830 v3: quad-socket Haswell-EX, 12 cores/socket, DDR4 behind the
+# memory buffer (lower local bandwidth than the 2-socket parts), fully
+# connected QPI.
+E7_4830_V3 = MachineSpec(
+    name="E7-4830v3-4s12c",
+    sockets=4,
+    cores_per_socket=12,
+    local_read_bw=46.0 * GB,
+    local_write_bw=25.0 * GB,
+    remote_read_bw=0.30 * 46.0 * GB,
+    remote_write_bw=0.40 * 25.0 * GB,
+    qpi_bw=19.2 * GB,
+    core_rate=2.1e9,
+)
+
+# Xeon E7-8860 v3: 8-socket Haswell-EX, 16 cores/socket.  Socket pairs
+# beyond the directly-linked ones route through node controllers; the
+# single per-pair capacity below is the effective per-pair share.
+E7_8860_V3 = MachineSpec(
+    name="E7-8860v3-8s16c",
+    sockets=8,
+    cores_per_socket=16,
+    local_read_bw=50.0 * GB,
+    local_write_bw=27.0 * GB,
+    remote_read_bw=0.35 * 50.0 * GB,
+    remote_write_bw=0.45 * 27.0 * GB,
+    qpi_bw=12.8 * GB,
+    core_rate=2.2e9,
+)
+
 MACHINES: dict[str, MachineSpec] = {
     E5_2630_V3.name: E5_2630_V3,
     E5_2699_V3.name: E5_2699_V3,
+    E7_4830_V3.name: E7_4830_V3,
+    E7_8860_V3.name: E7_8860_V3,
 }
 
 

@@ -24,6 +24,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import Array
 
 from repro.core.bwsig.counters import CounterSample, counters_from_flows
@@ -107,20 +108,20 @@ def _resource_tensor(
     ww_remote = ww * off_diag
 
     # Interconnect pairs (unordered): total remote bytes both directions.
-    pair_rows = []
-    pair_caps = []
-    for i in range(s):
-        for j in range(i + 1, s):
-            pair_rows.append(
-                rr_remote[:, i, j]
-                + rr_remote[:, j, i]
-                + ww_remote[:, i, j]
-                + ww_remote[:, j, i]
-            )
-            pair_caps.append(machine.qpi_bw)
-    qpi_usage = (
-        jnp.stack(pair_rows, axis=1) if pair_rows else jnp.zeros((n, 0))
-    )
+    # Vectorized pair-index gather — the (i, j) upper-triangle indices are
+    # static, so this stays a fixed-shape ``(n, s*(s-1)/2)`` slab that jit
+    # and vmap handle identically for any socket count.
+    pair_i, pair_j = np.triu_indices(s, k=1)
+    n_pairs = pair_i.shape[0]
+    if n_pairs:
+        qpi_usage = (
+            rr_remote[:, pair_i, pair_j]
+            + rr_remote[:, pair_j, pair_i]
+            + ww_remote[:, pair_i, pair_j]
+            + ww_remote[:, pair_j, pair_i]
+        )
+    else:
+        qpi_usage = jnp.zeros((n, 0))
 
     usage = jnp.concatenate(
         [
@@ -146,9 +147,7 @@ def _resource_tensor(
             machine.bank_write_caps(),
             remote_read_caps,
             remote_write_caps,
-            jnp.asarray(pair_caps, jnp.float32)
-            if pair_caps
-            else jnp.zeros((0,)),
+            jnp.full((n_pairs,), machine.qpi_bw, jnp.float32),
         ]
     )
     return usage, caps
@@ -278,9 +277,9 @@ def asymmetric_placement(machine: MachineSpec, n_threads: int) -> Array:
     assert rest >= 1, "asymmetric run needs at least one thread elsewhere"
     others = [rest // (s - 1)] * (s - 1)
     others[0] += rest - sum(others)
-    placement = jnp.asarray([first] + others, jnp.int32)
-    assert int(placement.max()) <= machine.cores_per_socket
-    return placement
+    counts = [first] + others
+    assert max(counts) <= machine.cores_per_socket
+    return jnp.asarray(counts, jnp.int32)
 
 
 def profile_pair(

@@ -1,0 +1,244 @@
+"""The batched multi-socket placement-sweep engine (beyond-paper s >= 2).
+
+Covers the composition enumerator (exactness, budget subsampling, s = 2
+reduction to the paper's ``[i, n - i]`` sweep), the ``evaluate_batch``
+equivalence with per-placement simulation on a 4-socket machine, the
+single-trace guarantee behind ``evaluate_suite``, and the fitted-signature
+cache."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core.bwsig import fit_signature, misfit_score, predict_counters
+from repro.core.numa import (
+    E5_2630_V3,
+    E5_2699_V3,
+    E7_4830_V3,
+    E7_8860_V3,
+    make_machine,
+    mixed_workload,
+    profile_pair,
+    simulate,
+)
+from repro.core.numa.benchmarks import benchmark_workload
+from repro.core.numa.evaluate import (
+    _evaluate_batch_jit,
+    count_placements,
+    enumerate_placements,
+    evaluate_accuracy,
+    evaluate_batch,
+    evaluate_suite,
+    fitted_signatures,
+    sweep_placements,
+)
+
+# ---------------------------------------------------------------------------
+# enumerator properties
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("machine", [E5_2630_V3, E7_4830_V3, E7_8860_V3])
+@pytest.mark.parametrize("n_threads", [1, 8, 16])
+def test_enumeration_is_exact_and_valid(machine, n_threads):
+    p = np.asarray(enumerate_placements(machine, n_threads, max_placements=400))
+    assert p.shape[0] >= 1
+    assert (p.sum(axis=1) == n_threads).all()
+    assert p.min() >= 0 and p.max() <= machine.cores_per_socket
+    # no duplicates (subsampling draws ranks without replacement)
+    assert len({tuple(row) for row in p.tolist()}) == p.shape[0]
+
+
+@pytest.mark.parametrize("n_threads", [1, 5, 8, 12, 16])
+def test_s2_reduces_to_legacy_pair_sweep(n_threads):
+    """At s = 2 the generalized enumerator must emit exactly the paper's
+    ``[i, n - i]`` sweep, in the same order."""
+    machine = E5_2630_V3
+    cores = machine.cores_per_socket
+    lo, hi = max(0, n_threads - cores), min(cores, n_threads)
+    legacy = [[i, n_threads - i] for i in range(lo, hi + 1)]
+    got = np.asarray(sweep_placements(machine, n_threads)).tolist()
+    assert got == legacy
+
+
+def test_count_matches_enumeration_and_budget_is_deterministic():
+    machine = E7_4830_V3
+    total = count_placements(machine, 10)
+    full = np.asarray(enumerate_placements(machine, 10))
+    assert full.shape == (total, 4)
+    a = np.asarray(enumerate_placements(machine, 10, max_placements=50, seed=3))
+    b = np.asarray(enumerate_placements(machine, 10, max_placements=50, seed=3))
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (50, 4)
+    # the sample is a subset of the full enumeration
+    full_set = {tuple(r) for r in full.tolist()}
+    assert all(tuple(r) in full_set for r in a.tolist())
+
+
+def test_enumerate_rejects_impossible_thread_counts():
+    with pytest.raises(ValueError):
+        enumerate_placements(E5_2630_V3, 17)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_threads=st.integers(1, 32),
+    sockets=st.integers(2, 5),
+    cores=st.integers(2, 8),
+)
+def test_property_compositions_sum_and_bound(n_threads, sockets, cores):
+    machine = make_machine("prop", sockets=sockets, cores_per_socket=cores)
+    if n_threads > sockets * cores:
+        with pytest.raises(ValueError):
+            enumerate_placements(machine, n_threads)
+        return
+    p = np.asarray(enumerate_placements(machine, n_threads, max_placements=64))
+    assert (p.sum(axis=1) == n_threads).all()
+    assert p.min() >= 0 and p.max() <= cores
+
+
+# ---------------------------------------------------------------------------
+# evaluate_batch equivalence with per-placement simulate on 4 sockets
+# ---------------------------------------------------------------------------
+
+
+def _manual_accuracy(machine, workload, placements, key):
+    """The seed implementation's per-placement math, written out longhand."""
+    k_prof, k_meas = jax.random.split(key)
+    sym, asym = profile_pair(machine, workload, key=k_prof)
+    sig = fit_signature(sym, asym)
+    sig_c = fit_signature(sym, asym, combined=True)
+    keys = jax.random.split(k_meas, placements.shape[0])
+
+    rows = []
+    for placement, k in zip(placements, keys):
+        res = simulate(machine, workload, placement, key=k)
+        total = float(res.read_flows.sum() + res.write_flows.sum())
+        total = max(total, 1e-9)
+        comb_flows = res.read_flows + res.write_flows
+        demand = comb_flows.sum(axis=1)
+        pred_l, pred_r = predict_counters(sig_c.read, demand, placement)
+        err = jnp.concatenate(
+            [
+                jnp.abs(pred_l - (res.sample.local_read + res.sample.local_write)),
+                jnp.abs(pred_r - (res.sample.remote_read + res.sample.remote_write)),
+            ]
+        )
+        rows.append(np.asarray(err) / total)
+    return np.stack(rows), sig
+
+
+def test_evaluate_batch_equals_per_placement_simulate_4socket():
+    machine = E7_4830_V3
+    wl = benchmark_workload("CG", 16)
+    placements = enumerate_placements(machine, 16, max_placements=16, seed=1)
+    key = jax.random.PRNGKey(7)
+
+    with jax.disable_jit():  # eager == eager must be exact
+        batch = evaluate_batch(machine, wl, placements, keys=key)
+        manual, manual_sig = _manual_accuracy(machine, wl, placements, key)
+        np.testing.assert_array_equal(np.asarray(batch.errors_combined[0]), manual)
+
+    # the jitted trace agrees to float tolerance (XLA fusion reorders ops)
+    batch_jit = evaluate_batch(machine, wl, placements, keys=key)
+    np.testing.assert_allclose(
+        np.asarray(batch_jit.errors_combined[0]), manual, atol=1e-5
+    )
+    # fitted signature round-trips through the batch path too
+    sig = jax.tree.map(lambda x: x[0], batch_jit.signatures)
+    for got, want in zip(jax.tree.leaves(sig), jax.tree.leaves(manual_sig)):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_accuracy_is_noise_free_exact_on_4_and_8_sockets():
+    """The §6.2.2 anchor generalized: with perfect counters and an in-model
+    workload, predictions must match measurements on any socket count."""
+    for machine in (E7_4830_V3, E7_8860_V3):
+        wl = benchmark_workload("Swim", machine.cores_per_socket)
+        res = evaluate_accuracy(machine, wl, max_placements=40)
+        assert float(np.asarray(res.errors_combined).max()) < 2e-3, machine.name
+
+
+def test_evaluate_suite_uses_single_trace():
+    """All benchmarks of a suite evaluation must flow through ONE
+    compilation of the batched engine (no per-benchmark retracing)."""
+    machine = E5_2699_V3
+    before = _evaluate_batch_jit._cache_size()
+    r = evaluate_suite(machine, 8, noise_std=0.02, seed=11)
+    after = _evaluate_batch_jit._cache_size()
+    assert after - before <= 1
+    assert len(r.names) == 23
+    assert r.all_errors.size == 23 * 9 * 4  # benchmarks x placements x 2s
+
+
+def test_suite_median_error_on_4socket_machine():
+    """The paper's headline protocol on a 4-socket box: ≥500 placements,
+    median model error reported and inside the paper's 2.34% band."""
+    r = evaluate_suite(
+        E7_4830_V3,
+        2 * E7_4830_V3.cores_per_socket,
+        noise_std=0.02,
+        include_violators=False,
+        max_placements=30,
+    )
+    n_placements = count_placements(E7_4830_V3, 2 * E7_4830_V3.cores_per_socket)
+    assert n_placements >= 500  # the full sweep space is paper-scale
+    assert r.all_errors.size > 1000
+    assert 0.0 < r.median_error_pct < 2.34
+
+
+def test_fitted_signature_cache_hits():
+    machine = E5_2630_V3
+    wl = mixed_workload("cache-me", 8, read_mix=(0.3, 0.3, 0.2))
+    a = fitted_signatures(machine, wl)[0]
+    b = fitted_signatures(machine, wl)[0]
+    assert a[0] is b[0]  # identical object => served from the cache
+    # different noise is a different key
+    c = fitted_signatures(machine, wl, noise_std=0.01)[0]
+    assert c[0] is not a[0]
+
+
+def test_vectorized_pair_resources_match_legacy_loop():
+    """The vectorized interconnect-pair formulation must reproduce the
+    seed's python-loop values for any socket count."""
+    from repro.core.numa.simulator import _resource_tensor, _thread_sockets
+
+    machine = E7_8860_V3
+    n_threads = 16
+    rng = np.random.default_rng(0)
+    read_unit = jnp.asarray(rng.uniform(0, 1e9, (n_threads, machine.sockets)), jnp.float32)
+    write_unit = jnp.asarray(rng.uniform(0, 1e9, (n_threads, machine.sockets)), jnp.float32)
+    n_per = jnp.asarray([4, 4, 2, 2, 2, 1, 1, 0], jnp.int32)
+    socket_of = _thread_sockets(n_per, n_threads)
+    usage, caps = _resource_tensor(machine, read_unit, write_unit, socket_of)
+
+    s = machine.sockets
+    onehot = jax.nn.one_hot(socket_of, s)
+    rr = onehot[:, :, None] * read_unit[:, None, :]
+    ww = onehot[:, :, None] * write_unit[:, None, :]
+    off = (1.0 - jnp.eye(s))[None, :, :]
+    rr_remote, ww_remote = rr * off, ww * off
+    pair_rows, pair_caps = [], []
+    for i in range(s):
+        for j in range(i + 1, s):
+            pair_rows.append(
+                rr_remote[:, i, j] + rr_remote[:, j, i]
+                + ww_remote[:, i, j] + ww_remote[:, j, i]
+            )
+            pair_caps.append(machine.qpi_bw)
+    legacy_pairs = jnp.stack(pair_rows, axis=1)
+    n_pair = len(pair_caps)
+    np.testing.assert_array_equal(
+        np.asarray(usage[:, -n_pair:]), np.asarray(legacy_pairs)
+    )
+    np.testing.assert_array_equal(np.asarray(caps[-n_pair:]), np.asarray(pair_caps))
+
+
+def test_misfit_detector_still_flags_violators_on_4socket():
+    good = benchmark_workload("Swim", 16)
+    bad = benchmark_workload("Page rank", 16)
+    m_good = float(misfit_score(profile_pair(E7_4830_V3, good)[0], "read"))
+    m_bad = float(misfit_score(profile_pair(E7_4830_V3, bad)[0], "read"))
+    assert m_bad > 10 * (m_good + 1e-6)
