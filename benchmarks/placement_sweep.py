@@ -1,8 +1,6 @@
 """Throughput benchmark for the batched multi-socket placement-sweep engine.
 
-Sweeps every one-thread-per-core placement on the quad-socket preset
-(1469 compositions of 24 threads over 4 x 12 cores — the paper's §6.2.2
-protocol at beyond-paper socket count) through the single jitted
+Sweeps one-thread-per-core placements through the single jitted
 ``evaluate_batch`` trace and reports
 
 * placements/sec (fit + simulate + predict + error, per placement,
@@ -10,14 +8,23 @@ protocol at beyond-paper socket count) through the single jitted
 * the median model error as % of run bandwidth (paper's headline metric:
   2.34% at s = 2).
 
+Two machines are swept: the fully-connected quad-socket preset (1469
+compositions of 24 threads — the paper's §6.2.2 protocol at beyond-paper
+socket count) and the glued 8-socket preset, whose node-controller
+topology routes cross-quad traffic over 2 links (a deterministic budget
+samples its combinatorial placement space).
+
 Run directly:
 
-    PYTHONPATH=src python benchmarks/placement_sweep.py
+    PYTHONPATH=src python benchmarks/placement_sweep.py [--json OUT.json]
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import time
+from pathlib import Path
 
 import jax
 import numpy as np
@@ -30,6 +37,7 @@ def numa_placement_sweep(
     benchmarks: tuple[str, ...] = ("Swim", "CG", "EP", "NPO"),
     noise_std: float = 0.02,
     min_placements: int = 500,
+    max_placements: int | None = None,
 ) -> tuple[float, dict]:
     """Returns ``(placements_per_sec, details)`` for the harness."""
     from repro.core.numa import E7_4830_V3
@@ -41,7 +49,9 @@ def numa_placement_sweep(
     if n_threads is None:
         n_threads = 2 * machine.cores_per_socket  # the largest sweep space
 
-    placements = sweep_placements(machine, n_threads)
+    placements = sweep_placements(
+        machine, n_threads, max_placements=max_placements
+    )
     n_p = placements.shape[0]
     assert n_p >= min_placements, (n_p, min_placements)
     workloads = [benchmark_workload(b, n_threads) for b in benchmarks]
@@ -67,6 +77,9 @@ def numa_placement_sweep(
     errors_pct = np.asarray(batch.errors_combined).reshape(-1) * 100.0
     details = {
         "machine": machine.name,
+        "topology": machine.topology.name,
+        "n_links": machine.n_links,
+        "max_hops": machine.topology.max_hops,
         "sockets": machine.sockets,
         "n_threads": n_threads,
         "placements": n_p,
@@ -79,11 +92,55 @@ def numa_placement_sweep(
     return evaluated / steady_s, details
 
 
+def glued8s_placement_sweep(
+    *, max_placements: int = 512, **kwargs
+) -> tuple[float, dict]:
+    """The routed 8-socket sweep: cross-quad flows charge both links of
+    their node-controller route and pay the per-hop remote attenuation."""
+    from repro.core.numa import E7_8860_V3
+
+    kwargs.setdefault("min_placements", min(500, max_placements))
+    return numa_placement_sweep(
+        E7_8860_V3, max_placements=max_placements, **kwargs
+    )
+
+
 def main() -> None:
-    pps, details = numa_placement_sweep()
-    print(f"placements/sec: {pps:,.0f}")
-    for k, v in details.items():
-        print(f"  {k}: {v}")
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--json",
+        type=Path,
+        default=None,
+        help="write results as a JSON artifact (for CI upload/trending)",
+    )
+    parser.add_argument(
+        "--glued-max-placements",
+        type=int,
+        default=512,
+        help="deterministic placement budget for the 8-socket sweep",
+    )
+    args = parser.parse_args()
+
+    records = []
+    for label, fn in (
+        ("4-socket fully-connected", numa_placement_sweep),
+        (
+            "8-socket glued (routed)",
+            lambda: glued8s_placement_sweep(
+                max_placements=args.glued_max_placements
+            ),
+        ),
+    ):
+        pps, details = fn()
+        records.append({"sweep": label, "placements_per_sec": round(pps, 1), **details})
+        print(f"{label}: placements/sec: {pps:,.0f}")
+        for k, v in details.items():
+            print(f"  {k}: {v}")
+
+    if args.json is not None:
+        args.json.parent.mkdir(parents=True, exist_ok=True)
+        args.json.write_text(json.dumps(records, indent=2) + "\n")
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

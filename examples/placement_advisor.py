@@ -94,6 +94,37 @@ def numa_multisocket_demo() -> None:
         )
 
 
+def numa_glued8s_demo() -> None:
+    """Hop-aware ranking on the glued 8-socket preset: cross-quad traffic
+    routes over node-controller links (2 hops), so the advisor separates
+    placements the old single-``qpi_bw`` model scored identically."""
+    import jax.numpy as jnp
+
+    from repro.core.meshsig.advisor import rank_numa_placements
+    from repro.core.numa import E7_8860_V3, mixed_workload, simulate
+
+    machine = E7_8860_V3
+    hops = machine.topology.hop_matrix()
+    print(
+        f"\nNUMA advisor on {machine.name}: topology={machine.topology.name} "
+        f"({machine.n_links} links, max {machine.topology.max_hops} hops)"
+    )
+    wl = mixed_workload("app8", 32, read_mix=(0.3, 0.2, 0.2), read_bpi=2.5)
+    ranked = rank_numa_placements(machine, wl, max_placements=400, top_k=None)
+    for label, r in (("best", ranked[0]), ("worst", ranked[-1])):
+        p = jnp.asarray(r.placement, jnp.int32)
+        thr = float(simulate(machine, wl, p).throughput)
+        used = [i for i, v in enumerate(r.placement) if v]
+        max_hop = max(
+            (int(hops[i, j]) for i in used for j in used if i != j), default=0
+        )
+        print(
+            f"  {label}: {r.placement}  predicted-throughput="
+            f"{r.predicted_throughput:.2f}  max-hops-used={max_hop}  "
+            f"measured-throughput={thr:.2f}"
+        )
+
+
 def main() -> None:
     recs = sorted(RESULTS.glob("meshsig_validation__*.json"))
     if recs:
@@ -102,6 +133,7 @@ def main() -> None:
         print("(no mesh validation artifact; showing the NUMA advisor)")
     numa_demo()
     numa_multisocket_demo()
+    numa_glued8s_demo()
 
 
 if __name__ == "__main__":

@@ -102,12 +102,21 @@ def _placement_scores(  # bpi weights stay traced: one compile per machine
     matrices the way §4 applies a signature (demand follows thread count),
     divide by every resource capacity, and bound the achievable rate by
     the worst utilization — the NUMA analogue of the mesh advisor's
-    max-term step-time bound."""
+    max-term step-time bound.
+
+    Remote utilization is hop-aware: each ordered pair is scored against
+    its per-pair (hop-attenuated) path capacity, and interconnect traffic
+    is charged to every *link* on the pair's static route, so placements
+    that push flow across a glued machine's node controllers rank below
+    ones keeping traffic inside a quad."""
     from repro.core.bwsig import placement_matrix
 
-    s = machine.sockets
-    off = 1.0 - jnp.eye(s)
-    pair_i, pair_j = np.triu_indices(s, k=1)
+    # Per-pair remote path caps (inf diagonal) and the static pair->link
+    # routing incidence; both are compile-time constants per machine.
+    rr_caps = machine.remote_read_caps()
+    ww_caps = machine.remote_write_caps()
+    route_inc = jnp.asarray(machine.topology.route_incidence())  # (s*s, L)
+    link_caps = machine.link_caps()
 
     def one(p):
         n = p.astype(jnp.float32)
@@ -120,14 +129,14 @@ def _placement_scores(  # bpi weights stay traced: one compile per machine
         utils = [
             flows_r.sum(0) / machine.local_read_bw,
             flows_w.sum(0) / machine.local_write_bw,
-            (flows_r * off / machine.remote_read_bw).reshape(-1),
-            (flows_w * off / machine.remote_write_bw).reshape(-1),
+            (flows_r / rr_caps).reshape(-1),
+            (flows_w / ww_caps).reshape(-1),
         ]
-        if len(pair_i):
-            cross = flows_r * off + flows_w * off
-            utils.append(
-                (cross[pair_i, pair_j] + cross[pair_j, pair_i]) / machine.qpi_bw
-            )
+        if machine.n_links:
+            # diagonal (self) pairs have empty routes => all-zero incidence
+            # rows, so local flows drop out of the link charge on their own
+            cross = (flows_r + flows_w).reshape(-1)
+            utils.append((cross @ route_inc) / link_caps)
         worst = jnp.concatenate(utils).max()
         rate = jnp.minimum(1.0, 1.0 / jnp.maximum(worst, 1e-9))
         throughput = n.sum() * rate

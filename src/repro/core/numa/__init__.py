@@ -5,7 +5,8 @@ the paper's experimental substrate is rebuilt as a simulator that
 
 * solves the max-min-fair bandwidth-saturation steady state of a
   parameterized multi-socket machine (progressive filling over banks,
-  remote paths, the interconnect and core issue rates), and
+  hop-attenuated remote paths, the per-link routed interconnect topology
+  and core issue rates), and
 * emits exactly the counters the paper's method reads (bank-perspective
   local/remote reads/writes + per-socket instructions + elapsed time),
   with configurable measurement noise and background traffic.
@@ -15,6 +16,14 @@ bandwidth ratios.  Everything is ``jit``/``vmap``-able so the paper's
 "thousands of measurements" evaluation runs as a single batched call.
 """
 
+from repro.core.numa.topology import (
+    Topology,
+    from_bandwidth_matrix,
+    fully_connected,
+    glued_8s,
+    mesh2d,
+    ring,
+)
 from repro.core.numa.machine import (
     MachineSpec,
     E5_2630_V3,
@@ -35,6 +44,12 @@ from repro.core.numa.simulator import (
 )
 
 __all__ = [
+    "Topology",
+    "from_bandwidth_matrix",
+    "fully_connected",
+    "glued_8s",
+    "mesh2d",
+    "ring",
     "MachineSpec",
     "E5_2630_V3",
     "E5_2699_V3",

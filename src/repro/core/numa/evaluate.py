@@ -378,8 +378,12 @@ def _workload_fingerprint(wl: Workload) -> tuple:
 
 
 def _cache_key(machine, wl, noise_std, background_bw, key) -> tuple:
+    # The machine is content-addressed through its fingerprint: topology
+    # tables (tuple-canonicalized from whatever array form they were built
+    # with) are digested alongside the scalar fields, so two specs with
+    # identical link matrices and routes share cache entries.
     return (
-        machine,
+        machine.fingerprint(),
         _workload_fingerprint(wl),
         float(noise_std),
         float(background_bw),

@@ -14,14 +14,30 @@ figure); the values below use public STREAM-class measurements for
 quad-channel DDR4-1866/2133 Haswell parts and apply the paper's exact
 remote/local ratios.  The *model* never sees these constants — they only
 shape the simulated ground truth.
+
+Beyond the paper, every machine carries a :class:`Topology` — a per-link
+interconnect bandwidth matrix with static shortest-path routing — instead
+of the single scalar ``qpi_bw`` the 2-socket formulation used.  Remote
+path capacities become per-ordered-pair, attenuated per extra hop
+(``hop_attenuation``), and interconnect capacity is enforced per *link*
+with multi-hop traffic charging every link it crosses.  For a
+fully-connected topology (every pair 1 hop) this degenerates exactly to
+the old scalar model.  All fields stay hashable python scalars / nested
+tuples, so a ``MachineSpec`` remains a valid ``jax.jit`` static argument
+and cache-key component; array-valued topology input is canonicalized at
+construction and :meth:`MachineSpec.fingerprint` digests every field for
+content-addressed caches.
 """
 
 from __future__ import annotations
 
+import hashlib
 from typing import NamedTuple
 
 import jax.numpy as jnp
 from jax import Array
+
+from repro.core.numa.topology import Topology, fully_connected, glued_8s
 
 GB = 1e9
 
@@ -29,9 +45,12 @@ GB = 1e9
 class MachineSpec(NamedTuple):
     """A multi-socket NUMA machine.
 
-    Bandwidth capacities are bytes/s.  ``remote_*_bw`` caps each ordered
-    socket pair's path (remote controller + interconnect direction);
-    ``qpi_bw`` caps the total traffic crossing each unordered socket pair.
+    Bandwidth capacities are bytes/s.  ``remote_read_bw``/``remote_write_bw``
+    cap each *one-hop* ordered socket pair's path (remote controller +
+    interconnect direction); pairs whose route is longer are attenuated by
+    ``hop_attenuation`` per extra hop (:meth:`remote_read_caps`).  The
+    interconnect itself is ``topology``: per-link capacities plus static
+    routes, with every link on a route charged the full flow.
     ``core_rate`` is instructions/s per thread at full speed.
     """
 
@@ -42,18 +61,64 @@ class MachineSpec(NamedTuple):
     local_write_bw: float
     remote_read_bw: float
     remote_write_bw: float
-    qpi_bw: float
     core_rate: float
+    topology: Topology
+    hop_attenuation: float = 1.0
 
     @property
     def total_cores(self) -> int:
         return self.sockets * self.cores_per_socket
+
+    @property
+    def n_links(self) -> int:
+        return self.topology.n_links
 
     def bank_read_caps(self) -> Array:
         return jnp.full((self.sockets,), self.local_read_bw)
 
     def bank_write_caps(self) -> Array:
         return jnp.full((self.sockets,), self.local_write_bw)
+
+    def link_caps(self) -> Array:
+        """Per-link interconnect capacities, ``(n_links,)``."""
+        return jnp.asarray(self.topology.link_bw, jnp.float32)
+
+    def _remote_caps(self, base: float) -> Array:
+        hops = jnp.asarray(self.topology.hop_matrix(), jnp.float32)
+        att = jnp.asarray(self.hop_attenuation, jnp.float32) ** jnp.maximum(
+            hops - 1.0, 0.0
+        )
+        return jnp.where(hops == 0, jnp.inf, base * att)
+
+    def remote_read_caps(self) -> Array:
+        """``(s, s)`` per-ordered-pair remote read capacity: ``inf`` on the
+        diagonal, the 1-hop cap attenuated per extra routed hop elsewhere."""
+        return self._remote_caps(self.remote_read_bw)
+
+    def remote_write_caps(self) -> Array:
+        return self._remote_caps(self.remote_write_bw)
+
+    def fingerprint(self) -> str:
+        """Content digest over every field (topology included) — the
+        machine component of signature-cache keys, stable across processes
+        and robust to array-valued topology input (canonicalized to
+        tuples at construction)."""
+        digest = hashlib.blake2b(digest_size=16)
+        for part in (
+            self.name,
+            self.sockets,
+            self.cores_per_socket,
+            self.local_read_bw,
+            self.local_write_bw,
+            self.remote_read_bw,
+            self.remote_write_bw,
+            self.core_rate,
+            self.hop_attenuation,
+            self.topology,
+        ):
+            digest.update(repr(part).encode())
+            digest.update(b"\x1f")  # field separator: '325.0' != '32','5.0'
+        return digest.hexdigest()
 
 
 # Xeon E5-2630 v3: 8 cores, 2.4 GHz, DDR4-1866.  The cheap machine whose
@@ -66,8 +131,8 @@ E5_2630_V3 = MachineSpec(
     local_write_bw=28.0 * GB,
     remote_read_bw=0.16 * 52.0 * GB,  # paper ratio 0.16
     remote_write_bw=0.23 * 28.0 * GB,  # paper ratio 0.23
-    qpi_bw=16.0 * GB,
     core_rate=2.4e9,
+    topology=fully_connected(2, 16.0 * GB),  # one QPI link
 )
 
 # Xeon E5-2699 v3: 18 cores, 2.3 GHz, DDR4-2133.  The expensive machine that
@@ -80,22 +145,19 @@ E5_2699_V3 = MachineSpec(
     local_write_bw=34.0 * GB,
     remote_read_bw=0.59 * 62.0 * GB,  # paper ratio 0.59
     remote_write_bw=0.83 * 34.0 * GB,  # paper ratio 0.83
-    qpi_bw=51.2 * GB,
     core_rate=2.3e9,
+    topology=fully_connected(2, 51.2 * GB),
 )
 
 # ---------------------------------------------------------------------------
 # Beyond-paper presets: 4- and 8-socket machines.  The paper's method is
 # derived for 2 sockets; these presets drive the generalized (s >= 2)
-# placement-sweep engine where NUMA effects are most severe.  The simulator
-# models every remote path with one capacity (no hop-count asymmetry), which
-# matches a fully QPI-connected quad-socket Haswell-EX; the glued 8-socket
-# topology is approximated the same way.
+# placement-sweep engine where NUMA effects are most severe.
 # ---------------------------------------------------------------------------
 
 # Xeon E7-4830 v3: quad-socket Haswell-EX, 12 cores/socket, DDR4 behind the
 # memory buffer (lower local bandwidth than the 2-socket parts), fully
-# connected QPI.
+# connected QPI — every remote pair is one hop.
 E7_4830_V3 = MachineSpec(
     name="E7-4830v3-4s12c",
     sockets=4,
@@ -104,13 +166,15 @@ E7_4830_V3 = MachineSpec(
     local_write_bw=25.0 * GB,
     remote_read_bw=0.30 * 46.0 * GB,
     remote_write_bw=0.40 * 25.0 * GB,
-    qpi_bw=19.2 * GB,
     core_rate=2.1e9,
+    topology=fully_connected(4, 19.2 * GB),
 )
 
-# Xeon E7-8860 v3: 8-socket Haswell-EX, 16 cores/socket.  Socket pairs
-# beyond the directly-linked ones route through node controllers; the
-# single per-pair capacity below is the effective per-pair share.
+# Xeon E7-8860 v3: 8-socket Haswell-EX built from two fully QPI-meshed
+# quads glued by node controllers.  Twin sockets (i, i+4) are one
+# controller hop apart; every other cross-quad pair routes over 2 hops
+# (QPI + controller), charging both links and paying the per-hop
+# attenuation on its remote-path capacity.
 E7_8860_V3 = MachineSpec(
     name="E7-8860v3-8s16c",
     sockets=8,
@@ -119,8 +183,9 @@ E7_8860_V3 = MachineSpec(
     local_write_bw=27.0 * GB,
     remote_read_bw=0.35 * 50.0 * GB,
     remote_write_bw=0.45 * 27.0 * GB,
-    qpi_bw=12.8 * GB,
     core_rate=2.2e9,
+    topology=glued_8s(qpi_bw=12.8 * GB, nc_bw=9.6 * GB),
+    hop_attenuation=0.8,
 )
 
 MACHINES: dict[str, MachineSpec] = {
@@ -141,9 +206,21 @@ def make_machine(
     remote_write_ratio: float = 0.5,
     qpi_bw: float = 32.0 * GB,
     core_rate: float = 2.4e9,
+    topology: Topology | None = None,
+    hop_attenuation: float = 1.0,
 ) -> MachineSpec:
     """Build a custom machine from local bandwidths and remote/local ratios
-    (the way the paper characterizes its systems)."""
+    (the way the paper characterizes its systems).  Without an explicit
+    ``topology`` every socket pair gets a direct ``qpi_bw`` link (the old
+    scalar-interconnect behaviour); pass a :class:`Topology` — or build one
+    with :func:`repro.core.numa.topology.from_bandwidth_matrix` — for
+    routed machines."""
+    if topology is None:
+        topology = fully_connected(sockets, qpi_bw)
+    if topology.n_nodes != sockets:
+        raise ValueError(
+            f"topology has {topology.n_nodes} nodes for {sockets} sockets"
+        )
     return MachineSpec(
         name=name,
         sockets=sockets,
@@ -152,6 +229,7 @@ def make_machine(
         local_write_bw=local_write_bw,
         remote_read_bw=remote_read_ratio * local_read_bw,
         remote_write_bw=remote_write_ratio * local_write_bw,
-        qpi_bw=qpi_bw,
         core_rate=core_rate,
+        topology=topology,
+        hop_attenuation=hop_attenuation,
     )

@@ -93,11 +93,17 @@ def _resource_tensor(
     capacity vector ``caps[r]``.
 
     Resources: bank read caps (s), bank write caps (s), remote read paths
-    (s*s, diagonal unconstrained), remote write paths (s*s), interconnect
-    pairs (s*(s-1)/2).
+    (s*s, diagonal unconstrained, per-pair hop-attenuated capacity), remote
+    write paths (s*s), interconnect *links* (n_links): a flow from socket
+    ``i`` to bank ``j`` charges every link on ``route(i, j)``.
+
+    The routing structure is static (python tuples on the machine), so the
+    link slab keeps a fixed ``(n, n_links)`` shape that jit and vmap handle
+    identically for any socket count or topology.
     """
     s = machine.sockets
     n = socket_of.shape[0]
+    topo = machine.topology
     onehot = jax.nn.one_hot(socket_of, s)  # (n, s)
 
     # (n, s, s): thread t's flow from its socket i to bank j.
@@ -107,21 +113,28 @@ def _resource_tensor(
     rr_remote = rr * off_diag
     ww_remote = ww * off_diag
 
-    # Interconnect pairs (unordered): total remote bytes both directions.
-    # Vectorized pair-index gather — the (i, j) upper-triangle indices are
-    # static, so this stays a fixed-shape ``(n, s*(s-1)/2)`` slab that jit
-    # and vmap handle identically for any socket count.
-    pair_i, pair_j = np.triu_indices(s, k=1)
-    n_pairs = pair_i.shape[0]
-    if n_pairs:
-        qpi_usage = (
-            rr_remote[:, pair_i, pair_j]
-            + rr_remote[:, pair_j, pair_i]
-            + ww_remote[:, pair_i, pair_j]
-            + ww_remote[:, pair_j, pair_i]
+    # Per-link usage, in two parts.  (1) Direct traffic: each link always
+    # carries its own endpoint pair (both directions) — a vectorized
+    # endpoint-index gather summed in the scalar-pair model's exact order,
+    # so fully-connected topologies reproduce it bit for bit.  (2) Routed
+    # traffic: multi-hop pairs charge the full flow to every link on their
+    # route via the static pair->link incidence matrix.
+    n_links = topo.n_links
+    if n_links:
+        ends_i = np.asarray([e[0] for e in topo.link_ends])
+        ends_j = np.asarray([e[1] for e in topo.link_ends])
+        link_usage = (
+            rr_remote[:, ends_i, ends_j]
+            + rr_remote[:, ends_j, ends_i]
+            + ww_remote[:, ends_i, ends_j]
+            + ww_remote[:, ends_j, ends_i]
         )
+        if not topo.is_fully_direct:
+            routed = jnp.asarray(topo.route_incidence_multihop())  # (s*s, L)
+            cross = (rr_remote + ww_remote).reshape(n, s * s)
+            link_usage = link_usage + cross @ routed
     else:
-        qpi_usage = jnp.zeros((n, 0))
+        link_usage = jnp.zeros((n, 0))
 
     usage = jnp.concatenate(
         [
@@ -129,25 +142,18 @@ def _resource_tensor(
             write_unit,  # bank write
             rr_remote.reshape(n, s * s),
             ww_remote.reshape(n, s * s),
-            qpi_usage,
+            link_usage,
         ],
         axis=1,
     )
 
-    inf = jnp.inf
-    remote_read_caps = jnp.where(
-        jnp.eye(s, dtype=bool), inf, machine.remote_read_bw
-    ).reshape(s * s)
-    remote_write_caps = jnp.where(
-        jnp.eye(s, dtype=bool), inf, machine.remote_write_bw
-    ).reshape(s * s)
     caps = jnp.concatenate(
         [
             machine.bank_read_caps(),
             machine.bank_write_caps(),
-            remote_read_caps,
-            remote_write_caps,
-            jnp.full((n_pairs,), machine.qpi_bw, jnp.float32),
+            machine.remote_read_caps().reshape(s * s),
+            machine.remote_write_caps().reshape(s * s),
+            machine.link_caps(),
         ]
     )
     return usage, caps
@@ -217,7 +223,13 @@ def simulate(
     write_unit = machine.core_rate * workload.write_bpi[:, None] * write_mix
 
     usage, caps = _resource_tensor(machine, read_unit, write_unit, socket_of)
-    iterations = usage.shape[1] + 2
+    # Each progressive-filling iteration freezes at least one thread set
+    # (either a bottleneck's users or, at lam* >= 1, every active thread),
+    # and each bottleneck saturates at most one new resource — so
+    # min(n_threads, n_resources) + 1 iterations always reach the fixed
+    # point.  (The former n_resources + 2 count was 172 iterations on the
+    # 8-socket preset for 32 threads.)
+    iterations = min(usage.shape[0], usage.shape[1]) + 1
     rates = _progressive_fill(usage, caps, iterations)
 
     onehot = jax.nn.one_hot(socket_of, s)
@@ -270,16 +282,51 @@ def symmetric_placement(machine: MachineSpec, n_threads: int) -> Array:
 
 def asymmetric_placement(machine: MachineSpec, n_threads: int) -> Array:
     """Paper §5.1 run 2: same thread count, unequal split (Figure 7 uses a
-    roughly 2:1 split on the first socket)."""
+    roughly 2:1 split on the first socket).
+
+    The 3:1 target split can be infeasible — e.g. 2 threads on a 2-socket
+    machine leave zero threads for the second socket, and a full machine
+    admits only the equal split.  Instead of asserting, fall back to the
+    nearest valid split: socket 0 gets the feasible count closest to the
+    3:1 target (ties prefer the heavier socket) that still yields an
+    *unequal* split when any exists; a perfectly full machine returns the
+    only (equal) valid placement.
+    """
     s = machine.sockets
-    first = min(-(-3 * n_threads // 4), machine.cores_per_socket)
-    rest = n_threads - first
-    assert rest >= 1, "asymmetric run needs at least one thread elsewhere"
-    others = [rest // (s - 1)] * (s - 1)
-    others[0] += rest - sum(others)
-    counts = [first] + others
-    assert max(counts) <= machine.cores_per_socket
-    return jnp.asarray(counts, jnp.int32)
+    cap = machine.cores_per_socket
+    if not 0 < n_threads <= s * cap:
+        raise ValueError(f"{n_threads} threads do not fit {s} sockets x {cap} cores")
+    target = -(-3 * n_threads // 4)
+
+    def split_for(first: int) -> list[int] | None:
+        rest = n_threads - first
+        if rest < 0 or rest > (s - 1) * cap:
+            return None
+        others = [rest // (s - 1)] * (s - 1)
+        others[0] += rest - sum(others)
+        # spill overflow beyond per-socket capacity rightward; a no-op
+        # whenever the heaped shape was already feasible (seed behaviour)
+        for k in range(s - 2):
+            if others[k] > cap:
+                others[k + 1] += others[k] - cap
+                others[k] = cap
+        counts = [first] + others
+        return counts if max(counts) <= cap else None
+
+    candidates = sorted(
+        range(min(cap, n_threads) + 1), key=lambda f: (abs(f - target), -f)
+    )
+    fallback = None
+    for first in candidates:
+        counts = split_for(first)
+        if counts is None:
+            continue
+        if len(set(counts)) > 1:
+            return jnp.asarray(counts, jnp.int32)
+        if fallback is None:
+            fallback = counts
+    assert fallback is not None  # n_threads <= s * cap guarantees a split
+    return jnp.asarray(fallback, jnp.int32)
 
 
 def profile_pair(

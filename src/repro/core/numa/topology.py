@@ -1,0 +1,325 @@
+"""Interconnect topologies: link bandwidth matrices + static routing.
+
+The paper's machines are dual-socket boxes where "the interconnect" is a
+single QPI link, but large NUMA machines have strongly distance-dependent
+bandwidth (STREAM-style measurements show per-hop cliffs — Bergstrom,
+arXiv:1103.3225), and glued 8-socket systems route far socket pairs
+through node controllers.  A :class:`Topology` captures that structure:
+
+* an undirected link list with per-link capacities (bytes/s), and
+* a statically computed shortest-path routing table: for every ordered
+  socket pair, the sequence of links its traffic crosses.
+
+Everything is stored as nested tuples of python scalars, so a
+``Topology`` (and the :class:`~repro.core.numa.machine.MachineSpec` that
+embeds one) stays hashable — it can be a ``jax.jit`` static argument and
+a signature-cache key even when the builder was handed numpy/JAX arrays
+for the bandwidth matrix.  The derived *arrays* (link capacities, hop
+matrix, pair→link routing incidence) are materialized lazily and cached
+per topology; inside a trace they are compile-time constants, so the
+simulator's resource slab keeps a fixed ``(n, n_links)`` shape that jit
+and vmap handle identically for any socket count.
+
+Routing is hop-count shortest path (BFS) with deterministic tie-breaks:
+every node keeps the smallest-id predecessor discovered in the previous
+BFS layer, so routing tables are reproducible across processes.
+"""
+
+from __future__ import annotations
+
+from functools import lru_cache
+from typing import NamedTuple, Sequence
+
+import numpy as np
+
+
+class Topology(NamedTuple):
+    """An interconnect graph over ``n_nodes`` sockets with static routes.
+
+    ``link_ends[l] = (i, j)`` with ``i < j`` names the l-th undirected
+    link; ``link_bw[l]`` is its capacity in bytes/s (both directions share
+    it, like QPI).  ``routes[i * n_nodes + j]`` is the tuple of link
+    indices the ordered pair ``i -> j`` crosses (empty for ``i == j``).
+    """
+
+    name: str
+    n_nodes: int
+    link_ends: tuple[tuple[int, int], ...]
+    link_bw: tuple[float, ...]
+    routes: tuple[tuple[int, ...], ...]
+
+    @property
+    def n_links(self) -> int:
+        return len(self.link_ends)
+
+    def route(self, i: int, j: int) -> tuple[int, ...]:
+        """Link indices crossed by traffic from socket ``i`` to ``j``."""
+        return self.routes[i * self.n_nodes + j]
+
+    @property
+    def max_hops(self) -> int:
+        return max((len(r) for r in self.routes), default=0)
+
+    @property
+    def is_fully_direct(self) -> bool:
+        """True when every distinct pair is one hop (no routed traffic) —
+        the regime where the link model degenerates to the scalar-pair
+        model of the original 2-socket formulation."""
+        return self.max_hops <= 1
+
+    def hop_matrix(self) -> np.ndarray:
+        """``(n, n)`` int hop counts (0 on the diagonal)."""
+        return _hop_matrix(self)
+
+    def route_incidence(self) -> np.ndarray:
+        """``(n*n, n_links)`` float32 matrix ``R`` with ``R[i*n+j, l] = 1``
+        iff link ``l`` is on the route ``i -> j``.  Charging per-link usage
+        is then one matmul: ``flows.reshape(-1, n*n) @ R``."""
+        return _route_incidence(self, multihop_only=False)
+
+    def route_incidence_multihop(self) -> np.ndarray:
+        """Like :meth:`route_incidence` but with single-hop rows zeroed —
+        the *extra* charges routed topologies add on top of the direct
+        endpoint-pair traffic every link always carries."""
+        return _route_incidence(self, multihop_only=True)
+
+    def validate(self) -> None:
+        n = self.n_nodes
+        if len(self.routes) != n * n:
+            raise ValueError(f"routes must have {n * n} entries")
+        if len(self.link_bw) != len(self.link_ends):
+            raise ValueError("link_bw and link_ends disagree on link count")
+        if len(set(self.link_ends)) != len(self.link_ends):
+            raise ValueError("duplicate links: endpoint pairs must be unique")
+        for l, (i, j) in enumerate(self.link_ends):
+            if not (0 <= i < j < n):
+                raise ValueError(f"link {l} endpoints {(i, j)} invalid")
+            if self.link_bw[l] <= 0:
+                raise ValueError(f"link {l} has non-positive bandwidth")
+        for i in range(n):
+            for j in range(n):
+                r = self.route(i, j)
+                if i == j:
+                    if r:
+                        raise ValueError(f"self-route {i} must be empty")
+                    continue
+                if not r:
+                    raise ValueError(f"sockets {i} and {j} are disconnected")
+                at = i
+                for l in r:
+                    a, b = self.link_ends[l]
+                    if at == a:
+                        at = b
+                    elif at == b:
+                        at = a
+                    else:
+                        raise ValueError(f"route {i}->{j} breaks at link {l}")
+                if at != j:
+                    raise ValueError(f"route {i}->{j} ends at {at}")
+
+
+@lru_cache(maxsize=128)
+def _hop_matrix(topo: Topology) -> np.ndarray:
+    n = topo.n_nodes
+    hops = np.zeros((n, n), np.int32)
+    for i in range(n):
+        for j in range(n):
+            hops[i, j] = len(topo.route(i, j))
+    hops.setflags(write=False)
+    return hops
+
+
+@lru_cache(maxsize=128)
+def _route_incidence(topo: Topology, *, multihop_only: bool) -> np.ndarray:
+    n = topo.n_nodes
+    R = np.zeros((n * n, topo.n_links), np.float32)
+    for i in range(n):
+        for j in range(n):
+            r = topo.route(i, j)
+            if multihop_only and len(r) <= 1:
+                continue
+            for l in r:
+                R[i * n + j, l] = 1.0
+    R.setflags(write=False)
+    return R
+
+
+# ---------------------------------------------------------------------------
+# Routing
+# ---------------------------------------------------------------------------
+
+
+def _shortest_routes(
+    n: int, link_ends: Sequence[tuple[int, int]]
+) -> tuple[tuple[int, ...], ...]:
+    """BFS hop-count routing for every ordered pair.  Equal-hop ties break
+    deterministically: each node keeps the smallest-id predecessor found in
+    the previous BFS layer (not necessarily the globally lexicographically
+    smallest node sequence)."""
+    adj: list[list[tuple[int, int]]] = [[] for _ in range(n)]  # node -> (nbr, link)
+    for l, (i, j) in enumerate(link_ends):
+        adj[i].append((j, l))
+        adj[j].append((i, l))
+    for nbrs in adj:
+        nbrs.sort()  # frontier nodes claim successors smallest-id first
+
+    routes: list[tuple[int, ...]] = []
+    for src in range(n):
+        prev: dict[int, tuple[int, int]] = {}  # node -> (prev node, link)
+        dist = {src: 0}
+        frontier = [src]
+        while frontier:
+            nxt: list[int] = []
+            for u in frontier:
+                for v, l in adj[u]:
+                    if v not in dist:
+                        dist[v] = dist[u] + 1
+                        prev[v] = (u, l)
+                        nxt.append(v)
+            nxt.sort()
+            frontier = nxt
+        for dst in range(n):
+            if dst == src:
+                routes.append(())
+                continue
+            if dst not in dist:
+                raise ValueError(f"socket {dst} unreachable from {src}")
+            path: list[int] = []
+            at = dst
+            while at != src:
+                at, l = prev[at]
+                path.append(l)
+            routes.append(tuple(reversed(path)))
+    return tuple(routes)
+
+
+def _as_bw_list(link_bw, n_links: int, what: str) -> list[float]:
+    """Canonicalize a scalar / sequence / array of link bandwidths to a
+    plain list of python floats (array-valued input stays hashable)."""
+    arr = np.asarray(link_bw, np.float64)
+    if arr.ndim == 0:
+        return [float(arr)] * n_links
+    flat = [float(v) for v in arr.reshape(-1)]
+    if len(flat) != n_links:
+        raise ValueError(f"{what}: expected {n_links} bandwidths, got {len(flat)}")
+    return flat
+
+
+def from_bandwidth_matrix(name: str, bw: np.ndarray) -> Topology:
+    """Build a topology from a symmetric ``(n, n)`` link-bandwidth matrix
+    (0 = no link) — the natural form for measured machines.  Accepts any
+    array-like; values are canonicalized to python floats."""
+    bw = np.asarray(bw, np.float64)
+    if bw.ndim != 2 or bw.shape[0] != bw.shape[1]:
+        raise ValueError(f"need a square matrix, got shape {bw.shape}")
+    if not np.allclose(bw, bw.T):
+        raise ValueError("link bandwidth matrix must be symmetric")
+    if (bw < 0).any():
+        raise ValueError("link bandwidths must be >= 0 (0 = no link)")
+    n = bw.shape[0]
+    ends = [(i, j) for i in range(n) for j in range(i + 1, n) if bw[i, j] > 0]
+    topo = Topology(
+        name=name,
+        n_nodes=n,
+        link_ends=tuple(ends),
+        link_bw=tuple(float(bw[i, j]) for i, j in ends),
+        routes=_shortest_routes(n, ends),
+    )
+    topo.validate()
+    return topo
+
+
+# ---------------------------------------------------------------------------
+# Builders
+# ---------------------------------------------------------------------------
+
+
+def fully_connected(n: int, link_bw) -> Topology:
+    """Every socket pair directly linked (the 2-socket machines and fully
+    QPI-meshed quad Haswell-EX).  Links enumerate in upper-triangle order,
+    matching the scalar-pair model's resource layout exactly."""
+    ends = [(i, j) for i in range(n) for j in range(i + 1, n)]
+    topo = Topology(
+        name=f"fc{n}",
+        n_nodes=n,
+        link_ends=tuple(ends),
+        link_bw=tuple(_as_bw_list(link_bw, len(ends), "fully_connected")),
+        routes=_shortest_routes(n, ends),
+    )
+    topo.validate()
+    return topo
+
+
+def ring(n: int, link_bw) -> Topology:
+    """Sockets on a bidirectional ring — the worst-case hop spread
+    (diameter ``n // 2``)."""
+    if n < 2:
+        raise ValueError("ring needs >= 2 nodes")
+    ends = sorted(tuple(sorted((i, (i + 1) % n))) for i in range(n))
+    ends = list(dict.fromkeys(ends))  # n == 2: one link, not two
+    topo = Topology(
+        name=f"ring{n}",
+        n_nodes=n,
+        link_ends=tuple(ends),
+        link_bw=tuple(_as_bw_list(link_bw, len(ends), "ring")),
+        routes=_shortest_routes(n, ends),
+    )
+    topo.validate()
+    return topo
+
+
+def mesh2d(rows: int, cols: int, link_bw) -> Topology:
+    """Sockets on a ``rows x cols`` grid with nearest-neighbour links
+    (SGI/HPE hypercube-ish blades flattened to 2D)."""
+    n = rows * cols
+    if n < 2:
+        raise ValueError("mesh2d needs >= 2 nodes")
+    ends = []
+    for r in range(rows):
+        for c in range(cols):
+            u = r * cols + c
+            if c + 1 < cols:
+                ends.append((u, u + 1))
+            if r + 1 < rows:
+                ends.append((u, u + cols))
+    ends.sort()
+    topo = Topology(
+        name=f"mesh{rows}x{cols}",
+        n_nodes=n,
+        link_ends=tuple(ends),
+        link_bw=tuple(_as_bw_list(link_bw, len(ends), "mesh2d")),
+        routes=_shortest_routes(n, ends),
+    )
+    topo.validate()
+    return topo
+
+
+def glued_8s(qpi_bw: float, nc_bw: float) -> Topology:
+    """The glued 8-socket node-controller topology (Haswell-EX E7-8800
+    class): two fully QPI-meshed quads; socket ``i`` of quad 0 reaches its
+    twin ``i + 4`` over a node-controller link.  Cross-quad non-twin pairs
+    route over 2 hops (one QPI + one controller link), so far traffic
+    charges both — the hop-count bandwidth cliff the scalar model could
+    not express."""
+    ends: list[tuple[int, int]] = []
+    bws: list[float] = []
+    for base in (0, 4):
+        for i in range(4):
+            for j in range(i + 1, 4):
+                ends.append((base + i, base + j))
+                bws.append(float(qpi_bw))
+    for i in range(4):
+        ends.append((i, i + 4))
+        bws.append(float(nc_bw))
+    order = sorted(range(len(ends)), key=lambda k: ends[k])
+    ends = [ends[k] for k in order]
+    bws = [bws[k] for k in order]
+    topo = Topology(
+        name="glued8s",
+        n_nodes=8,
+        link_ends=tuple(ends),
+        link_bw=tuple(bws),
+        routes=_shortest_routes(8, ends),
+    )
+    topo.validate()
+    return topo

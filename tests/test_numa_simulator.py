@@ -48,9 +48,9 @@ def test_capacity_constraints_respected():
     off = ~np.eye(2, dtype=bool)
     assert np.asarray(res.read_flows)[off].max() <= machine.remote_read_bw * (1 + 1e-4)
     assert np.asarray(res.write_flows)[off].max() <= machine.remote_write_bw * (1 + 1e-4)
-    # interconnect
+    # interconnect (2 sockets: one link carries all cross traffic)
     qpi = float(np.asarray(res.read_flows)[off].sum() + np.asarray(res.write_flows)[off].sum())
-    assert qpi <= machine.qpi_bw * (1 + 1e-4)
+    assert qpi <= float(machine.link_caps()[0]) * (1 + 1e-4)
 
 
 def test_maxmin_some_resource_saturated_or_full_speed():

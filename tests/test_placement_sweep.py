@@ -200,12 +200,14 @@ def test_fitted_signature_cache_hits():
     assert c[0] is not a[0]
 
 
-def test_vectorized_pair_resources_match_legacy_loop():
-    """The vectorized interconnect-pair formulation must reproduce the
-    seed's python-loop values for any socket count."""
+def test_vectorized_link_resources_match_reference_loop():
+    """The vectorized per-link charging (endpoint gather + routed-incidence
+    matmul) must reproduce a python loop walking every ordered pair's route
+    on the glued 8-socket topology."""
     from repro.core.numa.simulator import _resource_tensor, _thread_sockets
 
     machine = E7_8860_V3
+    topo = machine.topology
     n_threads = 16
     rng = np.random.default_rng(0)
     read_unit = jnp.asarray(rng.uniform(0, 1e9, (n_threads, machine.sockets)), jnp.float32)
@@ -219,21 +221,32 @@ def test_vectorized_pair_resources_match_legacy_loop():
     rr = onehot[:, :, None] * read_unit[:, None, :]
     ww = onehot[:, :, None] * write_unit[:, None, :]
     off = (1.0 - jnp.eye(s))[None, :, :]
-    rr_remote, ww_remote = rr * off, ww * off
-    pair_rows, pair_caps = [], []
+    cross = np.asarray(rr * off + ww * off)  # (n, s, s)
+    legacy = np.zeros((n_threads, topo.n_links), np.float64)
     for i in range(s):
-        for j in range(i + 1, s):
-            pair_rows.append(
-                rr_remote[:, i, j] + rr_remote[:, j, i]
-                + ww_remote[:, i, j] + ww_remote[:, j, i]
-            )
-            pair_caps.append(machine.qpi_bw)
-    legacy_pairs = jnp.stack(pair_rows, axis=1)
-    n_pair = len(pair_caps)
-    np.testing.assert_array_equal(
-        np.asarray(usage[:, -n_pair:]), np.asarray(legacy_pairs)
+        for j in range(s):
+            for l in topo.route(i, j):
+                legacy[:, l] += cross[:, i, j]
+    n_links = topo.n_links
+    np.testing.assert_allclose(
+        np.asarray(usage[:, -n_links:]), legacy, rtol=1e-5
     )
-    np.testing.assert_array_equal(np.asarray(caps[-n_pair:]), np.asarray(pair_caps))
+    np.testing.assert_array_equal(
+        np.asarray(caps[-n_links:]), np.asarray(topo.link_bw, np.float32)
+    )
+    # a 2-hop pair's flow shows up on BOTH links of its route
+    t = 0  # thread 0 lives on socket 0; pair (0, 5) routes over 2 links
+    route = topo.route(0, 5)
+    assert len(route) == 2
+    for l in route:
+        a, b = topo.link_ends[l]
+        contributions = sum(
+            cross[t, i, j]
+            for i in range(s)
+            for j in range(s)
+            if l in topo.route(i, j)
+        )
+        np.testing.assert_allclose(float(usage[t, -n_links + l]), contributions, rtol=1e-5)
 
 
 def test_misfit_detector_still_flags_violators_on_4socket():

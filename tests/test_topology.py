@@ -1,0 +1,445 @@
+"""Topology-aware interconnect model.
+
+* builder/routing properties (ring hop counts, mesh distances, glued-8s
+  node-controller routes),
+* exact degeneration: for fully-connected topologies the per-link resource
+  tensor and the whole ``evaluate_accuracy`` pipeline reproduce the seed's
+  scalar-pair model bit for bit (golden medians recorded from the seed),
+* routed-topology behaviour: multi-hop link charging, hop-attenuated
+  remote capacities, end-to-end ``evaluate_batch`` + advisor on the glued
+  8-socket preset,
+* the ``_progressive_fill`` iteration-count reduction and the
+  ``asymmetric_placement`` graceful fallback.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.numa import (
+    E5_2630_V3,
+    E5_2699_V3,
+    E7_4830_V3,
+    E7_8860_V3,
+    MachineSpec,
+    Topology,
+    from_bandwidth_matrix,
+    fully_connected,
+    glued_8s,
+    make_machine,
+    mesh2d,
+    mixed_workload,
+    ring,
+    simulate,
+)
+from repro.core.numa.benchmarks import benchmark_workload
+from repro.core.numa.simulator import (
+    _progressive_fill,
+    _resource_tensor,
+    _thread_sockets,
+    asymmetric_placement,
+    symmetric_placement,
+)
+
+# ---------------------------------------------------------------------------
+# builders + routing
+# ---------------------------------------------------------------------------
+
+
+def test_fully_connected_structure():
+    topo = fully_connected(4, 10e9)
+    assert topo.n_links == 6
+    assert topo.is_fully_direct and topo.max_hops == 1
+    assert (topo.hop_matrix() == np.ones((4, 4)) - np.eye(4)).all()
+    # links enumerate the upper triangle in order
+    assert topo.link_ends == ((0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3))
+
+
+def test_ring_hop_counts():
+    topo = ring(6, 12e9)
+    assert topo.n_links == 6
+    hops = topo.hop_matrix()
+    expect = np.array([[min(abs(i - j), 6 - abs(i - j)) for j in range(6)] for i in range(6)])
+    np.testing.assert_array_equal(hops, expect)
+    # the 3-hop antipodal route is a contiguous walk of 3 distinct links
+    route = topo.route(0, 3)
+    assert len(route) == 3 and len(set(route)) == 3
+    # 2-node ring collapses to a single link, not two parallel ones
+    assert ring(2, 1e9).n_links == 1
+
+
+def test_mesh2d_hop_counts_are_manhattan():
+    topo = mesh2d(2, 3, 8e9)
+    assert topo.n_links == 7  # 2*2 vertical + 3... rows*(cols-1) + cols*(rows-1)
+    hops = topo.hop_matrix()
+    for a in range(6):
+        for b in range(6):
+            ra, ca = divmod(a, 3)
+            rb, cb = divmod(b, 3)
+            assert hops[a, b] == abs(ra - rb) + abs(ca - cb)
+
+
+def test_glued_8s_routes_and_capacities():
+    qpi, nc = 12.8e9, 9.6e9
+    topo = glued_8s(qpi_bw=qpi, nc_bw=nc)
+    assert topo.n_links == 16  # 2 quads x 6 QPI + 4 node-controller links
+    hops = topo.hop_matrix()
+    for i in range(8):
+        for j in range(8):
+            if i == j:
+                assert hops[i, j] == 0
+            elif i // 4 == j // 4 or j == (i + 4) % 8:
+                assert hops[i, j] == 1  # intra-quad QPI or twin controller
+            else:
+                assert hops[i, j] == 2  # cross-quad via a controller
+    # twin links carry the controller bandwidth, quad links the QPI one
+    for l, (i, j) in enumerate(topo.link_ends):
+        assert topo.link_bw[l] == (nc if j - i == 4 else qpi)
+    # every 2-hop route crosses exactly one controller link + one QPI link
+    for i in range(8):
+        for j in range(8):
+            if hops[i, j] == 2:
+                kinds = sorted(topo.link_bw[l] for l in topo.route(i, j))
+                assert kinds == [nc, qpi]
+
+
+def test_routing_is_deterministic_and_valid():
+    for topo in (ring(7, 1e9), mesh2d(3, 3, 1e9), glued_8s(qpi_bw=2e9, nc_bw=1e9)):
+        topo.validate()
+        rebuilt = type(topo)(*topo)  # routes are plain data: stable across builds
+        assert rebuilt == topo
+
+
+def test_from_bandwidth_matrix_accepts_arrays_and_stays_hashable():
+    bw = np.zeros((3, 3))
+    bw[0, 1] = bw[1, 0] = 10e9
+    bw[1, 2] = bw[2, 1] = 5e9
+    topo = from_bandwidth_matrix("chain3", jnp.asarray(bw))
+    hash(topo)  # canonicalized to tuples -> usable as jit static arg
+    assert topo.link_ends == ((0, 1), (1, 2))
+    assert topo.route(0, 2) == (0, 1)  # routed over both links
+    with pytest.raises(ValueError):
+        from_bandwidth_matrix("asym", np.array([[0.0, 1e9], [2e9, 0.0]]))
+    with pytest.raises(ValueError):  # disconnected
+        from_bandwidth_matrix("disc", np.zeros((2, 2)))
+    with pytest.raises(ValueError):  # sign typo must not silently drop a link
+        neg = bw.copy()
+        neg[0, 1] = neg[1, 0] = -10e9
+        from_bandwidth_matrix("neg", neg)
+
+
+def test_machine_fingerprint_distinguishes_topologies():
+    a = make_machine("m", sockets=4, qpi_bw=10e9)
+    b = make_machine("m", sockets=4, qpi_bw=10e9)
+    c = make_machine("m", sockets=4, topology=ring(4, 10e9))
+    assert a.fingerprint() == b.fingerprint()
+    assert a.fingerprint() != c.fingerprint()
+    assert a.fingerprint() != a._replace(hop_attenuation=0.9).fingerprint()
+    # adjacent-field boundaries must not be ambiguous: '32','5.0' vs '3','25.0'
+    d = a._replace(cores_per_socket=3, local_read_bw=25.0)
+    e = a._replace(cores_per_socket=32, local_read_bw=5.0)
+    assert d.fingerprint() != e.fingerprint()
+
+
+# ---------------------------------------------------------------------------
+# fully-connected topologies degenerate exactly to the seed scalar model
+# ---------------------------------------------------------------------------
+
+
+def _seed_resource_tensor(machine, qpi_bw, read_unit, write_unit, socket_of):
+    """The seed's scalar-pair implementation, verbatim (modulo the removed
+    ``qpi_bw`` field, passed explicitly)."""
+    s = machine.sockets
+    n = socket_of.shape[0]
+    onehot = jax.nn.one_hot(socket_of, s)
+    rr = onehot[:, :, None] * read_unit[:, None, :]
+    ww = onehot[:, :, None] * write_unit[:, None, :]
+    off_diag = (1.0 - jnp.eye(s))[None, :, :]
+    rr_remote = rr * off_diag
+    ww_remote = ww * off_diag
+    pair_i, pair_j = np.triu_indices(s, k=1)
+    qpi_usage = (
+        rr_remote[:, pair_i, pair_j]
+        + rr_remote[:, pair_j, pair_i]
+        + ww_remote[:, pair_i, pair_j]
+        + ww_remote[:, pair_j, pair_i]
+    )
+    usage = jnp.concatenate(
+        [
+            read_unit,
+            write_unit,
+            rr_remote.reshape(n, s * s),
+            ww_remote.reshape(n, s * s),
+            qpi_usage,
+        ],
+        axis=1,
+    )
+    inf = jnp.inf
+    remote_read_caps = jnp.where(
+        jnp.eye(s, dtype=bool), inf, machine.remote_read_bw
+    ).reshape(s * s)
+    remote_write_caps = jnp.where(
+        jnp.eye(s, dtype=bool), inf, machine.remote_write_bw
+    ).reshape(s * s)
+    caps = jnp.concatenate(
+        [
+            machine.bank_read_caps(),
+            machine.bank_write_caps(),
+            remote_read_caps,
+            remote_write_caps,
+            jnp.full((pair_i.shape[0],), qpi_bw, jnp.float32),
+        ]
+    )
+    return usage, caps
+
+
+@pytest.mark.parametrize(
+    "machine,n_per",
+    [
+        (E5_2630_V3, [5, 3]),
+        (E5_2699_V3, [12, 6]),
+        (E7_4830_V3, [6, 4, 4, 2]),
+    ],
+)
+def test_fully_connected_resource_tensor_is_bitwise_seed(machine, n_per):
+    n_threads = int(sum(n_per))
+    rng = np.random.default_rng(7)
+    read_unit = jnp.asarray(rng.uniform(0, 2e9, (n_threads, machine.sockets)), jnp.float32)
+    write_unit = jnp.asarray(rng.uniform(0, 1e9, (n_threads, machine.sockets)), jnp.float32)
+    socket_of = _thread_sockets(jnp.asarray(n_per, jnp.int32), n_threads)
+    usage, caps = _resource_tensor(machine, read_unit, write_unit, socket_of)
+    legacy_u, legacy_c = _seed_resource_tensor(
+        machine, machine.topology.link_bw[0], read_unit, write_unit, socket_of
+    )
+    np.testing.assert_array_equal(np.asarray(usage), np.asarray(legacy_u))
+    np.testing.assert_array_equal(np.asarray(caps), np.asarray(legacy_c))
+
+
+# Golden medians recorded from the seed scalar-pair implementation
+# (commit acbf77a) — evaluate_accuracy(machine, bench @ 8 threads,
+# noise_std=0.02, key=PRNGKey(3)), median of errors_combined in %.
+_SEED_ACCURACY_MEDIANS = {
+    ("E5-2630v3-8c", "Swim"): 0.045333102345466614,
+    ("E5-2630v3-8c", "CG"): 0.11724641174077988,
+    ("E5-2630v3-8c", "NPO"): 0.10399085283279419,
+    ("E5-2699v3-18c", "Swim"): 0.0453319251537323,
+    ("E5-2699v3-18c", "CG"): 0.11724507063627243,
+    ("E5-2699v3-18c", "NPO"): 0.10399217903614044,
+}
+
+
+@pytest.mark.parametrize("machine", [E5_2630_V3, E5_2699_V3])
+def test_accuracy_medians_match_seed_on_2socket_presets(machine):
+    """The per-link model with a fully-connected topology must reproduce
+    the seed scalar model's evaluate_accuracy medians on both paper
+    machines (same placements, same PRNG stream, same arithmetic)."""
+    from repro.core.numa.evaluate import evaluate_accuracy
+
+    for bench in ("Swim", "CG", "NPO"):
+        wl = benchmark_workload(bench, 8)
+        res = evaluate_accuracy(machine, wl, noise_std=0.02, key=jax.random.PRNGKey(3))
+        med = float(np.median(np.asarray(res.errors_combined)) * 100.0)
+        assert med == pytest.approx(
+            _SEED_ACCURACY_MEDIANS[(machine.name, bench)], rel=1e-6
+        ), bench
+
+
+# ---------------------------------------------------------------------------
+# routed topologies: attenuated remote caps + multi-hop charging
+# ---------------------------------------------------------------------------
+
+
+def test_remote_caps_attenuate_with_hops():
+    caps = np.asarray(E7_8860_V3.remote_read_caps())
+    hops = E7_8860_V3.topology.hop_matrix()
+    base = E7_8860_V3.remote_read_bw
+    att = E7_8860_V3.hop_attenuation
+    assert np.isinf(np.diagonal(caps)).all()
+    np.testing.assert_allclose(caps[hops == 1], np.float32(base), rtol=1e-6)
+    np.testing.assert_allclose(caps[hops == 2], np.float32(base * att), rtol=1e-6)
+
+
+def test_multihop_flow_saturates_controller_link():
+    """All threads on socket 0 reading a static allocation on socket 5:
+    the 2-hop route's node-controller link must bound the traffic below
+    what the same machine with direct links everywhere would allow."""
+    routed = E7_8860_V3
+    direct = routed._replace(
+        topology=fully_connected(8, 12.8e9), hop_attenuation=1.0
+    )
+    wl = mixed_workload(
+        "far", 16, read_mix=(1.0, 0.0, 0.0), read_bpi=2.0, write_bpi=0.0,
+        static_socket=5,
+    )
+    p = jnp.asarray([16, 0, 0, 0, 0, 0, 0, 0], jnp.int32)
+    thr_routed = float(simulate(routed, wl, p).throughput)
+    thr_direct = float(simulate(direct, wl, p).throughput)
+    assert thr_routed < thr_direct
+    # the flow 0 -> bank 5 respects the attenuated 2-hop remote cap
+    flow = float(simulate(routed, wl, p).read_flows[0, 5])
+    cap = float(np.asarray(routed.remote_read_caps())[0, 5])
+    assert flow <= cap * (1 + 1e-4)
+
+
+def test_shared_link_contention_between_pairs():
+    """Two flows whose routes share a link must split its capacity, even
+    though they use disjoint socket pairs — inexpressible in the scalar
+    model.  On a 4-node chain 0-1-2-3, pair (0,2) routes over links
+    (0,1)+(1,2) and pair (1,2) uses link (1,2): both charge (1,2)."""
+    bw = np.zeros((4, 4))
+    for i, j in ((0, 1), (1, 2), (2, 3)):
+        bw[i, j] = bw[j, i] = 10e9
+    chain = make_machine(
+        "chain4", sockets=4, cores_per_socket=8,
+        local_read_bw=200e9, local_write_bw=200e9,
+        remote_read_ratio=1.0, remote_write_ratio=1.0,
+        topology=from_bandwidth_matrix("chain4", bw),
+    )
+    # per-thread arrays: one thread on socket 0 and one on socket 1, both
+    # reading a static region on socket 2 as fast as they can issue
+    wl = mixed_workload(
+        "contend", 2, read_mix=(1.0, 0.0, 0.0), read_bpi=8.0, write_bpi=0.0,
+        static_socket=2,
+    )
+    res = simulate(chain, wl, jnp.asarray([1, 1, 0, 0], jnp.int32))
+    inflow = float(np.asarray(res.read_flows)[:, 2].sum())
+    assert inflow <= 10e9 * (1 + 1e-4)  # the shared (1,2) link caps BOTH flows
+
+
+# ---------------------------------------------------------------------------
+# end to end: glued 8-socket machine through the batched engine + advisor
+# ---------------------------------------------------------------------------
+
+
+def test_glued8s_evaluate_batch_and_advisor_end_to_end():
+    from repro.core.meshsig.advisor import rank_numa_placements
+    from repro.core.numa.evaluate import enumerate_placements, evaluate_batch
+
+    machine = E7_8860_V3
+    wl = benchmark_workload("CG", 16)
+    placements = enumerate_placements(machine, 16, max_placements=24, seed=2)
+    batch = evaluate_batch(machine, wl, placements, keys=jax.random.PRNGKey(5))
+    errs = np.asarray(batch.errors_combined)
+    assert errs.shape == (1, 24, 2 * machine.sockets)
+    assert np.isfinite(errs).all()
+    assert errs.max() < 2e-3  # noise-free + in-model => predictions exact
+
+    ranked = rank_numa_placements(machine, wl, max_placements=64, top_k=8)
+    assert len(ranked) == 8
+    thrs = [r.predicted_throughput for r in ranked]
+    assert thrs == sorted(thrs, reverse=True)
+    assert all(sum(r.placement) == 16 for r in ranked)
+
+
+@pytest.mark.slow
+def test_glued8s_suite_sweep_stays_in_error_band():
+    """Nightly regression net for the big routed sweep: the full benchmark
+    suite over a budgeted glued-8s placement sweep keeps the paper-band
+    median error (2.34% at s = 2) despite multi-hop routing."""
+    from repro.core.numa.evaluate import evaluate_suite
+
+    r = evaluate_suite(
+        E7_8860_V3,
+        2 * E7_8860_V3.cores_per_socket,
+        noise_std=0.02,
+        include_violators=False,
+        max_placements=40,
+    )
+    assert r.all_errors.size > 1000
+    assert 0.0 < r.median_error_pct < 2.34
+
+
+def test_advisor_prefers_fewer_hops_on_glued_machine():
+    """With an interleaved-heavy workload, concentrating threads inside
+    one quad (1-hop links only) must rank above spreading them across the
+    controller: the ranker's link charging sees the extra hops."""
+    from repro.core.bwsig import DirectionSignature
+    from repro.core.meshsig.advisor import _placement_scores
+
+    machine = E7_8860_V3
+    # a purely interleaved signature: traffic spreads over all banks
+    sig = DirectionSignature(
+        static_socket=jnp.zeros((), jnp.int32),
+        static_fraction=jnp.zeros(()),
+        local_fraction=jnp.zeros(()),
+        per_thread_fraction=jnp.zeros(()),
+    )
+    intra_quad = jnp.asarray([[4, 4, 4, 4, 0, 0, 0, 0]], jnp.int32)
+    cross_quad = jnp.asarray([[4, 4, 0, 0, 4, 4, 0, 0]], jnp.int32)
+    _, thr_intra = _placement_scores(
+        machine, sig, sig, intra_quad, 1.0, 0.25
+    )
+    _, thr_cross = _placement_scores(
+        machine, sig, sig, cross_quad, 1.0, 0.25
+    )
+    assert float(thr_intra[0]) >= float(thr_cross[0])
+
+
+# ---------------------------------------------------------------------------
+# satellite fixes: progressive-fill iteration count, asymmetric fallback
+# ---------------------------------------------------------------------------
+
+
+def test_progressive_fill_converges_in_reduced_iterations():
+    """min(n_threads, n_resources) + 1 iterations reach the same fixed
+    point as the seed's n_resources + 2 (172 on the 8-socket preset)."""
+    from repro.core.numa.simulator import _mix_rows
+
+    machine = E7_8860_V3
+    wl = benchmark_workload("CG", 32)
+    n_per = jnp.asarray([8, 8, 4, 4, 4, 2, 2, 0], jnp.int32)
+    socket_of = _thread_sockets(n_per, 32)
+    read_mix = _mix_rows(
+        wl.read_static, wl.read_local, wl.read_per_thread,
+        wl.static_socket, socket_of, n_per,
+    )
+    write_mix = _mix_rows(
+        wl.write_static, wl.write_local, wl.write_per_thread,
+        wl.static_socket, socket_of, n_per,
+    )
+    read_unit = machine.core_rate * wl.read_bpi[:, None] * read_mix
+    write_unit = machine.core_rate * wl.write_bpi[:, None] * write_mix
+    usage, caps = _resource_tensor(machine, read_unit, write_unit, socket_of)
+    n, n_res = usage.shape
+    assert n_res > n  # the 8-socket preset is resource-dominated
+    fast = _progressive_fill(usage, caps, min(n, n_res) + 1)
+    slow = _progressive_fill(usage, caps, n_res + 2)
+    np.testing.assert_array_equal(np.asarray(fast), np.asarray(slow))
+
+
+@pytest.mark.parametrize(
+    "machine,n_threads",
+    [(E5_2630_V3, 8), (E5_2699_V3, 18), (E7_4830_V3, 16), (E7_8860_V3, 32)],
+)
+def test_asymmetric_placement_unchanged_for_feasible_splits(machine, n_threads):
+    """The fallback must not disturb the profiling protocol anywhere the
+    3:1 split was already feasible."""
+    s = machine.sockets
+    cap = machine.cores_per_socket
+    first = min(-(-3 * n_threads // 4), cap)
+    rest = n_threads - first
+    others = [rest // (s - 1)] * (s - 1)
+    others[0] += rest - sum(others)
+    expect = [first] + others
+    got = np.asarray(asymmetric_placement(machine, n_threads)).tolist()
+    assert got == expect
+
+
+def test_asymmetric_placement_falls_back_gracefully():
+    # 2 threads on 2 sockets: 3:1 target leaves zero threads elsewhere;
+    # nearest valid *unequal* split is everything on socket 0.
+    got = np.asarray(asymmetric_placement(E5_2630_V3, 2)).tolist()
+    assert got == [2, 0]
+    # 1 thread: only unequal splits exist
+    assert np.asarray(asymmetric_placement(E5_2630_V3, 1)).tolist() == [1, 0]
+    # full machine: the equal split is the only valid one — returned, not raised
+    full = np.asarray(asymmetric_placement(E5_2630_V3, 16)).tolist()
+    assert full == [8, 8]
+    # infeasible counts raise ValueError, never AssertionError
+    with pytest.raises(ValueError):
+        asymmetric_placement(E5_2630_V3, 17)
+    # the fallback still differs from the symmetric run whenever possible
+    sym = np.asarray(symmetric_placement(E5_2630_V3, 8)).tolist()
+    asym = np.asarray(asymmetric_placement(E5_2630_V3, 8)).tolist()
+    assert sym != asym
