@@ -1,0 +1,100 @@
+"""Gate a placement-sweep JSON artifact against the committed baseline.
+
+CI runs ``placement_sweep.py --json`` on every push and nightly; this
+script compares that artifact with ``benchmarks/sweep_baseline.json`` and
+exits non-zero when the model's *median error* regresses beyond tolerance
+on any sweep — the accuracy trend check ROADMAP asked for on top of the
+uploaded artifact history.  Throughput (placements/sec) is reported for
+trending but only enforced via the loose ``--min-pps-ratio`` floor (CI
+runner speed varies run to run; the default 0 disables the gate, and the
+in-repo perf floor lives in the test suite instead).
+
+    PYTHONPATH=src python benchmarks/check_sweep_regression.py NEW.json \
+        [--baseline benchmarks/sweep_baseline.json] \
+        [--error-tolerance 0.25] [--min-pps-ratio 0.0]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+BASELINE = Path(__file__).resolve().parent / "sweep_baseline.json"
+
+
+def check(
+    new: list[dict],
+    baseline: list[dict],
+    *,
+    error_tolerance: float,
+    min_pps_ratio: float,
+) -> list[str]:
+    """Returns a list of failure messages (empty = pass)."""
+    failures: list[str] = []
+    base_by_sweep = {rec["sweep"]: rec for rec in baseline}
+    new_by_sweep = {rec["sweep"]: rec for rec in new}
+    for sweep, base in base_by_sweep.items():
+        rec = new_by_sweep.get(sweep)
+        if rec is None:
+            failures.append(f"{sweep!r}: missing from the new artifact")
+            continue
+        err, base_err = rec["median_error_pct"], base["median_error_pct"]
+        delta = err - base_err
+        status = "OK" if delta <= error_tolerance else "FAIL"
+        print(
+            f"{sweep}: median_error_pct {base_err:.4f} -> {err:.4f} "
+            f"({delta:+.4f}, tolerance {error_tolerance}) [{status}]"
+        )
+        if delta > error_tolerance:
+            failures.append(
+                f"{sweep!r}: median error regressed {base_err:.4f} -> {err:.4f} %"
+            )
+        pps, base_pps = rec["placements_per_sec"], base["placements_per_sec"]
+        ratio = pps / base_pps if base_pps else float("inf")
+        print(f"{sweep}: placements/sec {base_pps:.0f} -> {pps:.0f} (x{ratio:.2f})")
+        if ratio < min_pps_ratio:
+            failures.append(
+                f"{sweep!r}: throughput fell to {ratio:.2f}x of baseline "
+                f"(floor {min_pps_ratio}x)"
+            )
+    return failures
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("artifact", type=Path, help="placement_sweep --json output")
+    parser.add_argument("--baseline", type=Path, default=BASELINE)
+    parser.add_argument(
+        "--error-tolerance",
+        type=float,
+        default=0.25,
+        help="max allowed median-error increase, in absolute %% of bandwidth",
+    )
+    parser.add_argument(
+        "--min-pps-ratio",
+        type=float,
+        default=0.0,
+        help="fail when placements/sec falls below this fraction of baseline "
+        "(0 disables — CI runner speed is not comparable across runs)",
+    )
+    args = parser.parse_args()
+
+    new = json.loads(args.artifact.read_text())
+    baseline = json.loads(args.baseline.read_text())
+    failures = check(
+        new,
+        baseline,
+        error_tolerance=args.error_tolerance,
+        min_pps_ratio=args.min_pps_ratio,
+    )
+    if failures:
+        for msg in failures:
+            print(f"REGRESSION: {msg}", file=sys.stderr)
+        raise SystemExit(1)
+    print("sweep trend check passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,15 +8,21 @@ Sweeps one-thread-per-core placements through the single jitted
 * the median model error as % of run bandwidth (paper's headline metric:
   2.34% at s = 2).
 
-Two machines are swept: the fully-connected quad-socket preset (1469
+Three machines are swept: the fully-connected quad-socket preset (1469
 compositions of 24 threads — the paper's §6.2.2 protocol at beyond-paper
-socket count) and the glued 8-socket preset, whose node-controller
-topology routes cross-quad traffic over 2 links (a deterministic budget
-samples its combinatorial placement space).
+socket count), the glued 8-socket preset, whose node-controller topology
+routes cross-quad traffic over 2 links (a deterministic budget samples
+its combinatorial placement space), and the SNC-2 variant of the 18-core
+2-socket machine, whose 4 half-socket NUMA nodes share one QPI port per
+socket.
 
 Run directly:
 
     PYTHONPATH=src python benchmarks/placement_sweep.py [--json OUT.json]
+
+``--json`` artifacts are uploaded by CI and gated against the committed
+baseline (``benchmarks/sweep_baseline.json``) by
+``benchmarks/check_sweep_regression.py``.
 """
 
 from __future__ import annotations
@@ -47,7 +53,7 @@ def numa_placement_sweep(
     if machine is None:
         machine = E7_4830_V3
     if n_threads is None:
-        n_threads = 2 * machine.cores_per_socket  # the largest sweep space
+        n_threads = 2 * machine.cores_per_node  # the largest sweep space
 
     placements = sweep_placements(
         machine, n_threads, max_placements=max_placements
@@ -81,6 +87,7 @@ def numa_placement_sweep(
         "n_links": machine.n_links,
         "max_hops": machine.topology.max_hops,
         "sockets": machine.sockets,
+        "n_nodes": machine.n_nodes,
         "n_threads": n_threads,
         "placements": n_p,
         "benchmarks": len(workloads),
@@ -103,6 +110,17 @@ def glued8s_placement_sweep(
     return numa_placement_sweep(
         E7_8860_V3, max_placements=max_placements, **kwargs
     )
+
+
+def snc2_placement_sweep(**kwargs) -> tuple[float, dict]:
+    """The sub-NUMA-clustered sweep: the 18-core 2-socket machine in SNC-2
+    mode places 16 threads over 4 half-socket NUMA nodes (633 compositions
+    under the 9-core per-node cap); cross-socket traffic from a
+    non-endpoint node routes through its socket's shared QPI port."""
+    from repro.core.numa import E5_2699_V3_SNC2
+
+    kwargs.setdefault("min_placements", 500)
+    return numa_placement_sweep(E5_2699_V3_SNC2, n_threads=16, **kwargs)
 
 
 def main() -> None:
@@ -130,6 +148,7 @@ def main() -> None:
                 max_placements=args.glued_max_placements
             ),
         ),
+        ("2-socket SNC-2 (4 nodes)", snc2_placement_sweep),
     ):
         pps, details = fn()
         records.append({"sweep": label, "placements_per_sec": round(pps, 1), **details})

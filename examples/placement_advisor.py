@@ -125,6 +125,56 @@ def numa_glued8s_demo() -> None:
         )
 
 
+def numa_snc2_demo() -> None:
+    """Node-graph ranking on the SNC-2 preset: the 18-core machine split
+    into 4 half-socket NUMA nodes whose cross-socket traffic shares one
+    QPI port per socket — placements the per-socket model could not even
+    describe (it had no intra-socket locality to trade)."""
+    import jax.numpy as jnp
+
+    from repro.core.meshsig.advisor import rank_numa_placements
+    from repro.core.numa import E5_2699_V3_SNC2, mixed_workload, simulate
+
+    machine = E5_2699_V3_SNC2
+    print(
+        f"\nNUMA advisor on {machine.name}: {machine.sockets} sockets x "
+        f"{machine.nodes_per_socket} nodes ({machine.cores_per_node} cores/node), "
+        f"topology={machine.topology.name}"
+    )
+    wl = mixed_workload("snc-app", 16, read_mix=(0.3, 0.3, 0.2), read_bpi=2.0)
+    ranked = rank_numa_placements(machine, wl)
+    for label, r in (("best", ranked[0]), ("worst", ranked[-1])):
+        thr = float(simulate(machine, wl, jnp.asarray(r.placement, jnp.int32)).throughput)
+        print(
+            f"  {label}: {r.placement}  predicted-throughput="
+            f"{r.predicted_throughput:.2f}  predicted-remote="
+            f"{100 * r.remote_fraction:.0f}%  measured-throughput={thr:.2f}"
+        )
+
+
+def numa_heterogeneous_demo() -> None:
+    """Heterogeneous core rates: on the throttled preset the advisor's
+    roofline weighs socket 1's slower cores against memory locality, so a
+    compute-bound workload concentrates on the fast socket."""
+    import jax.numpy as jnp
+
+    from repro.core.meshsig.advisor import rank_numa_placements
+    from repro.core.numa import E5_2630_V3_THROTTLED, mixed_workload, simulate
+
+    machine = E5_2630_V3_THROTTLED
+    rates = tuple(float(r) / 1e9 for r in machine.core_rate)
+    print(f"\nNUMA advisor on {machine.name}: per-node core rates {rates} GHz")
+    wl = mixed_workload("cpu-app", 6, read_mix=(0.1, 0.7, 0.1), read_bpi=0.3)
+    ranked = rank_numa_placements(machine, wl)
+    for label, r in (("best", ranked[0]), ("worst", ranked[-1])):
+        res = simulate(machine, wl, jnp.asarray(r.placement, jnp.int32))
+        instr = float(res.sample.instructions.sum()) / 1e9
+        print(
+            f"  {label}: {r.placement}  predicted-throughput="
+            f"{r.predicted_throughput:.2f}  measured-Ginstr/s={instr:.1f}"
+        )
+
+
 def main() -> None:
     recs = sorted(RESULTS.glob("meshsig_validation__*.json"))
     if recs:
@@ -134,6 +184,8 @@ def main() -> None:
     numa_demo()
     numa_multisocket_demo()
     numa_glued8s_demo()
+    numa_snc2_demo()
+    numa_heterogeneous_demo()
 
 
 if __name__ == "__main__":

@@ -21,12 +21,14 @@ from jax import Array
 
 
 class CounterSample(NamedTuple):
-    """One profiling run's counter readings on an ``s``-socket machine.
+    """One profiling run's counter readings on an ``s``-bank machine,
+    where a bank is a NUMA node (``machine.n_nodes``; on the paper's
+    ``nodes_per_socket=1`` machines, a socket).
 
-    All per-bank arrays have shape ``(s,)``; ``instructions`` is per socket
+    All per-bank arrays have shape ``(s,)``; ``instructions`` is per node
     (CPU perspective — paper Figure 8 caption); ``elapsed`` is scalar
     seconds; ``n_per_socket`` records the thread placement of the run (the
-    fitting equations need it).
+    fitting equations need it; one entry per node).
     """
 
     local_read: Array

@@ -89,9 +89,11 @@ def rank_meshes(
 class PlacementRanking:
     """One candidate placement's predicted cost (no measurement)."""
 
-    placement: tuple[int, ...]
-    remote_fraction: float  # predicted fraction of traffic leaving its socket
-    predicted_throughput: float  # roofline bound on the sum of thread rates
+    placement: tuple[int, ...]  # threads per NUMA node
+    remote_fraction: float  # predicted fraction of traffic leaving its node
+    predicted_throughput: float  # roofline bound on the sum of thread rates,
+    # each thread weighted by its node's relative core rate (a full-speed
+    # thread on the fastest node counts 1.0)
 
 
 @partial(jax.jit, static_argnames=("machine",))
@@ -108,21 +110,36 @@ def _placement_scores(  # bpi weights stay traced: one compile per machine
     its per-pair (hop-attenuated) path capacity, and interconnect traffic
     is charged to every *link* on the pair's static route, so placements
     that push flow across a glued machine's node controllers rank below
-    ones keeping traffic inside a quad."""
+    ones keeping traffic inside a quad.
+
+    Demand is per-node-rate-aware: threads on a throttled or little node
+    issue (and demand bandwidth) at that node's ``core_rate``, and the
+    throughput bound weighs each thread by its node's relative rate — so
+    the roofline trades compute asymmetry against locality instead of
+    treating all nodes as equal."""
     from repro.core.bwsig import placement_matrix
 
-    # Per-pair remote path caps (inf diagonal) and the static pair->link
-    # routing incidence; both are compile-time constants per machine.
+    # Per-pair remote path caps (inf diagonal), the static pair->link
+    # routing incidence and the per-node issue rates; all compile-time
+    # constants per machine.
     rr_caps = machine.remote_read_caps()
     ww_caps = machine.remote_write_caps()
     route_inc = jnp.asarray(machine.topology.route_incidence())  # (s*s, L)
     link_caps = machine.link_caps()
+    node_rates = machine.node_rates()
+    rel_rates = node_rates / node_rates.max()
 
     def one(p):
         n = p.astype(jnp.float32)
-        w = n / jnp.maximum(n.sum(), 1.0)
-        demand_r = n * machine.core_rate * read_bpi  # unsaturated bytes/s
-        demand_w = n * machine.core_rate * write_bpi
+        # demand-weighted node shares: a node's traffic scales with its
+        # thread count *and* issue rate, so the remote fraction must too
+        # (for homogeneous machines rel_rates == 1 and this is n / sum(n));
+        # rel-rate mass can legitimately sum below 1, so guard with an
+        # epsilon rather than the integer-thread-count clamp of 1.0
+        nw = n * rel_rates
+        w = nw / jnp.maximum(nw.sum(), 1e-9)
+        demand_r = n * node_rates * read_bpi  # unsaturated bytes/s
+        demand_w = n * node_rates * write_bpi
         flows_r = demand_r[:, None] * placement_matrix(sig_read, p)
         flows_w = demand_w[:, None] * placement_matrix(sig_write, p)
 
@@ -139,7 +156,7 @@ def _placement_scores(  # bpi weights stay traced: one compile per machine
             utils.append((cross @ route_inc) / link_caps)
         worst = jnp.concatenate(utils).max()
         rate = jnp.minimum(1.0, 1.0 / jnp.maximum(worst, 1e-9))
-        throughput = n.sum() * rate
+        throughput = nw.sum() * rate
 
         remote_r = 1.0 - (w * jnp.diagonal(placement_matrix(sig_read, p))).sum()
         remote_w = 1.0 - (w * jnp.diagonal(placement_matrix(sig_write, p))).sum()
@@ -161,9 +178,10 @@ def rank_numa_placements(
     max_placements: int | None = None,
     top_k: int | None = None,
 ) -> list[PlacementRanking]:
-    """Rank every one-thread-per-core placement of ``workload`` on
-    ``machine`` (any socket count) by predicted throughput (desc), then
-    predicted remote-traffic fraction (asc).
+    """Rank every one-thread-per-core placement of ``workload`` over
+    ``machine``'s NUMA nodes (any node count, heterogeneous core rates
+    included) by predicted throughput (desc), then predicted
+    remote-traffic fraction (asc).
 
     Profiling cost is exactly the paper's 2 runs (cached); ranking cost is
     one vmapped matrix evaluation over the candidate set — no simulation

@@ -23,11 +23,14 @@ from repro.core.numa.topology import (
     glued_8s,
     mesh2d,
     ring,
+    snc,
 )
 from repro.core.numa.machine import (
     MachineSpec,
     E5_2630_V3,
+    E5_2630_V3_THROTTLED,
     E5_2699_V3,
+    E5_2699_V3_SNC2,
     E7_4830_V3,
     E7_8860_V3,
     MACHINES,
@@ -50,9 +53,12 @@ __all__ = [
     "glued_8s",
     "mesh2d",
     "ring",
+    "snc",
     "MachineSpec",
     "E5_2630_V3",
+    "E5_2630_V3_THROTTLED",
     "E5_2699_V3",
+    "E5_2699_V3_SNC2",
     "E7_4830_V3",
     "E7_8860_V3",
     "MACHINES",

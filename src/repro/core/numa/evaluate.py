@@ -64,9 +64,10 @@ def _composition_table(s: int, cap: int, n: int) -> list[list[int]]:
 
 
 def count_placements(machine: MachineSpec, n_threads: int) -> int:
-    """How many one-thread-per-core distributions of ``n_threads`` exist."""
-    table = _composition_table(machine.sockets, machine.cores_per_socket, n_threads)
-    return table[machine.sockets][n_threads]
+    """How many one-thread-per-core distributions of ``n_threads`` over the
+    machine's NUMA nodes exist."""
+    table = _composition_table(machine.n_nodes, machine.cores_per_node, n_threads)
+    return table[machine.n_nodes][n_threads]
 
 
 def enumerate_placements(
@@ -77,20 +78,22 @@ def enumerate_placements(
     seed: int = 0,
 ) -> Array:
     """All (or a deterministic sample of) thread distributions over the
-    machine's sockets keeping one thread per core — the s >= 2
-    generalization of the paper's §6.2.2 sweep.
+    machine's NUMA nodes keeping one thread per core — the s >= 2
+    generalization of the paper's §6.2.2 sweep, with per-node core caps
+    (``cores_per_node``, so SNC machines never overfill a half-socket
+    domain).
 
-    Placements are emitted in lexicographic order (socket-0 count
+    Placements are emitted in lexicographic order (node-0 count
     ascending), which at ``s = 2`` is exactly the classic ``[i, n - i]``
     sweep.  When the composition count exceeds ``max_placements`` a
     uniform sample of ranks (seeded, deterministic) is drawn and unranked
     through the counting table, so huge 8-socket spaces never need to be
     materialized.
     """
-    s, cap = machine.sockets, machine.cores_per_socket
+    s, cap = machine.n_nodes, machine.cores_per_node
     if not 0 <= n_threads <= s * cap:
         raise ValueError(
-            f"{n_threads} threads do not fit {s} sockets x {cap} cores"
+            f"{n_threads} threads do not fit {s} nodes x {cap} cores"
         )
     table = _composition_table(s, cap, n_threads)
     total = table[s][n_threads]
@@ -125,7 +128,7 @@ def sweep_placements(
     """All thread distributions that keep one thread per core (paper
     §6.2.2: "varied the distribution of the threads between the two
     sockets maintaining a single thread per core") — generalized to any
-    socket count via :func:`enumerate_placements`."""
+    NUMA-node count via :func:`enumerate_placements`."""
     return enumerate_placements(
         machine, n_threads, max_placements=max_placements, seed=seed
     )
@@ -481,6 +484,15 @@ def evaluate_accuracy(
     return _accuracy_from_batch(batch, 0)
 
 
+def _default_suite_threads(machine: MachineSpec) -> int:
+    """Largest single-socket thread count, rounded down so the symmetric
+    profiling run can split it evenly over the machine's NUMA nodes (a
+    no-op for every ``nodes_per_socket=1`` preset)."""
+    n_threads = machine.cores_per_socket
+    n_threads -= n_threads % machine.n_nodes
+    return n_threads or machine.n_nodes
+
+
 class SuiteAccuracy(NamedTuple):
     names: list[str]
     per_benchmark: dict[str, AccuracyResult]
@@ -502,7 +514,7 @@ def evaluate_suite(
     paper's "thousands of measurements" (§6.2.2) — in a single jitted
     ``evaluate_batch`` trace (no per-benchmark retracing)."""
     if n_threads is None:
-        n_threads = machine.cores_per_socket  # largest single-socket count
+        n_threads = _default_suite_threads(machine)
     names = suite_names(include_violators)
     key = jax.random.PRNGKey(seed)
     workloads = [benchmark_workload(name, n_threads) for name in names]
@@ -547,9 +559,9 @@ def evaluate_stability(
     between the two signatures (paper Figures 13–15).  Each machine's
     suite is fitted through one batched (cached) trace."""
     if n_threads_a is None:
-        n_threads_a = machine_a.cores_per_socket
+        n_threads_a = _default_suite_threads(machine_a)
     if n_threads_b is None:
-        n_threads_b = machine_b.cores_per_socket
+        n_threads_b = _default_suite_threads(machine_b)
     names = suite_names(include_violators)
     key = jax.random.PRNGKey(seed)
     keys_a, keys_b = [], []

@@ -27,6 +27,19 @@ tuples, so a ``MachineSpec`` remains a valid ``jax.jit`` static argument
 and cache-key component; array-valued topology input is canonicalized at
 construction and :meth:`MachineSpec.fingerprint` digests every field for
 content-addressed caches.
+
+The unit of placement is a NUMA **node**, not a socket.  A socket
+contributes ``nodes_per_socket`` nodes (sub-NUMA clustering / Cluster-on-
+Die splits a socket's memory controllers into 2+ domains joined by
+intra-socket links — see :func:`repro.core.numa.topology.snc`), so a
+machine exposes ``n_nodes = sockets * nodes_per_socket`` memory banks,
+placement slots of ``cores_per_node`` cores each, and a topology whose
+node count must equal ``n_nodes``.  ``core_rate`` may be a per-node tuple
+to model big.LITTLE-style parts or thermally throttled sockets; all
+bandwidth fields are **per node** (an SNC domain owns half its socket's
+channels, so its per-node ``local_*_bw`` is roughly half the socket's).
+Homogeneous machines with ``nodes_per_socket=1`` reproduce the per-socket
+model bit for bit.
 """
 
 from __future__ import annotations
@@ -37,21 +50,25 @@ from typing import NamedTuple
 import jax.numpy as jnp
 from jax import Array
 
-from repro.core.numa.topology import Topology, fully_connected, glued_8s
+from repro.core.numa.topology import Topology, fully_connected, glued_8s, snc
 
 GB = 1e9
 
 
 class MachineSpec(NamedTuple):
-    """A multi-socket NUMA machine.
+    """A multi-socket NUMA machine, modeled as a graph of NUMA nodes.
 
-    Bandwidth capacities are bytes/s.  ``remote_read_bw``/``remote_write_bw``
-    cap each *one-hop* ordered socket pair's path (remote controller +
-    interconnect direction); pairs whose route is longer are attenuated by
-    ``hop_attenuation`` per extra hop (:meth:`remote_read_caps`).  The
-    interconnect itself is ``topology``: per-link capacities plus static
-    routes, with every link on a route charged the full flow.
-    ``core_rate`` is instructions/s per thread at full speed.
+    Bandwidth capacities are bytes/s and **per node** (for
+    ``nodes_per_socket=1`` that is per socket, the paper's granularity).
+    ``remote_read_bw``/``remote_write_bw`` cap each *one-hop* ordered node
+    pair's path (remote controller + interconnect direction); pairs whose
+    route is longer are attenuated by ``hop_attenuation`` per extra hop
+    (:meth:`remote_read_caps`).  The interconnect itself is ``topology``:
+    per-link capacities plus static routes over ``n_nodes`` nodes, with
+    every link on a route charged the full flow.  ``core_rate`` is
+    instructions/s per thread at full speed — either one scalar for every
+    node or a per-node tuple (heterogeneous cores, throttled sockets);
+    both stay hashable so the spec remains a jit static argument.
     """
 
     name: str
@@ -61,23 +78,65 @@ class MachineSpec(NamedTuple):
     local_write_bw: float
     remote_read_bw: float
     remote_write_bw: float
-    core_rate: float
+    core_rate: float | tuple[float, ...]
     topology: Topology
     hop_attenuation: float = 1.0
+    nodes_per_socket: int = 1
 
     @property
     def total_cores(self) -> int:
         return self.sockets * self.cores_per_socket
 
     @property
+    def n_nodes(self) -> int:
+        """NUMA nodes — the unit of placement, memory banks and counters."""
+        return self.sockets * self.nodes_per_socket
+
+    @property
+    def cores_per_node(self) -> int:
+        return self.cores_per_socket // self.nodes_per_socket
+
+    @property
     def n_links(self) -> int:
         return self.topology.n_links
 
+    def node_rates(self) -> Array:
+        """``(n_nodes,)`` per-node core issue rate (instructions/s).  A
+        scalar ``core_rate`` broadcasts to every node."""
+        if isinstance(self.core_rate, tuple):
+            return jnp.asarray(self.core_rate, jnp.float32)
+        return jnp.full((self.n_nodes,), self.core_rate, jnp.float32)
+
+    def validate(self) -> None:
+        if self.nodes_per_socket < 1:
+            raise ValueError("nodes_per_socket must be >= 1")
+        if self.cores_per_socket % self.nodes_per_socket:
+            raise ValueError(
+                f"{self.cores_per_socket} cores/socket do not split evenly "
+                f"over {self.nodes_per_socket} nodes/socket"
+            )
+        if self.topology.n_nodes != self.n_nodes:
+            raise ValueError(
+                f"topology has {self.topology.n_nodes} nodes; machine has "
+                f"{self.sockets} sockets x {self.nodes_per_socket} nodes = "
+                f"{self.n_nodes}"
+            )
+        if isinstance(self.core_rate, tuple):
+            if len(self.core_rate) != self.n_nodes:
+                raise ValueError(
+                    f"core_rate has {len(self.core_rate)} entries for "
+                    f"{self.n_nodes} nodes"
+                )
+            if min(self.core_rate) <= 0:
+                raise ValueError("core_rate entries must be positive")
+        elif self.core_rate <= 0:
+            raise ValueError("core_rate must be positive")
+
     def bank_read_caps(self) -> Array:
-        return jnp.full((self.sockets,), self.local_read_bw)
+        return jnp.full((self.n_nodes,), self.local_read_bw)
 
     def bank_write_caps(self) -> Array:
-        return jnp.full((self.sockets,), self.local_write_bw)
+        return jnp.full((self.n_nodes,), self.local_write_bw)
 
     def link_caps(self) -> Array:
         """Per-link interconnect capacities, ``(n_links,)``."""
@@ -91,8 +150,9 @@ class MachineSpec(NamedTuple):
         return jnp.where(hops == 0, jnp.inf, base * att)
 
     def remote_read_caps(self) -> Array:
-        """``(s, s)`` per-ordered-pair remote read capacity: ``inf`` on the
-        diagonal, the 1-hop cap attenuated per extra routed hop elsewhere."""
+        """``(n_nodes, n_nodes)`` per-ordered-node-pair remote read capacity:
+        ``inf`` on the diagonal, the 1-hop cap attenuated per extra routed
+        hop elsewhere."""
         return self._remote_caps(self.remote_read_bw)
 
     def remote_write_caps(self) -> Array:
@@ -108,6 +168,7 @@ class MachineSpec(NamedTuple):
             self.name,
             self.sockets,
             self.cores_per_socket,
+            self.nodes_per_socket,
             self.local_read_bw,
             self.local_write_bw,
             self.remote_read_bw,
@@ -131,7 +192,7 @@ E5_2630_V3 = MachineSpec(
     local_write_bw=28.0 * GB,
     remote_read_bw=0.16 * 52.0 * GB,  # paper ratio 0.16
     remote_write_bw=0.23 * 28.0 * GB,  # paper ratio 0.23
-    core_rate=2.4e9,
+    core_rate=(2.4e9, 2.4e9),
     topology=fully_connected(2, 16.0 * GB),  # one QPI link
 )
 
@@ -145,7 +206,7 @@ E5_2699_V3 = MachineSpec(
     local_write_bw=34.0 * GB,
     remote_read_bw=0.59 * 62.0 * GB,  # paper ratio 0.59
     remote_write_bw=0.83 * 34.0 * GB,  # paper ratio 0.83
-    core_rate=2.3e9,
+    core_rate=(2.3e9, 2.3e9),
     topology=fully_connected(2, 51.2 * GB),
 )
 
@@ -166,7 +227,7 @@ E7_4830_V3 = MachineSpec(
     local_write_bw=25.0 * GB,
     remote_read_bw=0.30 * 46.0 * GB,
     remote_write_bw=0.40 * 25.0 * GB,
-    core_rate=2.1e9,
+    core_rate=(2.1e9,) * 4,
     topology=fully_connected(4, 19.2 * GB),
 )
 
@@ -183,9 +244,47 @@ E7_8860_V3 = MachineSpec(
     local_write_bw=27.0 * GB,
     remote_read_bw=0.35 * 50.0 * GB,
     remote_write_bw=0.45 * 27.0 * GB,
-    core_rate=2.2e9,
+    core_rate=(2.2e9,) * 8,
     topology=glued_8s(qpi_bw=12.8 * GB, nc_bw=9.6 * GB),
     hop_attenuation=0.8,
+)
+
+# ---------------------------------------------------------------------------
+# Node-graph presets: sub-NUMA clustering and heterogeneous core rates.
+# ---------------------------------------------------------------------------
+
+# The 18-core machine in SNC-2 / Cluster-on-Die mode: each socket splits
+# into two 9-core NUMA domains, each owning half the socket's memory
+# channels (half the local bandwidth) behind a fast in-die link; the two
+# domains share the socket's single QPI port, so a non-endpoint domain's
+# cross-socket traffic routes over 2-3 hops through the shared link.
+E5_2699_V3_SNC2 = MachineSpec(
+    name="E5-2699v3-18c-snc2",
+    sockets=2,
+    cores_per_socket=18,
+    nodes_per_socket=2,
+    local_read_bw=31.0 * GB,
+    local_write_bw=17.0 * GB,
+    remote_read_bw=0.59 * 31.0 * GB,  # paper ratio against the per-node bank
+    remote_write_bw=0.83 * 17.0 * GB,
+    core_rate=(2.3e9,) * 4,
+    topology=snc(2, 2, qpi_bw=51.2 * GB, intra_bw=44.0 * GB),
+    hop_attenuation=0.9,
+)
+
+# The 8-core machine with socket 1 thermally throttled to 2/3 clock — the
+# big.LITTLE-style asymmetry case: identical banks and links, but threads
+# on node 1 issue (and demand bandwidth) at only 1.6 GHz.
+E5_2630_V3_THROTTLED = MachineSpec(
+    name="E5-2630v3-8c-throttled",
+    sockets=2,
+    cores_per_socket=8,
+    local_read_bw=52.0 * GB,
+    local_write_bw=28.0 * GB,
+    remote_read_bw=0.16 * 52.0 * GB,
+    remote_write_bw=0.23 * 28.0 * GB,
+    core_rate=(2.4e9, 1.6e9),
+    topology=fully_connected(2, 16.0 * GB),
 )
 
 MACHINES: dict[str, MachineSpec] = {
@@ -193,7 +292,12 @@ MACHINES: dict[str, MachineSpec] = {
     E5_2699_V3.name: E5_2699_V3,
     E7_4830_V3.name: E7_4830_V3,
     E7_8860_V3.name: E7_8860_V3,
+    E5_2699_V3_SNC2.name: E5_2699_V3_SNC2,
+    E5_2630_V3_THROTTLED.name: E5_2630_V3_THROTTLED,
 }
+
+for _machine in MACHINES.values():
+    _machine.validate()
 
 
 def make_machine(
@@ -205,23 +309,37 @@ def make_machine(
     remote_read_ratio: float = 0.5,
     remote_write_ratio: float = 0.5,
     qpi_bw: float = 32.0 * GB,
-    core_rate: float = 2.4e9,
+    core_rate: float | tuple[float, ...] = 2.4e9,
     topology: Topology | None = None,
     hop_attenuation: float = 1.0,
+    nodes_per_socket: int = 1,
+    intra_bw: float | None = None,
 ) -> MachineSpec:
     """Build a custom machine from local bandwidths and remote/local ratios
     (the way the paper characterizes its systems).  Without an explicit
-    ``topology`` every socket pair gets a direct ``qpi_bw`` link (the old
-    scalar-interconnect behaviour); pass a :class:`Topology` — or build one
-    with :func:`repro.core.numa.topology.from_bandwidth_matrix` — for
-    routed machines."""
+    ``topology``, every node pair gets a direct ``qpi_bw`` link when
+    ``nodes_per_socket == 1`` (the old scalar-interconnect behaviour), or
+    an SNC topology (:func:`repro.core.numa.topology.snc`, with
+    ``intra_bw`` intra-socket links — default ``2 * qpi_bw``) when a
+    socket hosts several nodes.  ``core_rate`` may be a scalar (every node
+    identical) or a per-node sequence, which is canonicalized to a
+    hashable per-node tuple."""
+    n_nodes = sockets * nodes_per_socket
     if topology is None:
-        topology = fully_connected(sockets, qpi_bw)
-    if topology.n_nodes != sockets:
-        raise ValueError(
-            f"topology has {topology.n_nodes} nodes for {sockets} sockets"
-        )
-    return MachineSpec(
+        if nodes_per_socket == 1:
+            topology = fully_connected(sockets, qpi_bw)
+        else:
+            topology = snc(
+                sockets,
+                nodes_per_socket,
+                qpi_bw=qpi_bw,
+                intra_bw=2.0 * qpi_bw if intra_bw is None else intra_bw,
+            )
+    if not isinstance(core_rate, (int, float)):
+        core_rate = tuple(float(r) for r in core_rate)
+        if len(core_rate) == 1:
+            core_rate = core_rate * n_nodes
+    machine = MachineSpec(
         name=name,
         sockets=sockets,
         cores_per_socket=cores_per_socket,
@@ -232,4 +350,7 @@ def make_machine(
         core_rate=core_rate,
         topology=topology,
         hop_attenuation=hop_attenuation,
+        nodes_per_socket=nodes_per_socket,
     )
+    machine.validate()
+    return machine

@@ -4,6 +4,12 @@ Given a machine, a workload and a thread placement this computes the
 execution rate of every thread under bandwidth saturation and emits the
 performance counters the paper's fitting procedure reads.
 
+Placements are vectors of thread counts per NUMA *node* (for
+``nodes_per_socket=1`` machines a node is a socket, the paper's case).
+Each thread issues at its node's ``core_rate`` — heterogeneous machines
+(throttled sockets, big.LITTLE) make threads on slow nodes demand
+proportionally less bandwidth and retire fewer instructions.
+
 The saturation model is *progressive filling* (max-min fairness): all
 threads speed up together until some resource (a memory bank's read or
 write capacity, a remote path, the interconnect, or the core issue rate)
@@ -36,18 +42,18 @@ _EPS = 1e-12
 
 class SimulationResult(NamedTuple):
     rates: Array  # (n,) per-thread execution-rate multiplier in (0, 1]
-    read_flows: Array  # (s, s) bytes/s from socket i CPUs to bank j
-    write_flows: Array  # (s, s)
+    read_flows: Array  # (n_nodes, n_nodes) bytes/s from node i CPUs to bank j
+    write_flows: Array  # (n_nodes, n_nodes)
     sample: CounterSample  # the counters the model is allowed to see
     throughput: Array  # scalar: sum of thread rates (relative performance)
 
 
-def _thread_sockets(n_per_socket: Array, n_threads: int) -> Array:
-    """Contiguous thread->socket assignment: the first ``n_0`` threads land
-    on socket 0, the next ``n_1`` on socket 1, ...  (This ordering is what
-    makes the Page-rank violator's early-chunk threads move between sockets
+def _thread_nodes(n_per_node: Array, n_threads: int) -> Array:
+    """Contiguous thread->node assignment: the first ``n_0`` threads land
+    on node 0, the next ``n_1`` on node 1, ...  (This ordering is what
+    makes the Page-rank violator's early-chunk threads move between nodes
     as the placement changes.)"""
-    bounds = jnp.cumsum(n_per_socket)
+    bounds = jnp.cumsum(n_per_node)
     t = jnp.arange(n_threads)
     return jnp.searchsorted(bounds, t, side="right").astype(jnp.int32)
 
@@ -57,19 +63,20 @@ def _mix_rows(
     local_frac: Array,
     per_thread_frac: Array,
     static_socket: Array,
-    socket_of: Array,
-    n_per_socket: Array,
+    node_of: Array,
+    n_per_node: Array,
 ) -> Array:
     """Ground-truth per-thread traffic mix over banks — the per-thread
-    version of the paper's §4 class matrices."""
-    s = n_per_socket.shape[0]
-    n = socket_of.shape[0]
-    nf = n_per_socket.astype(jnp.float32)
+    version of the paper's §4 class matrices.  One bank per NUMA node;
+    ``static_socket`` names the *node* holding the Static allocation."""
+    s = n_per_node.shape[0]
+    n = node_of.shape[0]
+    nf = n_per_node.astype(jnp.float32)
     used = (nf > 0).astype(jnp.float32)
     s_used = jnp.maximum(used.sum(), 1.0)
 
     static_row = (jnp.arange(s) == static_socket).astype(jnp.float32)  # (s,)
-    local_rows = jax.nn.one_hot(socket_of, s)  # (n, s)
+    local_rows = jax.nn.one_hot(node_of, s)  # (n, s)
     pt_row = nf / jnp.maximum(nf.sum(), 1.0)  # (s,)
     il_row = used / s_used  # (s,)
 
@@ -87,26 +94,27 @@ def _resource_tensor(
     machine: MachineSpec,
     read_unit: Array,  # (n, s) bytes/s to each bank at full speed
     write_unit: Array,  # (n, s)
-    socket_of: Array,  # (n,)
+    node_of: Array,  # (n,)
 ) -> tuple[Array, Array]:
     """Build the per-thread resource-usage matrix ``U[t, r]`` and the
     capacity vector ``caps[r]``.
 
-    Resources: bank read caps (s), bank write caps (s), remote read paths
-    (s*s, diagonal unconstrained, per-pair hop-attenuated capacity), remote
-    write paths (s*s), interconnect *links* (n_links): a flow from socket
+    With ``s = machine.n_nodes`` (one bank per NUMA node), resources are:
+    bank read caps (s), bank write caps (s), remote read paths (s*s,
+    diagonal unconstrained, per-pair hop-attenuated capacity), remote
+    write paths (s*s), interconnect *links* (n_links): a flow from node
     ``i`` to bank ``j`` charges every link on ``route(i, j)``.
 
     The routing structure is static (python tuples on the machine), so the
     link slab keeps a fixed ``(n, n_links)`` shape that jit and vmap handle
-    identically for any socket count or topology.
+    identically for any node count or topology.
     """
-    s = machine.sockets
-    n = socket_of.shape[0]
+    s = machine.n_nodes
+    n = node_of.shape[0]
     topo = machine.topology
-    onehot = jax.nn.one_hot(socket_of, s)  # (n, s)
+    onehot = jax.nn.one_hot(node_of, s)  # (n, s)
 
-    # (n, s, s): thread t's flow from its socket i to bank j.
+    # (n, s, s): thread t's flow from its node i to bank j.
     rr = onehot[:, :, None] * read_unit[:, None, :]
     ww = onehot[:, :, None] * write_unit[:, None, :]
     off_diag = (1.0 - jnp.eye(s))[None, :, :]
@@ -189,40 +197,42 @@ def _progressive_fill(usage: Array, caps: Array, iterations: int) -> Array:
 def simulate(
     machine: MachineSpec,
     workload: Workload,
-    n_per_socket: Array,
+    n_per_node: Array,
     *,
     elapsed: float = 1.0,
     noise_std: float = 0.0,
     background_bw: float = 0.0,
     key: Array | None = None,
 ) -> SimulationResult:
-    """Run the workload on the machine under the given placement and emit
-    ground truth + the paper-visible performance counters."""
-    s = machine.sockets
+    """Run the workload on the machine under the given placement (threads
+    per NUMA node) and emit ground truth + the paper-visible performance
+    counters."""
+    s = machine.n_nodes
     n = workload.n_threads
-    n_per_socket = jnp.asarray(n_per_socket)
-    socket_of = _thread_sockets(n_per_socket, n)
+    n_per_node = jnp.asarray(n_per_node)
+    node_of = _thread_nodes(n_per_node, n)
+    rate_of = machine.node_rates()[node_of]  # (n,) per-thread issue rate
 
     read_mix = _mix_rows(
         workload.read_static,
         workload.read_local,
         workload.read_per_thread,
         workload.static_socket,
-        socket_of,
-        n_per_socket,
+        node_of,
+        n_per_node,
     )
     write_mix = _mix_rows(
         workload.write_static,
         workload.write_local,
         workload.write_per_thread,
         workload.static_socket,
-        socket_of,
-        n_per_socket,
+        node_of,
+        n_per_node,
     )
-    read_unit = machine.core_rate * workload.read_bpi[:, None] * read_mix
-    write_unit = machine.core_rate * workload.write_bpi[:, None] * write_mix
+    read_unit = rate_of[:, None] * workload.read_bpi[:, None] * read_mix
+    write_unit = rate_of[:, None] * workload.write_bpi[:, None] * write_mix
 
-    usage, caps = _resource_tensor(machine, read_unit, write_unit, socket_of)
+    usage, caps = _resource_tensor(machine, read_unit, write_unit, node_of)
     # Each progressive-filling iteration freezes at least one thread set
     # (either a bottleneck's users or, at lam* >= 1, every active thread),
     # and each bottleneck saturates at most one new resource — so
@@ -232,10 +242,10 @@ def simulate(
     iterations = min(usage.shape[0], usage.shape[1]) + 1
     rates = _progressive_fill(usage, caps, iterations)
 
-    onehot = jax.nn.one_hot(socket_of, s)
+    onehot = jax.nn.one_hot(node_of, s)
     read_flows = onehot.T @ (rates[:, None] * read_unit) * elapsed
     write_flows = onehot.T @ (rates[:, None] * write_unit) * elapsed
-    instructions = onehot.T @ (rates * machine.core_rate) * elapsed
+    instructions = onehot.T @ (rates * rate_of) * elapsed
 
     if noise_std > 0.0 or background_bw > 0.0:
         if key is None:
@@ -252,7 +262,7 @@ def simulate(
         )
 
     sample = counters_from_flows(
-        read_flows, write_flows, instructions, jnp.asarray(elapsed), n_per_socket
+        read_flows, write_flows, instructions, jnp.asarray(elapsed), n_per_node
     )
     return SimulationResult(
         rates=rates,
@@ -266,36 +276,36 @@ def simulate(
 def simulate_counters(
     machine: MachineSpec,
     workload: Workload,
-    n_per_socket: Array,
+    n_per_node: Array,
     **kwargs,
 ) -> CounterSample:
-    return simulate(machine, workload, n_per_socket, **kwargs).sample
+    return simulate(machine, workload, n_per_node, **kwargs).sample
 
 
 def symmetric_placement(machine: MachineSpec, n_threads: int) -> Array:
-    """Paper §5.1 run 1: equal threads per socket, 1 thread/core."""
-    assert n_threads % machine.sockets == 0, "symmetric run needs equal split"
-    per = n_threads // machine.sockets
-    assert per <= machine.cores_per_socket
-    return jnp.full((machine.sockets,), per, jnp.int32)
+    """Paper §5.1 run 1: equal threads per NUMA node, 1 thread/core."""
+    assert n_threads % machine.n_nodes == 0, "symmetric run needs equal split"
+    per = n_threads // machine.n_nodes
+    assert per <= machine.cores_per_node
+    return jnp.full((machine.n_nodes,), per, jnp.int32)
 
 
 def asymmetric_placement(machine: MachineSpec, n_threads: int) -> Array:
     """Paper §5.1 run 2: same thread count, unequal split (Figure 7 uses a
-    roughly 2:1 split on the first socket).
+    roughly 2:1 split on the first socket) — generalized to NUMA nodes.
 
-    The 3:1 target split can be infeasible — e.g. 2 threads on a 2-socket
-    machine leave zero threads for the second socket, and a full machine
+    The 3:1 target split can be infeasible — e.g. 2 threads on a 2-node
+    machine leave zero threads for the second node, and a full machine
     admits only the equal split.  Instead of asserting, fall back to the
-    nearest valid split: socket 0 gets the feasible count closest to the
-    3:1 target (ties prefer the heavier socket) that still yields an
+    nearest valid split: node 0 gets the feasible count closest to the
+    3:1 target (ties prefer the heavier node) that still yields an
     *unequal* split when any exists; a perfectly full machine returns the
     only (equal) valid placement.
     """
-    s = machine.sockets
-    cap = machine.cores_per_socket
+    s = machine.n_nodes
+    cap = machine.cores_per_node
     if not 0 < n_threads <= s * cap:
-        raise ValueError(f"{n_threads} threads do not fit {s} sockets x {cap} cores")
+        raise ValueError(f"{n_threads} threads do not fit {s} nodes x {cap} cores")
     target = -(-3 * n_threads // 4)
 
     def split_for(first: int) -> list[int] | None:

@@ -20,9 +20,18 @@ per topology; inside a trace they are compile-time constants, so the
 simulator's resource slab keeps a fixed ``(n, n_links)`` shape that jit
 and vmap handle identically for any socket count.
 
-Routing is hop-count shortest path (BFS) with deterministic tie-breaks:
-every node keeps the smallest-id predecessor discovered in the previous
-BFS layer, so routing tables are reproducible across processes.
+Routing is hop-count shortest path (BFS) with bandwidth-aware tie-breaks:
+among equal-hop routes the one with the largest bottleneck link bandwidth
+wins (widest-shortest path), and remaining ties fall back to the
+smallest-id predecessor in the previous BFS layer — with uniform link
+bandwidths this reduces exactly to the old smallest-predecessor rule, so
+routing tables stay reproducible across processes.
+
+A topology's nodes are NUMA *nodes*, not sockets: a sub-NUMA-clustered
+(SNC / Cluster-on-Die) part contributes ``nodes_per_socket`` nodes per
+socket, joined by intra-socket links (:func:`snc`), and the
+:class:`~repro.core.numa.machine.MachineSpec` embedding the topology
+requires ``n_nodes == sockets * nodes_per_socket``.
 """
 
 from __future__ import annotations
@@ -34,7 +43,7 @@ import numpy as np
 
 
 class Topology(NamedTuple):
-    """An interconnect graph over ``n_nodes`` sockets with static routes.
+    """An interconnect graph over ``n_nodes`` NUMA nodes with static routes.
 
     ``link_ends[l] = (i, j)`` with ``i < j`` names the l-th undirected
     link; ``link_bw[l]`` is its capacity in bytes/s (both directions share
@@ -104,7 +113,7 @@ class Topology(NamedTuple):
                         raise ValueError(f"self-route {i} must be empty")
                     continue
                 if not r:
-                    raise ValueError(f"sockets {i} and {j} are disconnected")
+                    raise ValueError(f"nodes {i} and {j} are disconnected")
                 at = i
                 for l in r:
                     a, b = self.link_ends[l]
@@ -150,40 +159,64 @@ def _route_incidence(topo: Topology, *, multihop_only: bool) -> np.ndarray:
 
 
 def _shortest_routes(
-    n: int, link_ends: Sequence[tuple[int, int]]
+    n: int,
+    link_ends: Sequence[tuple[int, int]],
+    link_bw: Sequence[float] | None = None,
 ) -> tuple[tuple[int, ...], ...]:
-    """BFS hop-count routing for every ordered pair.  Equal-hop ties break
-    deterministically: each node keeps the smallest-id predecessor found in
-    the previous BFS layer (not necessarily the globally lexicographically
-    smallest node sequence)."""
+    """BFS hop-count routing for every ordered pair, with bandwidth-aware
+    tie-breaking: among equal-hop shortest paths the route with the largest
+    bottleneck link bandwidth wins (widest-shortest path).  Remaining ties
+    break deterministically toward the smallest-id predecessor in the
+    previous BFS layer, then the smallest link id — with uniform link
+    bandwidths (or ``link_bw=None``) this is exactly the old
+    smallest-predecessor rule, so routing tables are reproducible across
+    processes and unchanged for unweighted topologies."""
+    widths = (
+        [float("inf")] * len(link_ends) if link_bw is None else [float(b) for b in link_bw]
+    )
     adj: list[list[tuple[int, int]]] = [[] for _ in range(n)]  # node -> (nbr, link)
     for l, (i, j) in enumerate(link_ends):
         adj[i].append((j, l))
         adj[j].append((i, l))
     for nbrs in adj:
-        nbrs.sort()  # frontier nodes claim successors smallest-id first
+        nbrs.sort()
 
     routes: list[tuple[int, ...]] = []
     for src in range(n):
-        prev: dict[int, tuple[int, int]] = {}  # node -> (prev node, link)
         dist = {src: 0}
+        order: list[int] = []  # nodes in (layer, id) order — DP dependencies first
         frontier = [src]
         while frontier:
             nxt: list[int] = []
             for u in frontier:
-                for v, l in adj[u]:
+                for v, _ in adj[u]:
                     if v not in dist:
                         dist[v] = dist[u] + 1
-                        prev[v] = (u, l)
                         nxt.append(v)
-            nxt.sort()
+            nxt = sorted(set(nxt))
+            order.extend(nxt)
             frontier = nxt
+        # Widest-path DP over the BFS layering: a node's route width is the
+        # best min(predecessor width, entering link bandwidth) over the
+        # previous layer, ties preferring (smallest pred id, smallest link).
+        width = {src: float("inf")}
+        prev: dict[int, tuple[int, int]] = {}  # node -> (prev node, link)
+        for v in order:
+            best: tuple[float, int, int] | None = None
+            for u, l in adj[v]:
+                if dist.get(u) == dist[v] - 1:
+                    key = (-min(width[u], widths[l]), u, l)
+                    if best is None or key < best:
+                        best = key
+            assert best is not None  # v was discovered from the previous layer
+            width[v] = -best[0]
+            prev[v] = (best[1], best[2])
         for dst in range(n):
             if dst == src:
                 routes.append(())
                 continue
             if dst not in dist:
-                raise ValueError(f"socket {dst} unreachable from {src}")
+                raise ValueError(f"node {dst} unreachable from {src}")
             path: list[int] = []
             at = dst
             while at != src:
@@ -218,12 +251,13 @@ def from_bandwidth_matrix(name: str, bw: np.ndarray) -> Topology:
         raise ValueError("link bandwidths must be >= 0 (0 = no link)")
     n = bw.shape[0]
     ends = [(i, j) for i in range(n) for j in range(i + 1, n) if bw[i, j] > 0]
+    bws = [float(bw[i, j]) for i, j in ends]
     topo = Topology(
         name=name,
         n_nodes=n,
         link_ends=tuple(ends),
-        link_bw=tuple(float(bw[i, j]) for i, j in ends),
-        routes=_shortest_routes(n, ends),
+        link_bw=tuple(bws),
+        routes=_shortest_routes(n, ends, bws),
     )
     topo.validate()
     return topo
@@ -239,12 +273,13 @@ def fully_connected(n: int, link_bw) -> Topology:
     QPI-meshed quad Haswell-EX).  Links enumerate in upper-triangle order,
     matching the scalar-pair model's resource layout exactly."""
     ends = [(i, j) for i in range(n) for j in range(i + 1, n)]
+    bws = _as_bw_list(link_bw, len(ends), "fully_connected")
     topo = Topology(
         name=f"fc{n}",
         n_nodes=n,
         link_ends=tuple(ends),
-        link_bw=tuple(_as_bw_list(link_bw, len(ends), "fully_connected")),
-        routes=_shortest_routes(n, ends),
+        link_bw=tuple(bws),
+        routes=_shortest_routes(n, ends, bws),
     )
     topo.validate()
     return topo
@@ -257,12 +292,13 @@ def ring(n: int, link_bw) -> Topology:
         raise ValueError("ring needs >= 2 nodes")
     ends = sorted(tuple(sorted((i, (i + 1) % n))) for i in range(n))
     ends = list(dict.fromkeys(ends))  # n == 2: one link, not two
+    bws = _as_bw_list(link_bw, len(ends), "ring")
     topo = Topology(
         name=f"ring{n}",
         n_nodes=n,
         link_ends=tuple(ends),
-        link_bw=tuple(_as_bw_list(link_bw, len(ends), "ring")),
-        routes=_shortest_routes(n, ends),
+        link_bw=tuple(bws),
+        routes=_shortest_routes(n, ends, bws),
     )
     topo.validate()
     return topo
@@ -283,12 +319,13 @@ def mesh2d(rows: int, cols: int, link_bw) -> Topology:
             if r + 1 < rows:
                 ends.append((u, u + cols))
     ends.sort()
+    bws = _as_bw_list(link_bw, len(ends), "mesh2d")
     topo = Topology(
         name=f"mesh{rows}x{cols}",
         n_nodes=n,
         link_ends=tuple(ends),
-        link_bw=tuple(_as_bw_list(link_bw, len(ends), "mesh2d")),
-        routes=_shortest_routes(n, ends),
+        link_bw=tuple(bws),
+        routes=_shortest_routes(n, ends, bws),
     )
     topo.validate()
     return topo
@@ -319,7 +356,49 @@ def glued_8s(qpi_bw: float, nc_bw: float) -> Topology:
         n_nodes=8,
         link_ends=tuple(ends),
         link_bw=tuple(bws),
-        routes=_shortest_routes(8, ends),
+        routes=_shortest_routes(8, ends, bws),
+    )
+    topo.validate()
+    return topo
+
+
+def snc(
+    sockets: int, nodes_per_socket: int, *, qpi_bw: float, intra_bw: float
+) -> Topology:
+    """Sub-NUMA clustering (SNC / Cluster-on-Die): each socket splits into
+    ``nodes_per_socket`` NUMA nodes joined by fast intra-socket (in-die
+    mesh) links, while each socket's FIRST node is its interconnect
+    endpoint and the endpoints are fully QPI-meshed.  Cross-socket traffic
+    from a non-endpoint node routes through its socket's endpoint, so both
+    of a socket's nodes *share* the one QPI port — the SNC reality a
+    per-socket machine model cannot express.  With ``nodes_per_socket=1``
+    this degenerates to :func:`fully_connected`."""
+    if sockets < 2:
+        raise ValueError("snc needs >= 2 sockets")
+    if nodes_per_socket < 1:
+        raise ValueError("snc needs >= 1 node per socket")
+    ends: list[tuple[int, int]] = []
+    bws: list[float] = []
+    for s in range(sockets):
+        base = s * nodes_per_socket
+        for i in range(nodes_per_socket):
+            for j in range(i + 1, nodes_per_socket):
+                ends.append((base + i, base + j))
+                bws.append(float(intra_bw))
+    for a in range(sockets):
+        for b in range(a + 1, sockets):
+            ends.append((a * nodes_per_socket, b * nodes_per_socket))
+            bws.append(float(qpi_bw))
+    order = sorted(range(len(ends)), key=lambda k: ends[k])
+    ends = [ends[k] for k in order]
+    bws = [bws[k] for k in order]
+    n = sockets * nodes_per_socket
+    topo = Topology(
+        name=f"snc{sockets}x{nodes_per_socket}",
+        n_nodes=n,
+        link_ends=tuple(ends),
+        link_bw=tuple(bws),
+        routes=_shortest_routes(n, ends, bws),
     )
     topo.validate()
     return topo

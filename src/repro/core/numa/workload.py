@@ -17,12 +17,13 @@ from jax import Array
 
 
 class Workload(NamedTuple):
-    """Ground truth for ``n`` threads on an ``s``-socket machine.
+    """Ground truth for ``n`` threads on an ``s``-node machine.
 
     Fraction arrays have shape ``(n,)`` and describe each thread's true
     traffic mix per direction (interleaved = remainder).  ``*_bpi`` are
     bytes/instruction intensities.  ``static_socket`` is shared (the Static
-    class is, by definition, a single allocation).
+    class is, by definition, a single allocation) and names the NUMA *node*
+    holding it — on ``nodes_per_socket=1`` machines, the socket.
     """
 
     name: str

@@ -13,11 +13,11 @@ from repro.core.numa import (
     pure_workload,
     simulate,
 )
-from repro.core.numa.simulator import _resource_tensor, _thread_sockets, _mix_rows
+from repro.core.numa.simulator import _resource_tensor, _thread_nodes, _mix_rows
 
 
-def test_thread_socket_assignment_contiguous():
-    got = _thread_sockets(jnp.asarray([3, 1]), 4)
+def test_thread_node_assignment_contiguous():
+    got = _thread_nodes(jnp.asarray([3, 1]), 4)
     np.testing.assert_array_equal(np.asarray(got), [0, 0, 0, 1])
 
 
@@ -108,11 +108,14 @@ def test_vmap_over_placements():
 
 
 def test_conservation_flows_match_demand():
-    """Total flows equal sum over threads of rate*intensity*core_rate."""
+    """Total flows equal sum over threads of rate*intensity*core_rate,
+    each thread issuing at its node's rate."""
     wl = mixed_workload("c", 8, read_mix=(0.1, 0.5, 0.2), read_bpi=0.4, write_bpi=0.1)
     machine = E5_2699_V3
-    res = simulate(machine, wl, jnp.asarray([5, 3]))
-    expect_read = float((res.rates * machine.core_rate * np.asarray(wl.read_bpi)).sum())
+    n_per = jnp.asarray([5, 3])
+    res = simulate(machine, wl, n_per)
+    rate_of = np.asarray(machine.node_rates())[np.asarray(_thread_nodes(n_per, 8))]
+    expect_read = float((np.asarray(res.rates) * rate_of * np.asarray(wl.read_bpi)).sum())
     np.testing.assert_allclose(float(res.read_flows.sum()), expect_read, rtol=1e-5)
 
 

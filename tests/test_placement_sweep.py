@@ -204,7 +204,7 @@ def test_vectorized_link_resources_match_reference_loop():
     """The vectorized per-link charging (endpoint gather + routed-incidence
     matmul) must reproduce a python loop walking every ordered pair's route
     on the glued 8-socket topology."""
-    from repro.core.numa.simulator import _resource_tensor, _thread_sockets
+    from repro.core.numa.simulator import _resource_tensor, _thread_nodes
 
     machine = E7_8860_V3
     topo = machine.topology
@@ -213,7 +213,7 @@ def test_vectorized_link_resources_match_reference_loop():
     read_unit = jnp.asarray(rng.uniform(0, 1e9, (n_threads, machine.sockets)), jnp.float32)
     write_unit = jnp.asarray(rng.uniform(0, 1e9, (n_threads, machine.sockets)), jnp.float32)
     n_per = jnp.asarray([4, 4, 2, 2, 2, 1, 1, 0], jnp.int32)
-    socket_of = _thread_sockets(n_per, n_threads)
+    socket_of = _thread_nodes(n_per, n_threads)
     usage, caps = _resource_tensor(machine, read_unit, write_unit, socket_of)
 
     s = machine.sockets

@@ -32,12 +32,13 @@ from repro.core.numa import (
     mixed_workload,
     ring,
     simulate,
+    snc,
 )
 from repro.core.numa.benchmarks import benchmark_workload
 from repro.core.numa.simulator import (
     _progressive_fill,
     _resource_tensor,
-    _thread_sockets,
+    _thread_nodes,
     asymmetric_placement,
     symmetric_placement,
 )
@@ -129,6 +130,64 @@ def test_from_bandwidth_matrix_accepts_arrays_and_stays_hashable():
         from_bandwidth_matrix("neg", neg)
 
 
+def test_route_tiebreak_prefers_widest_bottleneck():
+    """Among equal-hop shortest paths the route with the largest bottleneck
+    link bandwidth must win: on a 4-ring whose (0,1) link is thin, traffic
+    0 -> 2 goes the fat way round even though node 1 is the smaller-id
+    predecessor."""
+    topo = ring(4, [2e9, 10e9, 10e9, 10e9])  # links (0,1),(0,3),(1,2),(2,3)
+    assert topo.link_ends == ((0, 1), (0, 3), (1, 2), (2, 3))
+    assert topo.route(0, 2) == (1, 3)  # via node 3: bottleneck 10 GB/s
+    assert topo.route(2, 0) == (3, 1)
+    # the thin link still carries its own endpoint pair
+    assert topo.route(0, 1) == (0,)
+    # flip the fat side: one fat link cannot beat the thin bottleneck, so
+    # the deterministic smallest-predecessor fallback decides again
+    sym = ring(4, [10e9, 10e9, 10e9, 10e9])
+    assert sym.route(0, 2) == (0, 2)  # uniform bw: via node 1 (old rule)
+
+
+def test_route_tiebreak_deterministic_fallback_preserved():
+    """With uniform link bandwidths the widest-path rule degenerates to the
+    smallest-id-predecessor tie-break, so unweighted routing tables are
+    unchanged: equal-width ties on the glued 8-socket machine still pick
+    the smallest-id intermediate."""
+    topo = glued_8s(qpi_bw=12.8e9, nc_bw=9.6e9)
+    # 0 -> 5: via twin 4 (nc then qpi) or via 1 (qpi then nc); both
+    # bottleneck at the nc link => fallback picks the smaller-id pred (1)
+    route = topo.route(0, 5)
+    mids = set(topo.link_ends[route[0]]) & set(topo.link_ends[route[1]])
+    assert mids == {1}
+    # a 6-ring with one fat link: the antipodal pair's two 3-hop paths tie
+    # on the thin bottleneck, so the fat link does not hijack the route
+    fat = ring(6, [5e9, 5e9, 50e9, 5e9, 5e9, 5e9])
+    thin = ring(6, 5e9)
+    assert fat.routes == thin.routes
+
+
+def test_snc_topology_structure_and_shared_port_routing():
+    """snc(): intra-socket links join a socket's nodes; only the first node
+    of each socket owns a QPI link, so a non-endpoint node's cross-socket
+    route passes through both sockets' endpoints (up to 3 hops)."""
+    topo = snc(2, 2, qpi_bw=51.2e9, intra_bw=44e9)
+    assert topo.n_nodes == 4 and topo.n_links == 3
+    assert topo.link_ends == ((0, 1), (0, 2), (2, 3))
+    assert topo.link_bw == (44e9, 51.2e9, 44e9)
+    hops = topo.hop_matrix()
+    assert hops[0, 2] == 1  # endpoint to endpoint: the QPI link
+    assert hops[1, 2] == 2  # non-endpoint routes through its endpoint
+    assert hops[1, 3] == 3  # far corner: intra + QPI + intra
+    qpi_link = topo.link_ends.index((0, 2))
+    for i, j in ((0, 2), (1, 2), (0, 3), (1, 3)):
+        assert qpi_link in topo.route(i, j)  # every cross-socket pair
+    # degenerate case: one node per socket == fully connected sockets
+    assert snc(3, 1, qpi_bw=1e9, intra_bw=2e9).link_ends == fully_connected(
+        3, 1e9
+    ).link_ends
+    with pytest.raises(ValueError):
+        snc(1, 2, qpi_bw=1e9, intra_bw=1e9)
+
+
 def test_machine_fingerprint_distinguishes_topologies():
     a = make_machine("m", sockets=4, qpi_bw=10e9)
     b = make_machine("m", sockets=4, qpi_bw=10e9)
@@ -207,7 +266,7 @@ def test_fully_connected_resource_tensor_is_bitwise_seed(machine, n_per):
     rng = np.random.default_rng(7)
     read_unit = jnp.asarray(rng.uniform(0, 2e9, (n_threads, machine.sockets)), jnp.float32)
     write_unit = jnp.asarray(rng.uniform(0, 1e9, (n_threads, machine.sockets)), jnp.float32)
-    socket_of = _thread_sockets(jnp.asarray(n_per, jnp.int32), n_threads)
+    socket_of = _thread_nodes(jnp.asarray(n_per, jnp.int32), n_threads)
     usage, caps = _resource_tensor(machine, read_unit, write_unit, socket_of)
     legacy_u, legacy_c = _seed_resource_tensor(
         machine, machine.topology.link_bw[0], read_unit, write_unit, socket_of
@@ -389,7 +448,7 @@ def test_progressive_fill_converges_in_reduced_iterations():
     machine = E7_8860_V3
     wl = benchmark_workload("CG", 32)
     n_per = jnp.asarray([8, 8, 4, 4, 4, 2, 2, 0], jnp.int32)
-    socket_of = _thread_sockets(n_per, 32)
+    socket_of = _thread_nodes(n_per, 32)
     read_mix = _mix_rows(
         wl.read_static, wl.read_local, wl.read_per_thread,
         wl.static_socket, socket_of, n_per,
@@ -398,8 +457,9 @@ def test_progressive_fill_converges_in_reduced_iterations():
         wl.write_static, wl.write_local, wl.write_per_thread,
         wl.static_socket, socket_of, n_per,
     )
-    read_unit = machine.core_rate * wl.read_bpi[:, None] * read_mix
-    write_unit = machine.core_rate * wl.write_bpi[:, None] * write_mix
+    rate_of = machine.node_rates()[socket_of]
+    read_unit = rate_of[:, None] * wl.read_bpi[:, None] * read_mix
+    write_unit = rate_of[:, None] * wl.write_bpi[:, None] * write_mix
     usage, caps = _resource_tensor(machine, read_unit, write_unit, socket_of)
     n, n_res = usage.shape
     assert n_res > n  # the 8-socket preset is resource-dominated
