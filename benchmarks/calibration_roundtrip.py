@@ -1,0 +1,169 @@
+"""Closed-loop validation of the learned topology calibration (CI-gated).
+
+For each preset under test this benchmark
+
+1. simulates a probe sweep on the *known* machine (synthetic ground
+   truth),
+2. fits a machine blind from the samples alone
+   (``repro.core.numa.calibrate.fit_from_simulated`` — the template keeps
+   only structure: link list, routes, core rates, remote path bases),
+3. reports the per-link bandwidth recovery error and the per-node local
+   bandwidth recovery error, and
+4. re-runs a placement sweep (``evaluate_batch``, same workloads /
+   placements / noise keys) on both the ground-truth and the fitted
+   machine and compares their median model errors.
+
+CI runs this as a gated step: non-zero exit when any per-link relative
+error exceeds ``--max-link-error`` or the refit sweep's median error
+drifts more than ``--max-sweep-delta`` percentage points from the
+ground-truth model's.  The ``--json`` artifact is uploaded alongside the
+placement-sweep artifact for trending.
+
+    PYTHONPATH=src python benchmarks/calibration_roundtrip.py \
+        [--json OUT.json] [--steps 200] [--noise-std 0.0] \
+        [--max-link-error 0.05] [--max-sweep-delta 0.25]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+
+def roundtrip(
+    machine,
+    *,
+    steps: int = 200,
+    noise_std: float = 0.0,
+    sweep_benchmarks: tuple[str, ...] = ("Swim", "CG", "EP", "NPO"),
+    sweep_noise_std: float = 0.02,
+    max_placements: int = 64,
+) -> dict:
+    """Fit one machine blind and score the recovery.  Returns a JSON-able
+    record (also consumed by the test suite and the example)."""
+    import jax
+    import numpy as np
+
+    from repro.core.numa.benchmarks import benchmark_workload
+    from repro.core.numa.calibrate import (
+        fit_from_simulated,
+        link_relative_errors,
+        local_bw_relative_errors,
+    )
+    from repro.core.numa.evaluate import evaluate_batch, sweep_placements
+
+    t0 = time.time()
+    result = fit_from_simulated(machine, steps=steps, noise_std=noise_std)
+    fit_s = time.time() - t0
+
+    link_err = link_relative_errors(result.machine, machine)
+    local_err = local_bw_relative_errors(result.machine, machine)
+
+    # Same workloads, placements and measurement-noise keys on both
+    # machines: any median-error difference is purely the fitted
+    # parameters' doing.
+    # two nodes' worth of threads, rounded down so the 2-run profiling
+    # fit can split them evenly over the machine's NUMA nodes
+    n_threads = 2 * machine.cores_per_node
+    n_threads -= n_threads % machine.n_nodes
+    placements = sweep_placements(machine, n_threads, max_placements=max_placements)
+    workloads = [benchmark_workload(b, n_threads) for b in sweep_benchmarks]
+    keys = jax.numpy.stack(
+        [jax.random.fold_in(jax.random.PRNGKey(0), i) for i in range(len(workloads))]
+    )
+    medians = {}
+    for label, m in (("truth", machine), ("fit", result.machine)):
+        batch = evaluate_batch(
+            m, workloads, placements, noise_std=sweep_noise_std, keys=keys
+        )
+        errs = np.asarray(batch.errors_combined).reshape(-1) * 100.0
+        medians[label] = float(np.median(errs))
+
+    return {
+        "machine": machine.name,
+        "topology": machine.topology.name,
+        "n_links": machine.n_links,
+        "n_samples": None,  # filled below for reporting symmetry
+        "steps": steps,
+        "noise_std": noise_std,
+        "fit_s": round(fit_s, 2),
+        "seed_loss": float(result.seed_loss),
+        "final_loss": float(result.final_loss),
+        "max_link_error": float(link_err.max()),
+        "median_link_error": float(np.median(link_err)),
+        "max_local_read_error": float(local_err["read"].max()),
+        "max_local_write_error": float(local_err["write"].max()),
+        "hop_attenuation_fit": float(result.machine.hop_attenuation),
+        "hop_attenuation_true": float(machine.hop_attenuation),
+        "sweep_median_error_truth_pct": medians["truth"],
+        "sweep_median_error_fit_pct": medians["fit"],
+        "sweep_median_delta_pp": abs(medians["fit"] - medians["truth"]),
+    }
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--json", type=Path, default=None)
+    parser.add_argument("--steps", type=int, default=200)
+    parser.add_argument("--noise-std", type=float, default=0.0)
+    parser.add_argument(
+        "--max-link-error",
+        type=float,
+        default=0.05,
+        help="gate: max allowed per-link relative recovery error",
+    )
+    parser.add_argument(
+        "--max-sweep-delta",
+        type=float,
+        default=0.25,
+        help="gate: max allowed |median sweep error(fit) - (truth)| in pp",
+    )
+    args = parser.parse_args()
+
+    from repro.core.numa import E5_2699_V3_SNC2, E7_8860_V3
+    from repro.core.numa.calibrate import probe_suite
+
+    failures: list[str] = []
+    records = []
+    for machine in (E7_8860_V3, E5_2699_V3_SNC2):
+        rec = roundtrip(machine, steps=args.steps, noise_std=args.noise_std)
+        rec["n_samples"] = len(probe_suite(machine))
+        records.append(rec)
+        print(f"{rec['machine']}: fit {rec['fit_s']}s over {rec['n_samples']} samples")
+        for k in (
+            "max_link_error",
+            "max_local_read_error",
+            "max_local_write_error",
+            "sweep_median_error_truth_pct",
+            "sweep_median_error_fit_pct",
+            "sweep_median_delta_pp",
+        ):
+            print(f"  {k}: {rec[k]:.6f}")
+        if rec["max_link_error"] > args.max_link_error:
+            failures.append(
+                f"{rec['machine']}: per-link recovery error "
+                f"{rec['max_link_error']:.4f} > {args.max_link_error}"
+            )
+        if rec["sweep_median_delta_pp"] > args.max_sweep_delta:
+            failures.append(
+                f"{rec['machine']}: refit sweep median drifted "
+                f"{rec['sweep_median_delta_pp']:.4f}pp > {args.max_sweep_delta}"
+            )
+
+    if args.json is not None:
+        args.json.parent.mkdir(parents=True, exist_ok=True)
+        args.json.write_text(json.dumps(records, indent=2) + "\n")
+        print(f"wrote {args.json}")
+
+    if failures:
+        for msg in failures:
+            print(f"CALIBRATION REGRESSION: {msg}", file=sys.stderr)
+        raise SystemExit(1)
+    print("calibration round-trip gate passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -75,8 +75,10 @@ def fig02_machine_bandwidths():
     dev = 0.0
     details = {}
     for m in (E5_2630_V3, E5_2699_V3):
-        rr = m.remote_read_bw / m.local_read_bw
-        rw = m.remote_write_bw / m.local_write_bw
+        # node_local_bw: robust to per-node local-bandwidth tuples (the
+        # paper machines are scalar, where the mean is the scalar itself)
+        rr = m.remote_read_bw / float(np.asarray(m.node_local_bw("read")).mean())
+        rw = m.remote_write_bw / float(np.asarray(m.node_local_bw("write")).mean())
         pr, pw = paper[m.name]
         dev = max(dev, abs(rr - pr), abs(rw - pw))
         details[m.name] = {"remote_read_ratio": rr, "remote_write_ratio": rw}

@@ -1,0 +1,165 @@
+"""Trend dashboard over the CI placement-sweep artifact history.
+
+CI uploads one ``placement-sweep-<sha>-<run_id>`` JSON artifact per
+push/nightly run (and gates each against the committed baseline).  This
+script turns the *history* of those artifacts into the dashboard the
+ROADMAP asked for: per-sweep median-error-over-time aggregation rendered
+as a markdown table with unicode sparklines, written to
+``$GITHUB_STEP_SUMMARY`` (so every run's summary page shows the trend)
+and to an uploaded artifact of its own.
+
+The workflow downloads the artifact history with ``gh api`` into a
+directory of ``<created_at>__<artifact-name>/placement_sweep.json``
+entries (see ``.github/workflows/ci.yml``); locally any directory whose
+(sorted) entries contain ``*.json`` sweep records works:
+
+    PYTHONPATH=src python benchmarks/sweep_dashboard.py sweep-history \
+        [--current sweep-results/placement_sweep.json] \
+        [--output sweep_dashboard.md] [--summary "$GITHUB_STEP_SUMMARY"]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+_SPARK_LEVELS = "▁▂▃▄▅▆▇█"
+
+
+def sparkline(values: list[float]) -> str:
+    """Render a series as unicode block characters (min..max normalized;
+    a flat series renders mid-level)."""
+    if not values:
+        return ""
+    lo, hi = min(values), max(values)
+    if hi <= lo:
+        return _SPARK_LEVELS[3] * len(values)
+    span = hi - lo
+    out = []
+    for v in values:
+        idx = int((v - lo) / span * (len(_SPARK_LEVELS) - 1) + 0.5)
+        out.append(_SPARK_LEVELS[idx])
+    return "".join(out)
+
+
+def load_history(history_dir: Path, current: Path | None = None) -> list[dict]:
+    """Collect sweep-record lists in run order.
+
+    Each entry of ``history_dir`` (sorted by name — the workflow prefixes
+    directory names with the artifact's ``created_at`` timestamp, so
+    lexicographic == chronological) contributes its JSON files; a
+    ``current`` artifact, if given, is appended last as this run's point.
+    Returns ``[{"run": label, "records": [sweep records]}]``; unreadable
+    or non-sweep JSON files are skipped (artifact history can contain
+    partial uploads from failed runs)."""
+    runs: list[dict] = []
+    if history_dir.is_dir():
+        for entry in sorted(history_dir.iterdir()):
+            paths = sorted(entry.glob("**/*.json")) if entry.is_dir() else [entry]
+            records: list[dict] = []
+            for path in paths:
+                if path.suffix != ".json":
+                    continue
+                try:
+                    data = json.loads(path.read_text())
+                except (OSError, json.JSONDecodeError):
+                    continue
+                if isinstance(data, list):
+                    records.extend(
+                        r for r in data if isinstance(r, dict) and "sweep" in r
+                    )
+            if records:
+                runs.append({"run": entry.name, "records": records})
+    if current is not None and current.exists():
+        data = json.loads(current.read_text())
+        records = [r for r in data if isinstance(r, dict) and "sweep" in r]
+        if records:
+            runs.append({"run": "current", "records": records})
+    return runs
+
+
+def aggregate(runs: list[dict]) -> dict[str, dict]:
+    """Per-sweep time series over the run history.
+
+    Returns ``{sweep label: {"errors": [...], "pps": [...], "runs":
+    [...]}}`` with one point per run that reported the sweep (machines
+    added later simply have shorter series)."""
+    series: dict[str, dict] = {}
+    for run in runs:
+        by_sweep = {rec["sweep"]: rec for rec in run["records"]}
+        for sweep, rec in by_sweep.items():
+            s = series.setdefault(sweep, {"errors": [], "pps": [], "runs": []})
+            s["errors"].append(float(rec["median_error_pct"]))
+            s["pps"].append(float(rec.get("placements_per_sec", 0.0)))
+            s["runs"].append(run["run"])
+    return series
+
+
+def render_markdown(series: dict[str, dict]) -> str:
+    """The dashboard: one row per sweep with the latest median error, the
+    delta against the previous run, series extremes and a sparkline."""
+    lines = [
+        "## Placement-sweep trend",
+        "",
+        "| sweep | runs | median err % (latest) | Δ vs prev | best | worst | trend |",
+        "| --- | ---: | ---: | ---: | ---: | ---: | --- |",
+    ]
+    if not series:
+        lines.append("| _no sweep artifacts found_ | | | | | | |")
+        return "\n".join(lines) + "\n"
+    for sweep in sorted(series):
+        errs = series[sweep]["errors"]
+        latest = errs[-1]
+        delta = latest - errs[-2] if len(errs) > 1 else 0.0
+        lines.append(
+            f"| {sweep} | {len(errs)} | {latest:.4f} | {delta:+.4f} "
+            f"| {min(errs):.4f} | {max(errs):.4f} | `{sparkline(errs)}` |"
+        )
+    lines += [
+        "",
+        "Throughput (placements/sec, informational — runner speed varies):",
+        "",
+        "| sweep | latest | trend |",
+        "| --- | ---: | --- |",
+    ]
+    for sweep in sorted(series):
+        pps = series[sweep]["pps"]
+        lines.append(f"| {sweep} | {pps[-1]:,.0f} | `{sparkline(pps)}` |")
+    return "\n".join(lines) + "\n"
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "history", type=Path, help="directory of downloaded sweep artifacts"
+    )
+    parser.add_argument(
+        "--current",
+        type=Path,
+        default=None,
+        help="this run's sweep artifact (appended as the newest point)",
+    )
+    parser.add_argument("--output", type=Path, default=None)
+    parser.add_argument(
+        "--summary",
+        type=Path,
+        default=None,
+        help="append the dashboard to this file ($GITHUB_STEP_SUMMARY)",
+    )
+    args = parser.parse_args()
+
+    runs = load_history(args.history, args.current)
+    md = render_markdown(aggregate(runs))
+    print(md)
+    if args.output is not None:
+        args.output.parent.mkdir(parents=True, exist_ok=True)
+        args.output.write_text(md)
+        print(f"wrote {args.output}")
+    if args.summary is not None:
+        with args.summary.open("a") as fh:
+            fh.write(md)
+
+
+if __name__ == "__main__":
+    main()

@@ -144,8 +144,10 @@ def _placement_scores(  # bpi weights stay traced: one compile per machine
         flows_w = demand_w[:, None] * placement_matrix(sig_write, p)
 
         utils = [
-            flows_r.sum(0) / machine.local_read_bw,
-            flows_w.sum(0) / machine.local_write_bw,
+            # per-node bank capacities (scalar local_*_bw broadcasts; mixed
+            # DIMM machines carry per-node tuples)
+            flows_r.sum(0) / machine.node_local_bw("read"),
+            flows_w.sum(0) / machine.node_local_bw("write"),
             (flows_r / rr_caps).reshape(-1),
             (flows_w / ww_caps).reshape(-1),
         ]

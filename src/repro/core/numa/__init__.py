@@ -18,9 +18,12 @@ bandwidth ratios.  Everything is ``jit``/``vmap``-able so the paper's
 
 from repro.core.numa.topology import (
     Topology,
+    LinkGroups,
     from_bandwidth_matrix,
+    from_fit,
     fully_connected,
     glued_8s,
+    link_groups,
     mesh2d,
     ring,
     snc,
@@ -28,6 +31,7 @@ from repro.core.numa.topology import (
 from repro.core.numa.machine import (
     MachineSpec,
     E5_2630_V3,
+    E5_2630_V3_MIXED_DIMM,
     E5_2630_V3_THROTTLED,
     E5_2699_V3,
     E5_2699_V3_SNC2,
@@ -39,23 +43,42 @@ from repro.core.numa.machine import (
 from repro.core.numa.workload import Workload, pure_workload, mixed_workload
 from repro.core.numa.simulator import (
     SimulationResult,
+    machine_caps,
     simulate,
     simulate_counters,
     profile_pair,
     symmetric_placement,
     asymmetric_placement,
 )
+from repro.core.numa.calibrate import (
+    CalibrationParams,
+    CalibrationResult,
+    CalibrationSamples,
+    blind_template,
+    collect_sweep,
+    fit_from_simulated,
+    fit_machine,
+    link_relative_errors,
+    local_bw_relative_errors,
+    probe_suite,
+    samples_from_counters,
+    seed_parameters,
+)
 
 __all__ = [
     "Topology",
+    "LinkGroups",
     "from_bandwidth_matrix",
+    "from_fit",
     "fully_connected",
     "glued_8s",
+    "link_groups",
     "mesh2d",
     "ring",
     "snc",
     "MachineSpec",
     "E5_2630_V3",
+    "E5_2630_V3_MIXED_DIMM",
     "E5_2630_V3_THROTTLED",
     "E5_2699_V3",
     "E5_2699_V3_SNC2",
@@ -67,9 +90,22 @@ __all__ = [
     "pure_workload",
     "mixed_workload",
     "SimulationResult",
+    "machine_caps",
     "simulate",
     "simulate_counters",
     "profile_pair",
     "symmetric_placement",
     "asymmetric_placement",
+    "CalibrationParams",
+    "CalibrationResult",
+    "CalibrationSamples",
+    "blind_template",
+    "collect_sweep",
+    "fit_from_simulated",
+    "fit_machine",
+    "link_relative_errors",
+    "local_bw_relative_errors",
+    "probe_suite",
+    "samples_from_counters",
+    "seed_parameters",
 ]

@@ -1,0 +1,680 @@
+"""Learned topology calibration — the inverse problem of the simulator.
+
+The paper parameterizes its bandwidth model from counters sampled in two
+carefully chosen runs; every ``MachineSpec`` in this repo was, until now,
+hand-specified.  This module solves the *inverse* problem the ROADMAP's
+"Learned topology fit" item asks for: given a set of ``(placement,
+observed counters)`` samples — produced by the simulator for synthetic
+ground truth, or by any ``bwsig/counters.py``-shaped counter trace from a
+real machine — recover the free parameters of a machine:
+
+* the per-link interconnect bandwidths (through the topology's
+  symmetry/structure packing, :func:`repro.core.numa.topology.link_groups`),
+* ``hop_attenuation``, and
+* the (per-node) ``local_read_bw`` / ``local_write_bw`` tuples,
+
+holding the structural template fixed: node count, core rates, routing
+tables and the remote path base capacities (the ratio-characterized
+quantities of paper Figure 2, measurable from a single remote STREAM-style
+run) all come from the template spec.
+
+The fit is two-stage, mirroring the paper's philosophy of cheap seeding
+plus model refinement:
+
+1. **Counter seeding** (:func:`seed_parameters`) — closed-form lower
+   bounds read straight off the samples.  Each bank's capacity is seeded
+   by the largest total it was ever observed to move; per-pair flows are
+   recovered from the bank-perspective remote counters by the same
+   thread-count apportionment rule ``bwsig.fit`` uses (exact whenever one
+   remote source is active, which the probe suite guarantees), charged
+   along the static routes to seed every link; multi-hop pair flows
+   lower-bound the attenuation.  On a saturating probe sweep these bounds
+   are *tight* — the seed alone is often within a few percent.
+2. **Projected gradient over the differentiable simulator**
+   (:func:`fit_machine`) — all parameters are refined jointly by AdamW in
+   log space (positivity by reparameterization, the smooth form of a
+   projection) against the squared relative counter error of the full
+   max-min-fair forward model, one jitted ``lax.scan`` of
+   ``value_and_grad`` steps with the machine template static and only the
+   capacity vector traced (``simulate(..., caps=...)``).
+
+The probe suite (:func:`probe_suite`) is the sweep design that makes the
+problem identifiable: per-node local probes saturate each bank in each
+direction, per-ordered-pair static probes saturate thin links and the
+hop-attenuated remote paths (these include the paper's 2-run
+symmetric/asymmetric pair), and spread interleave/static-sink probes
+saturate fat shared links that no single pair can fill (an SNC socket's
+QPI port carries both directions of every cross-socket pair at once).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import Array
+
+from repro.core.bwsig.counters import CounterSample
+from repro.core.bwsig.fit import _remote_source_weights
+from repro.core.numa.machine import GB, MachineSpec
+from repro.core.numa.simulator import asymmetric_placement, simulate
+from repro.core.numa.topology import LinkGroups, from_fit, link_groups
+from repro.core.numa.workload import Workload, mixed_workload
+from repro.optim import adamw
+
+_EPS = 1e-9
+# Finite stand-in for the unconstrained diagonal of the remote-path caps:
+# its usage column is structurally zero, so any value never binds — but a
+# finite one keeps the progressive-fill linearization coefficients finite
+# under reverse-mode AD (inf residuals turn 0-cotangent products into NaN).
+_UNUSED_CAP = 1e5
+
+
+class CalibrationSamples(NamedTuple):
+    """A counter sweep: ``P`` profiling runs of known workloads/placements.
+
+    ``wl_arrays`` stacks every array field of the run's :class:`Workload`
+    over the leading sample axis (the jit boundary cannot carry the name
+    string); counters are bytes (or instructions) observed over
+    ``elapsed`` seconds, bank-perspective, exactly the
+    :class:`~repro.core.bwsig.counters.CounterSample` view real hardware
+    exposes."""
+
+    wl_arrays: tuple[Array, ...]  # leaves (P, n) / (P,)
+    placements: Array  # (P, s) int32
+    local_read: Array  # (P, s)
+    remote_read: Array  # (P, s)
+    local_write: Array  # (P, s)
+    remote_write: Array  # (P, s)
+    instructions: Array  # (P, s)
+    elapsed: Array  # (P,)
+
+    @property
+    def n_samples(self) -> int:
+        return int(self.placements.shape[0])
+
+    @property
+    def n_nodes(self) -> int:
+        return int(self.placements.shape[1])
+
+
+class CalibrationParams(NamedTuple):
+    """Free parameters, unconstrained: capacities live in log space and
+    the attenuation behind a sigmoid, so plain gradient steps stay inside
+    the feasible set (the smooth projection)."""
+
+    log_link_bw: Array  # (n_groups,)
+    log_local_read: Array  # (s,)
+    log_local_write: Array  # (s,)
+    att_raw: Array  # () — hop_attenuation = sigmoid(att_raw)
+
+
+class CalibrationResult(NamedTuple):
+    machine: MachineSpec  # the fitted spec (concrete, validated)
+    params: CalibrationParams
+    groups: LinkGroups
+    loss_history: np.ndarray  # (steps,)
+    seed_loss: float
+    final_loss: float
+
+
+# ---------------------------------------------------------------------------
+# Sample construction
+# ---------------------------------------------------------------------------
+
+
+def _workload_arrays(wl: Workload) -> tuple[Array, ...]:
+    return tuple(wl[1:])
+
+
+def _stack_probe_workloads(wls: Sequence[Workload]) -> tuple[Array, ...]:
+    n_threads = {w.n_threads for w in wls}
+    if len(n_threads) != 1:
+        raise ValueError(f"probe workloads must share a thread count, got {n_threads}")
+    return tuple(
+        jnp.stack(parts) for parts in zip(*(_workload_arrays(w) for w in wls))
+    )
+
+
+def samples_from_counters(
+    workloads: Sequence[Workload],
+    placements,
+    counters: Sequence[CounterSample],
+) -> CalibrationSamples:
+    """Package an externally measured counter trace (one
+    :class:`CounterSample` per known workload+placement run) for fitting —
+    the path a real machine's PCM trace takes into the calibrator."""
+    if not len(workloads) == len(counters):
+        raise ValueError("one CounterSample per workload run required")
+    placements = jnp.asarray(placements, jnp.int32)
+    if placements.shape[0] != len(workloads):
+        raise ValueError("one placement per workload run required")
+    # each CounterSample records the placement of its own run — a silent
+    # order mismatch against the placements argument would apportion the
+    # remote counters by the wrong thread counts and corrupt the fit
+    for k, c in enumerate(counters):
+        recorded = np.asarray(c.n_per_socket)
+        if not np.array_equal(recorded, np.asarray(placements[k])):
+            raise ValueError(
+                f"run {k}: placement {np.asarray(placements[k]).tolist()} "
+                f"disagrees with the counter sample's recorded placement "
+                f"{recorded.tolist()}"
+            )
+    return CalibrationSamples(
+        wl_arrays=_stack_probe_workloads(workloads),
+        placements=placements,
+        local_read=jnp.stack([c.local_read for c in counters]),
+        remote_read=jnp.stack([c.remote_read for c in counters]),
+        local_write=jnp.stack([c.local_write for c in counters]),
+        remote_write=jnp.stack([c.remote_write for c in counters]),
+        instructions=jnp.stack([c.instructions for c in counters]),
+        elapsed=jnp.stack([jnp.asarray(c.elapsed, jnp.float32) for c in counters]),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Probe sweep design
+# ---------------------------------------------------------------------------
+
+
+def _spread_placement(s: int, n_threads: int) -> np.ndarray:
+    counts = np.full((s,), n_threads // s, np.int32)
+    counts[: n_threads % s] += 1
+    return counts
+
+
+def probe_suite(
+    template: MachineSpec,
+    n_threads: int | None = None,
+    *,
+    read_bpi: float = 8.0,
+    write_bpi: float = 4.0,
+) -> list[tuple[Workload, np.ndarray]]:
+    """The designed calibration sweep: ``(workload, placement)`` pairs
+    whose union of saturation patterns identifies every free parameter.
+
+    Only the template's *structure* (node count, cores per node, issue
+    rates) shapes the design — bandwidths are what the sweep measures.
+    All probes share one thread count so the whole sweep stacks into a
+    single vmapped trace."""
+    s, cap = template.n_nodes, template.cores_per_node
+    if n_threads is None:
+        n_threads = min(cap, 8)
+    if not 0 < n_threads <= cap:
+        raise ValueError(f"{n_threads} probe threads exceed {cap} cores/node")
+    nt = n_threads
+    probes: list[tuple[Workload, np.ndarray]] = []
+
+    def one_node(i: int) -> np.ndarray:
+        p = np.zeros((s,), np.int32)
+        p[i] = nt
+        return p
+
+    # 1. per-node local probes, one direction at a time: saturate each
+    #    bank's read and write capacity in isolation.
+    for i in range(s):
+        for tag, rb, wb in (("r", read_bpi, 0.0), ("w", 0.0, write_bpi)):
+            probes.append(
+                (
+                    mixed_workload(
+                        f"cal-local-{tag}{i}", nt,
+                        read_mix=(0.0, 1.0, 0.0), read_bpi=rb, write_bpi=wb,
+                    ),
+                    one_node(i),
+                )
+            )
+
+    # 2. per-ordered-pair static probes: all threads on node i streaming a
+    #    Static allocation on node j — saturates the (i, j) remote path
+    #    (hop-attenuated) or the thinnest link on route(i, j), whichever
+    #    is tighter, one direction at a time.
+    for i in range(s):
+        for j in range(s):
+            if i == j:
+                continue
+            for tag, rb, wb in (("r", read_bpi, 0.0), ("w", 0.0, write_bpi)):
+                probes.append(
+                    (
+                        mixed_workload(
+                            f"cal-pair-{tag}{i}-{j}", nt,
+                            read_mix=(1.0, 0.0, 0.0), read_bpi=rb,
+                            write_bpi=wb, static_socket=j,
+                        ),
+                        one_node(i),
+                    )
+                )
+
+    # 3. spread interleave stress probes: every node pumping traffic to
+    #    every bank at once — the only pattern that fills fat shared links
+    #    (an SNC QPI port carries both directions of 2*k^2 node pairs).
+    spread = _spread_placement(s, nt)
+    for tag, rb, wb in (
+        ("r", read_bpi, 0.0),
+        ("w", 0.0, write_bpi),
+        ("rw", read_bpi, write_bpi),
+    ):
+        probes.append(
+            (
+                mixed_workload(
+                    f"cal-inter-{tag}", nt,
+                    read_mix=(0.0, 0.0, 0.0), read_bpi=rb, write_bpi=wb,
+                ),
+                spread,
+            )
+        )
+
+    # 4. static-sink stress probes: every *other* node's threads
+    #    converging on one bank — saturates the sink's incident links with
+    #    multi-source (routed) traffic no single pair can generate.  The
+    #    sink node hosts no threads (its local traffic would win a
+    #    max-min share of the bank and starve the link below saturation),
+    #    and several write:read ratios are swept so that for some ratio
+    #    the incident link binds before either bank-direction cap does
+    #    (link binds iff (R+W)/C_link exceeds both R/C_read and W/C_write
+    #    — a window in W/R that depends on the capacities under test).
+    for j in range(s):
+        if s < 2:
+            break
+        others = np.zeros((s,), np.int32)
+        share = _spread_placement(s - 1, nt)
+        others[np.arange(s) != j] = share
+        for alpha in (0.25, 0.5, 1.0):
+            probes.append(
+                (
+                    mixed_workload(
+                        f"cal-sink-{j}-a{alpha}", nt,
+                        read_mix=(1.0, 0.0, 0.0), read_bpi=read_bpi,
+                        write_bpi=read_bpi * alpha, static_socket=j,
+                    ),
+                    others,
+                )
+            )
+
+    # 5. the paper's 2-run pair (§5.1): one symmetric and one asymmetric
+    #    placement of a generic mixed workload — the classic seeding runs,
+    #    kept in-sweep so the fit and the paper's protocol share data.
+    wl_2run = mixed_workload(
+        "cal-2run", nt, read_mix=(0.3, 0.3, 0.2),
+        read_bpi=read_bpi * 0.5, write_bpi=write_bpi * 0.5,
+    )
+    probes.append((wl_2run, spread))
+    probes.append(
+        (wl_2run, np.asarray(asymmetric_placement(template, nt), np.int32))
+    )
+    return probes
+
+
+@partial(jax.jit, static_argnames=("machine", "noise_std", "background_bw"))
+def _collect_jit(machine, wl_arrays, placements, keys, noise_std, background_bw):
+    def one(arrays, placement, key):
+        wl = Workload("calib", *arrays)
+        res = simulate(
+            machine, wl, placement,
+            noise_std=noise_std, background_bw=background_bw, key=key,
+        )
+        smp = res.sample
+        return (
+            smp.local_read, smp.remote_read, smp.local_write,
+            smp.remote_write, smp.instructions,
+        )
+
+    return jax.vmap(one)(wl_arrays, placements, keys)
+
+
+def collect_sweep(
+    machine: MachineSpec,
+    probes: Sequence[tuple[Workload, np.ndarray]] | None = None,
+    *,
+    noise_std: float = 0.0,
+    background_bw: float = 0.0,
+    key: Array | None = None,
+) -> CalibrationSamples:
+    """Run a probe sweep through the simulator (the synthetic-ground-truth
+    path) and package the observed counters for fitting.  ``probes``
+    defaults to :func:`probe_suite` on the machine itself."""
+    if probes is None:
+        probes = probe_suite(machine)
+    wls = [wl for wl, _ in probes]
+    placements = jnp.asarray(np.stack([p for _, p in probes]), jnp.int32)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    keys = jax.random.split(key, len(wls))
+    wl_arrays = _stack_probe_workloads(wls)
+    lr, rr, lw, rw, ins = _collect_jit(
+        machine, wl_arrays, placements, keys,
+        float(noise_std), float(background_bw),
+    )
+    return CalibrationSamples(
+        wl_arrays=wl_arrays,
+        placements=placements,
+        local_read=lr, remote_read=rr, local_write=lw, remote_write=rw,
+        instructions=ins,
+        elapsed=jnp.ones((len(wls),), jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Stage 1: counter seeding
+# ---------------------------------------------------------------------------
+
+
+def _pair_flows(samples: CalibrationSamples, counter: Array) -> Array:
+    """``(P, s, s)`` estimated source->bank flows from a bank-perspective
+    counter, apportioning each bank's remote traffic to the other nodes in
+    proportion to their thread counts — ``bwsig.fit``'s rule, exact when a
+    single remote source is active (every pair probe; the paper's s=2)."""
+    w = jax.vmap(_remote_source_weights)(samples.placements)  # (P, bank j, src i)
+    return jnp.swapaxes(w * counter[:, :, None], 1, 2)  # (P, i, j)
+
+
+def seed_parameters(
+    template: MachineSpec,
+    samples: CalibrationSamples,
+    groups: LinkGroups | None = None,
+    *,
+    floor_frac: float = 0.02,
+) -> CalibrationParams:
+    """Closed-form seeds: every observed rate is a lower bound on the
+    capacity it crossed, and the probe suite makes the interesting bounds
+    tight.  Never exercised parameters are floored at ``floor_frac`` of
+    the largest seed in their family so log-space stays finite."""
+    if groups is None:
+        groups = link_groups(template.topology)
+    s = template.n_nodes
+    el = samples.elapsed[:, None]
+    lr = samples.local_read / el
+    rr = samples.remote_read / el
+    lw = samples.local_write / el
+    rw = samples.remote_write / el
+
+    def floored(x: Array) -> Array:
+        return jnp.maximum(x, jnp.maximum(floor_frac * x.max(), 1.0))
+
+    bank_r = floored((lr + rr).max(0))
+    bank_w = floored((lw + rw).max(0))
+
+    pair_r = _pair_flows(samples, rr)
+    pair_w = _pair_flows(samples, rw)
+    incidence = jnp.asarray(template.topology.route_incidence())  # (s*s, L)
+    charge = (pair_r + pair_w).reshape(samples.placements.shape[0], s * s) @ incidence
+    link_seed = np.asarray(floored(charge.max(0)))
+
+    # attenuation: a multi-hop pair's flow obeys flow <= base * att**(h-1),
+    # so every (flow/base)**(1/(h-1)) lower-bounds att; take the best bound
+    # over pairs and directions.
+    hops = np.asarray(template.topology.hop_matrix(), np.float64)
+    att_seed = 0.95
+    if hops.max() > 1:
+        ests = []
+        for base, flows in (
+            (template.remote_read_bw, np.asarray(pair_r.max(0), np.float64)),
+            (template.remote_write_bw, np.asarray(pair_w.max(0), np.float64)),
+        ):
+            multi = hops > 1
+            ratio = np.clip(flows / max(base, _EPS), 1e-6, 1.0)
+            ests.append((ratio ** (1.0 / np.maximum(hops - 1.0, 1.0)))[multi])
+        att_seed = float(np.clip(np.concatenate(ests).max(), 0.3, 0.995))
+
+    return CalibrationParams(
+        log_link_bw=jnp.log(jnp.asarray(groups.pack(link_seed), jnp.float32)),
+        log_local_read=jnp.log(bank_r.astype(jnp.float32)),
+        log_local_write=jnp.log(bank_w.astype(jnp.float32)),
+        att_raw=jnp.asarray(np.log(att_seed / (1.0 - att_seed)), jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Stage 2: projected gradient over the differentiable forward model
+# ---------------------------------------------------------------------------
+
+
+def _caps_from(
+    template: MachineSpec, groups: LinkGroups, params: CalibrationParams
+) -> Array:
+    """Assemble the traced capacity vector (simulator slab order) from the
+    free parameters; routing, hop counts and the remote path bases stay
+    static template structure."""
+    s = template.n_nodes
+    link_bw = groups.unpack(jnp.exp(params.log_link_bw))
+    bank_r = jnp.exp(params.log_local_read)
+    bank_w = jnp.exp(params.log_local_write)
+    hops = jnp.asarray(template.topology.hop_matrix(), jnp.float32)
+    if template.topology.max_hops > 1:
+        att = jax.nn.sigmoid(params.att_raw)
+    else:  # single-hop: attenuation is structurally unobservable
+        att = jnp.asarray(1.0, jnp.float32)
+    extra = jnp.maximum(hops - 1.0, 0.0)
+    rr = jnp.where(hops == 0, _UNUSED_CAP, template.remote_read_bw * att**extra)
+    ww = jnp.where(hops == 0, _UNUSED_CAP, template.remote_write_bw * att**extra)
+    return jnp.concatenate(
+        [bank_r, bank_w, rr.reshape(s * s), ww.reshape(s * s), link_bw]
+    )
+
+
+def _sweep_loss(
+    template: MachineSpec,
+    groups: LinkGroups,
+    samples: CalibrationSamples,
+    params: CalibrationParams,
+    instruction_weight: float,
+) -> Array:
+    caps = _caps_from(template, groups, params)
+
+    def per_sample(arrays, placement, olr, orr, olw, orw, oins, el):
+        wl = Workload("calib", *arrays)
+        res = simulate(template, wl, placement, caps=caps)
+        smp = res.sample
+        obs = jnp.concatenate([olr, orr, olw, orw]) / el
+        sim = jnp.concatenate(
+            [smp.local_read, smp.remote_read, smp.local_write, smp.remote_write]
+        )
+        total = jnp.maximum(obs.sum(), _EPS)
+        err = (((sim - obs) / total) ** 2).sum()
+        itot = jnp.maximum(oins.sum() / el, _EPS)
+        err += instruction_weight * (
+            ((smp.instructions - oins / el) / itot) ** 2
+        ).sum()
+        return err
+
+    errs = jax.vmap(per_sample)(
+        samples.wl_arrays,
+        samples.placements,
+        samples.local_read,
+        samples.remote_read,
+        samples.local_write,
+        samples.remote_write,
+        samples.instructions,
+        samples.elapsed,
+    )
+    return errs.mean()
+
+
+@partial(
+    jax.jit,
+    static_argnames=("template", "groups", "steps", "lr", "instruction_weight"),
+)
+def _fit_jit(template, groups, samples, params, steps, lr, instruction_weight):
+    schedule = adamw.cosine_schedule(
+        lr, warmup_steps=min(20, max(steps // 10, 1)), total_steps=steps
+    )
+    # adamw.update splices its (param, m, v) work tuples back apart with
+    # is_leaf=isinstance(..., tuple), so hand it a dict view of the params
+    # (a NamedTuple root would itself be spliced).
+    state = adamw.init(params._asdict())
+
+    def step_fn(carry, _):
+        p, st = carry
+        loss, grads = jax.value_and_grad(
+            lambda q: _sweep_loss(
+                template, groups, samples, CalibrationParams(**q),
+                instruction_weight,
+            )
+        )(p)
+        new_p, new_st = adamw.update(
+            grads, st, p, lr=schedule(st.step), weight_decay=0.0
+        )
+        return (new_p, new_st), loss
+
+    (final, _), history = jax.lax.scan(
+        step_fn, (params._asdict(), state), None, length=steps
+    )
+    final_params = CalibrationParams(**final)
+    # history[k] is the loss at the PRE-update params of step k; evaluate
+    # the returned params once so the reported final loss matches the
+    # machine actually handed back
+    final_loss = _sweep_loss(template, groups, samples, final_params, instruction_weight)
+    return final_params, history, final_loss
+
+
+def fitted_machine(
+    template: MachineSpec,
+    groups: LinkGroups,
+    params: CalibrationParams,
+    *,
+    name: str | None = None,
+) -> MachineSpec:
+    """Materialize a concrete, validated ``MachineSpec`` from fitted
+    parameters: per-link bandwidths through :func:`topology.from_fit`
+    (routes held static), per-node local tuples, scalar attenuation."""
+    link_bw = np.exp(np.asarray(params.log_link_bw, np.float64))
+    full_link_bw = np.asarray(groups.unpack(link_bw))
+    att = (
+        float(jax.nn.sigmoid(params.att_raw))
+        if template.topology.max_hops > 1
+        else template.hop_attenuation
+    )
+    machine = template._replace(
+        name=name or f"{template.name}-fit",
+        local_read_bw=tuple(
+            float(v) for v in np.exp(np.asarray(params.log_local_read, np.float64))
+        ),
+        local_write_bw=tuple(
+            float(v) for v in np.exp(np.asarray(params.log_local_write, np.float64))
+        ),
+        hop_attenuation=att,
+        topology=from_fit(
+            template.topology, full_link_bw, name=f"{template.topology.name}-fit"
+        ),
+    )
+    machine.validate()
+    return machine
+
+
+def fit_machine(
+    template: MachineSpec,
+    samples: CalibrationSamples,
+    *,
+    steps: int = 250,
+    lr: float = 0.03,
+    tie_equal_bw: bool = False,
+    groups: LinkGroups | None = None,
+    init: CalibrationParams | None = None,
+    instruction_weight: float = 0.25,
+    name: str | None = None,
+) -> CalibrationResult:
+    """Fit a machine's free parameters from a counter sweep.
+
+    ``template`` supplies the structure (topology link list + routes, node
+    counts, core rates, remote path bases); its bandwidth values are *not*
+    consulted — seeding reads them off the samples.  ``tie_equal_bw``
+    shares one parameter across links the template marks as the same class
+    (see :func:`repro.core.numa.topology.link_groups`)."""
+    if samples.n_nodes != template.n_nodes:
+        raise ValueError(
+            f"samples cover {samples.n_nodes} nodes; template has "
+            f"{template.n_nodes}"
+        )
+    if groups is None:
+        groups = link_groups(template.topology, tie_equal_bw=tie_equal_bw)
+    if init is None:
+        init = seed_parameters(template, samples, groups)
+    seed_loss = float(
+        _sweep_loss(template, groups, samples, init, instruction_weight)
+    )
+    params, history, final_loss = _fit_jit(
+        template, groups, samples, init, int(steps), float(lr),
+        float(instruction_weight),
+    )
+    return CalibrationResult(
+        machine=fitted_machine(template, groups, params, name=name),
+        params=params,
+        groups=groups,
+        loss_history=np.asarray(history),
+        seed_loss=seed_loss,
+        final_loss=float(final_loss),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Round-trip drivers and diagnostics
+# ---------------------------------------------------------------------------
+
+
+def blind_template(
+    machine: MachineSpec,
+    *,
+    link_bw: float = 20.0 * GB,
+    local_read_bw: float = 40.0 * GB,
+    local_write_bw: float = 20.0 * GB,
+    hop_attenuation: float = 1.0,
+) -> MachineSpec:
+    """Strip a machine of everything the calibration is supposed to
+    recover, keeping only structure: link list + routes, node geometry,
+    core rates and the remote path bases.  The replacement values are
+    deliberately uninformative — seeding overwrites them."""
+    return machine._replace(
+        name=f"{machine.name}-blind",
+        local_read_bw=local_read_bw,
+        local_write_bw=local_write_bw,
+        hop_attenuation=hop_attenuation,
+        topology=from_fit(
+            machine.topology,
+            np.full((machine.n_links,), link_bw),
+            name=f"{machine.topology.name}-blind",
+        ),
+    )
+
+
+def fit_from_simulated(
+    machine: MachineSpec,
+    template: MachineSpec | None = None,
+    *,
+    probes: Sequence[tuple[Workload, np.ndarray]] | None = None,
+    noise_std: float = 0.0,
+    key: Array | None = None,
+    **fit_kwargs,
+) -> CalibrationResult:
+    """The synthetic round trip: sweep ``machine`` (ground truth) through
+    the simulator, then fit blind from the samples alone.  ``template``
+    defaults to :func:`blind_template` of the machine."""
+    samples = collect_sweep(machine, probes, noise_std=noise_std, key=key)
+    if template is None:
+        template = blind_template(machine)
+    return fit_machine(template, samples, **fit_kwargs)
+
+
+def link_relative_errors(
+    fitted: MachineSpec, reference: MachineSpec
+) -> np.ndarray:
+    """``(n_links,)`` relative error of every fitted link bandwidth
+    against a reference machine with the same link list."""
+    if fitted.topology.link_ends != reference.topology.link_ends:
+        raise ValueError("machines disagree on the link list")
+    fit = np.asarray(fitted.topology.link_bw, np.float64)
+    ref = np.asarray(reference.topology.link_bw, np.float64)
+    return np.abs(fit - ref) / ref
+
+
+def local_bw_relative_errors(
+    fitted: MachineSpec, reference: MachineSpec
+) -> dict[str, np.ndarray]:
+    """Per-node relative errors of the fitted local bandwidths."""
+    out = {}
+    for direction in ("read", "write"):
+        fit = np.asarray(fitted.node_local_bw(direction), np.float64)
+        ref = np.asarray(reference.node_local_bw(direction), np.float64)
+        out[direction] = np.abs(fit - ref) / ref
+    return out

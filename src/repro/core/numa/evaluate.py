@@ -384,7 +384,10 @@ def _cache_key(machine, wl, noise_std, background_bw, key) -> tuple:
     # The machine is content-addressed through its fingerprint: topology
     # tables (tuple-canonicalized from whatever array form they were built
     # with) are digested alongside the scalar fields, so two specs with
-    # identical link matrices and routes share cache entries.
+    # identical link matrices and routes share cache entries.  Per-node
+    # tuple spellings of core_rate / local_*_bw digest differently from
+    # their scalar equivalents, so a calibration-fitted machine never
+    # collides with the preset it was fitted from.
     return (
         machine.fingerprint(),
         _workload_fingerprint(wl),

@@ -67,15 +67,19 @@ class MachineSpec(NamedTuple):
     per-link capacities plus static routes over ``n_nodes`` nodes, with
     every link on a route charged the full flow.  ``core_rate`` is
     instructions/s per thread at full speed — either one scalar for every
-    node or a per-node tuple (heterogeneous cores, throttled sockets);
-    both stay hashable so the spec remains a jit static argument.
+    node or a per-node tuple (heterogeneous cores, throttled sockets).
+    ``local_read_bw``/``local_write_bw`` follow the same convention: one
+    scalar shared by every memory bank, or a per-node tuple (mixed DIMM
+    populations, HBM+DDR tiered nodes); scalar specs stay bit-for-bit
+    identical to the pre-tuple model via :meth:`node_local_bw`.  All
+    spellings stay hashable so the spec remains a jit static argument.
     """
 
     name: str
     sockets: int
     cores_per_socket: int
-    local_read_bw: float
-    local_write_bw: float
+    local_read_bw: float | tuple[float, ...]
+    local_write_bw: float | tuple[float, ...]
     remote_read_bw: float
     remote_write_bw: float
     core_rate: float | tuple[float, ...]
@@ -131,12 +135,40 @@ class MachineSpec(NamedTuple):
                 raise ValueError("core_rate entries must be positive")
         elif self.core_rate <= 0:
             raise ValueError("core_rate must be positive")
+        for field in ("local_read_bw", "local_write_bw"):
+            bw = getattr(self, field)
+            if isinstance(bw, tuple):
+                if len(bw) != self.n_nodes:
+                    raise ValueError(
+                        f"{field} has {len(bw)} entries for {self.n_nodes} nodes"
+                    )
+                if min(bw) <= 0:
+                    raise ValueError(f"{field} entries must be positive")
+            elif bw <= 0:
+                raise ValueError(f"{field} must be positive")
+
+    def node_local_bw(self, direction: str) -> Array:
+        """``(n_nodes,)`` per-node local bank capacity for one direction.
+        A scalar field broadcasts to every node through the exact
+        pre-tuple code path (bit-for-bit); a tuple gives each bank its own
+        capacity (mixed DIMM populations, HBM+DDR tiers).  Every consumer
+        of ``local_*_bw`` that wants a per-node view must go through this
+        helper instead of assuming the scalar spelling."""
+        if direction == "read":
+            bw = self.local_read_bw
+        elif direction == "write":
+            bw = self.local_write_bw
+        else:
+            raise ValueError(f"unknown direction {direction!r}")
+        if isinstance(bw, tuple):
+            return jnp.asarray(bw, jnp.float32)
+        return jnp.full((self.n_nodes,), bw)
 
     def bank_read_caps(self) -> Array:
-        return jnp.full((self.n_nodes,), self.local_read_bw)
+        return self.node_local_bw("read")
 
     def bank_write_caps(self) -> Array:
-        return jnp.full((self.n_nodes,), self.local_write_bw)
+        return self.node_local_bw("write")
 
     def link_caps(self) -> Array:
         """Per-link interconnect capacities, ``(n_links,)``."""
@@ -287,6 +319,23 @@ E5_2630_V3_THROTTLED = MachineSpec(
     topology=fully_connected(2, 16.0 * GB),
 )
 
+# The 8-core machine with socket 1's DIMM slots only half-populated — the
+# mixed-DIMM-population case per-node bandwidth vectors exist for: bank 1
+# has half the channels (half the local bandwidth), banks stay otherwise
+# identical, so placement quality now depends on WHICH node memory lands
+# on even for fully local workloads.
+E5_2630_V3_MIXED_DIMM = MachineSpec(
+    name="E5-2630v3-8c-mixed-dimm",
+    sockets=2,
+    cores_per_socket=8,
+    local_read_bw=(52.0 * GB, 26.0 * GB),
+    local_write_bw=(28.0 * GB, 14.0 * GB),
+    remote_read_bw=0.16 * 52.0 * GB,
+    remote_write_bw=0.23 * 28.0 * GB,
+    core_rate=(2.4e9, 2.4e9),
+    topology=fully_connected(2, 16.0 * GB),
+)
+
 MACHINES: dict[str, MachineSpec] = {
     E5_2630_V3.name: E5_2630_V3,
     E5_2699_V3.name: E5_2699_V3,
@@ -294,18 +343,28 @@ MACHINES: dict[str, MachineSpec] = {
     E7_8860_V3.name: E7_8860_V3,
     E5_2699_V3_SNC2.name: E5_2699_V3_SNC2,
     E5_2630_V3_THROTTLED.name: E5_2630_V3_THROTTLED,
+    E5_2630_V3_MIXED_DIMM.name: E5_2630_V3_MIXED_DIMM,
 }
 
 for _machine in MACHINES.values():
     _machine.validate()
 
 
+def _as_node_bw(value) -> float | tuple[float, ...]:
+    """Canonicalize a local-bandwidth argument: scalars stay scalars (the
+    bit-for-bit pre-tuple path), sequences become hashable per-node
+    tuples."""
+    if isinstance(value, (int, float)):
+        return float(value)
+    return tuple(float(v) for v in value)
+
+
 def make_machine(
     name: str = "generic",
     sockets: int = 2,
     cores_per_socket: int = 8,
-    local_read_bw: float = 50.0 * GB,
-    local_write_bw: float = 28.0 * GB,
+    local_read_bw: float | tuple[float, ...] = 50.0 * GB,
+    local_write_bw: float | tuple[float, ...] = 28.0 * GB,
     remote_read_ratio: float = 0.5,
     remote_write_ratio: float = 0.5,
     qpi_bw: float = 32.0 * GB,
@@ -339,14 +398,29 @@ def make_machine(
         core_rate = tuple(float(r) for r in core_rate)
         if len(core_rate) == 1:
             core_rate = core_rate * n_nodes
+    local_read_bw = _as_node_bw(local_read_bw)
+    local_write_bw = _as_node_bw(local_write_bw)
+    # remote/local ratios are how the paper characterizes a machine; with
+    # per-node local tuples the (scalar) remote path caps anchor on the
+    # mean bank bandwidth
+    mean_read = (
+        sum(local_read_bw) / len(local_read_bw)
+        if isinstance(local_read_bw, tuple)
+        else local_read_bw
+    )
+    mean_write = (
+        sum(local_write_bw) / len(local_write_bw)
+        if isinstance(local_write_bw, tuple)
+        else local_write_bw
+    )
     machine = MachineSpec(
         name=name,
         sockets=sockets,
         cores_per_socket=cores_per_socket,
         local_read_bw=local_read_bw,
         local_write_bw=local_write_bw,
-        remote_read_bw=remote_read_ratio * local_read_bw,
-        remote_write_bw=remote_write_ratio * local_write_bw,
+        remote_read_bw=remote_read_ratio * mean_read,
+        remote_write_bw=remote_write_ratio * mean_write,
         core_rate=core_rate,
         topology=topology,
         hop_attenuation=hop_attenuation,

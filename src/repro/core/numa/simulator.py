@@ -90,11 +90,31 @@ def _mix_rows(
     return mix  # (n, s)
 
 
+def machine_caps(machine: MachineSpec) -> Array:
+    """The capacity vector of :func:`_resource_tensor`'s resource slab, in
+    slab order: bank reads (s), bank writes (s), remote read paths (s*s),
+    remote write paths (s*s), interconnect links (n_links).  Split out so
+    the calibration inverse problem can substitute a *traced* capacity
+    vector (free parameters under ``jax.grad``) while the machine itself
+    stays the static structural template."""
+    s = machine.n_nodes
+    return jnp.concatenate(
+        [
+            machine.bank_read_caps(),
+            machine.bank_write_caps(),
+            machine.remote_read_caps().reshape(s * s),
+            machine.remote_write_caps().reshape(s * s),
+            machine.link_caps(),
+        ]
+    )
+
+
 def _resource_tensor(
     machine: MachineSpec,
     read_unit: Array,  # (n, s) bytes/s to each bank at full speed
     write_unit: Array,  # (n, s)
     node_of: Array,  # (n,)
+    caps: Array | None = None,  # capacity-vector override (calibration)
 ) -> tuple[Array, Array]:
     """Build the per-thread resource-usage matrix ``U[t, r]`` and the
     capacity vector ``caps[r]``.
@@ -107,7 +127,10 @@ def _resource_tensor(
 
     The routing structure is static (python tuples on the machine), so the
     link slab keeps a fixed ``(n, n_links)`` shape that jit and vmap handle
-    identically for any node count or topology.
+    identically for any node count or topology.  ``caps`` overrides the
+    machine-derived capacity vector (same slab order, from
+    :func:`machine_caps`) — the hook the calibration fit differentiates
+    through.
     """
     s = machine.n_nodes
     n = node_of.shape[0]
@@ -155,15 +178,8 @@ def _resource_tensor(
         axis=1,
     )
 
-    caps = jnp.concatenate(
-        [
-            machine.bank_read_caps(),
-            machine.bank_write_caps(),
-            machine.remote_read_caps().reshape(s * s),
-            machine.remote_write_caps().reshape(s * s),
-            machine.link_caps(),
-        ]
-    )
+    if caps is None:
+        caps = machine_caps(machine)
     return usage, caps
 
 
@@ -203,10 +219,17 @@ def simulate(
     noise_std: float = 0.0,
     background_bw: float = 0.0,
     key: Array | None = None,
+    caps: Array | None = None,
 ) -> SimulationResult:
     """Run the workload on the machine under the given placement (threads
     per NUMA node) and emit ground truth + the paper-visible performance
-    counters."""
+    counters.
+
+    ``caps`` substitutes the machine's capacity vector (slab order of
+    :func:`machine_caps`) with traced values — the differentiable-forward
+    hook ``repro.core.numa.calibrate`` fits machine parameters through;
+    everything else about the machine (routes, rates, thread geometry)
+    stays static structure."""
     s = machine.n_nodes
     n = workload.n_threads
     n_per_node = jnp.asarray(n_per_node)
@@ -232,7 +255,7 @@ def simulate(
     read_unit = rate_of[:, None] * workload.read_bpi[:, None] * read_mix
     write_unit = rate_of[:, None] * workload.write_bpi[:, None] * write_mix
 
-    usage, caps = _resource_tensor(machine, read_unit, write_unit, node_of)
+    usage, caps = _resource_tensor(machine, read_unit, write_unit, node_of, caps)
     # Each progressive-filling iteration freezes at least one thread set
     # (either a bottleneck's users or, at lam* >= 1, every active thread),
     # and each bottleneck saturates at most one new resource — so

@@ -264,6 +264,99 @@ def from_bandwidth_matrix(name: str, bw: np.ndarray) -> Topology:
 
 
 # ---------------------------------------------------------------------------
+# Calibration support: parameter <-> link-matrix packing and fitted rebuilds
+# ---------------------------------------------------------------------------
+
+
+class LinkGroups(NamedTuple):
+    """Parameter↔matrix packing for fitting link bandwidths.
+
+    ``groups`` partitions a topology's link ids into tied classes: every
+    link in a group shares one free parameter (the symmetry/structure mask
+    of the inverse problem — e.g. a glued 8-socket machine's 12 QPI links
+    are one hardware part, its 4 node-controller links another).  The
+    untied parameterization is ``n_links`` singleton groups.  ``pack``
+    reduces per-link values to the free-parameter vector; ``unpack``
+    scatters a parameter vector back to per-link order.  Both work on
+    numpy and traced JAX arrays (``unpack`` is a pure gather), so the
+    packing layer sits inside a jitted objective.
+    """
+
+    groups: tuple[tuple[int, ...], ...]
+
+    @property
+    def n_params(self) -> int:
+        return len(self.groups)
+
+    @property
+    def n_links(self) -> int:
+        return sum(len(g) for g in self.groups)
+
+    def link_index(self) -> np.ndarray:
+        """``(n_links,)`` free-parameter id of every link."""
+        idx = np.zeros((self.n_links,), np.int32)
+        for p, group in enumerate(self.groups):
+            for l in group:
+                idx[l] = p
+        return idx
+
+    def pack(self, link_bw) -> np.ndarray:
+        """Per-link values -> ``(n_params,)`` group means."""
+        bw = np.asarray(link_bw, np.float64)
+        return np.array([bw[list(g)].mean() for g in self.groups])
+
+    def unpack(self, params):
+        """``(n_params,)`` free parameters -> per-link values (a gather:
+        differentiable, vmappable)."""
+        return params[self.link_index()]
+
+    def validate(self) -> None:
+        seen = sorted(l for g in self.groups for l in g)
+        if seen != list(range(len(seen))):
+            raise ValueError("groups must partition the link ids exactly")
+        if any(not g for g in self.groups):
+            raise ValueError("empty link group")
+
+
+def link_groups(topo: Topology, *, tie_equal_bw: bool = False) -> LinkGroups:
+    """The natural parameterization of a topology's link bandwidths.
+
+    With ``tie_equal_bw`` links whose *template* bandwidths are equal share
+    one parameter (structural knowledge: same physical link class);
+    otherwise every link is free.  Fitting stays well-posed either way —
+    ties just let a link that never saturates in the sample set inherit
+    its class's recovered capacity."""
+    if not tie_equal_bw:
+        groups = tuple((l,) for l in range(topo.n_links))
+    else:
+        by_bw: dict[float, list[int]] = {}
+        for l, bw in enumerate(topo.link_bw):
+            by_bw.setdefault(float(bw), []).append(l)
+        groups = tuple(tuple(ls) for _, ls in sorted(by_bw.items()))
+    out = LinkGroups(groups=groups)
+    out.validate()
+    return out
+
+
+def from_fit(template: Topology, link_bw, *, name: str | None = None) -> Topology:
+    """Rebuild a topology from fitted per-link bandwidths, holding the
+    template's link list AND routing tables static — the contract of the
+    calibration inverse problem (§ the forward model's routes are
+    compile-time structure; only capacities are free parameters).  Values
+    are canonicalized to python floats so the result stays hashable."""
+    bws = _as_bw_list(link_bw, template.n_links, "from_fit")
+    topo = Topology(
+        name=template.name if name is None else name,
+        n_nodes=template.n_nodes,
+        link_ends=template.link_ends,
+        link_bw=tuple(bws),
+        routes=template.routes,
+    )
+    topo.validate()
+    return topo
+
+
+# ---------------------------------------------------------------------------
 # Builders
 # ---------------------------------------------------------------------------
 

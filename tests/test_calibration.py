@@ -1,0 +1,257 @@
+"""Learned topology calibration: the simulator's inverse problem.
+
+* **Round-trip acceptance**: sweep a known machine (glued 8-socket and
+  SNC-2 — multi-hop routing, shared links, attenuation), fit blind from
+  the samples alone, recover every per-link bandwidth within 5% and keep
+  the refit model's median sweep error within 0.25pp of the ground-truth
+  model's.  The test drives ``benchmarks/calibration_roundtrip.py``'s
+  ``roundtrip`` so the CI gate and the suite share one code path.
+* **Packing layer**: ``link_groups`` / ``from_fit`` (routes held static).
+* **Seeding**: closed-form counter bounds land on the true capacities.
+* **Counter-trace path**: externally supplied ``CounterSample``s fit the
+  same as simulator-collected sweeps.
+* **Per-node bandwidth vectors**: the mixed-DIMM preset's unequal banks
+  are recovered as tuples — the regression the scalar model could not
+  express.
+"""
+
+import importlib.util
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.numa import (
+    E5_2630_V3,
+    E5_2630_V3_MIXED_DIMM,
+    E5_2699_V3_SNC2,
+    E7_8860_V3,
+    blind_template,
+    collect_sweep,
+    fit_from_simulated,
+    fit_machine,
+    link_relative_errors,
+    local_bw_relative_errors,
+    probe_suite,
+    samples_from_counters,
+    seed_parameters,
+)
+from repro.core.numa.calibrate import _caps_from, CalibrationParams
+from repro.core.numa.simulator import machine_caps, simulate
+from repro.core.numa.topology import from_fit, link_groups, ring
+
+
+def _load_benchmark(name):
+    path = Path(__file__).resolve().parents[1] / "benchmarks" / f"{name}.py"
+    spec = importlib.util.spec_from_file_location(name, path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+# ---------------------------------------------------------------------------
+# Round-trip acceptance: fit blind, recover the machine
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("machine", [E7_8860_V3, E5_2699_V3_SNC2])
+def test_roundtrip_recovers_links_and_sweep_error(machine):
+    """The acceptance loop: known machine -> synthetic sweep -> blind fit.
+    Every per-link bandwidth within 5% relative error; the refit model's
+    median placement-sweep error within 0.25pp of the ground truth's."""
+    roundtrip = _load_benchmark("calibration_roundtrip").roundtrip
+    rec = roundtrip(
+        machine,
+        steps=200,
+        sweep_benchmarks=("Swim", "CG"),
+        max_placements=24,
+    )
+    assert rec["max_link_error"] < 0.05, rec
+    assert rec["sweep_median_delta_pp"] < 0.25, rec
+    # local banks come along for free (they are fitted jointly)
+    assert rec["max_local_read_error"] < 0.05
+    assert rec["max_local_write_error"] < 0.05
+
+
+def test_roundtrip_recovers_attenuation_when_observable():
+    """On the SNC-2 preset the hop-attenuated remote caps are tighter than
+    every link on their routes, so the attenuation itself is identifiable
+    — the fit must recover 0.9, not just a behavioral equivalent."""
+    res = fit_from_simulated(E5_2699_V3_SNC2, steps=200)
+    assert abs(res.machine.hop_attenuation - 0.9) < 0.02
+    assert float(link_relative_errors(res.machine, E5_2699_V3_SNC2).max()) < 0.05
+
+
+def test_blind_template_carries_no_answer():
+    """The template handed to the fit must not leak the quantities under
+    recovery (the 'fit blind' contract)."""
+    t = blind_template(E7_8860_V3)
+    assert t.local_read_bw != E7_8860_V3.local_read_bw
+    assert t.local_write_bw != E7_8860_V3.local_write_bw
+    assert t.hop_attenuation != E7_8860_V3.hop_attenuation
+    assert len(set(t.topology.link_bw)) == 1  # all links one placeholder
+    # structure is preserved: link list, routes, remote bases, rates
+    assert t.topology.link_ends == E7_8860_V3.topology.link_ends
+    assert t.topology.routes == E7_8860_V3.topology.routes
+    assert t.remote_read_bw == E7_8860_V3.remote_read_bw
+    assert t.core_rate == E7_8860_V3.core_rate
+
+
+# ---------------------------------------------------------------------------
+# Packing layer and from_fit
+# ---------------------------------------------------------------------------
+
+
+def test_link_groups_untied_and_tied():
+    topo = E7_8860_V3.topology  # 12 QPI links + 4 node-controller links
+    untied = link_groups(topo)
+    assert untied.n_params == topo.n_links
+    assert untied.groups == tuple((l,) for l in range(topo.n_links))
+    tied = link_groups(topo, tie_equal_bw=True)
+    assert tied.n_params == 2
+    assert sorted(len(g) for g in tied.groups) == [4, 12]
+    # pack/unpack round-trips per-link values through the group structure
+    bw = np.asarray(topo.link_bw)
+    packed = tied.pack(bw)
+    np.testing.assert_allclose(np.asarray(tied.unpack(packed)), bw)
+    with pytest.raises(ValueError):
+        type(untied)(groups=((0, 1), (1, 2))).validate()  # not a partition
+
+
+def test_from_fit_holds_routes_static():
+    """Fitted bandwidths must NOT reroute: the routing table is structural
+    knowledge the inverse problem conditions on."""
+    template = ring(4, 10.0)
+    new_bw = [1.0, 100.0, 100.0, 100.0]  # widest-path would now avoid link 0
+    fitted = from_fit(template, new_bw)
+    assert fitted.routes == template.routes
+    assert fitted.link_ends == template.link_ends
+    assert fitted.link_bw == (1.0, 100.0, 100.0, 100.0)
+    assert hash(fitted)  # still a valid jit static arg / cache key
+
+
+def test_caps_from_matches_machine_caps_at_truth():
+    """With parameters set to a machine's true values, the calibration's
+    traced capacity vector equals the simulator's own (modulo the finite
+    stand-in for the unconstrained diagonal)."""
+    m = E5_2699_V3_SNC2
+    groups = link_groups(m.topology)
+    params = CalibrationParams(
+        log_link_bw=np.log(np.asarray(groups.pack(m.topology.link_bw), np.float32)),
+        log_local_read=np.log(np.asarray(m.node_local_bw("read"))),
+        log_local_write=np.log(np.asarray(m.node_local_bw("write"))),
+        att_raw=np.float32(np.log(m.hop_attenuation / (1 - m.hop_attenuation))),
+    )
+    got = np.asarray(_caps_from(m, groups, params))
+    want = np.asarray(machine_caps(m))
+    finite = np.isfinite(want)
+    np.testing.assert_allclose(got[finite], want[finite], rtol=1e-5)
+    assert (got[~finite] > 0).all() and np.isfinite(got[~finite]).all()
+
+
+# ---------------------------------------------------------------------------
+# Seeding
+# ---------------------------------------------------------------------------
+
+
+def test_seed_parameters_are_tight_on_probe_sweep():
+    """The closed-form counter bounds land on the true capacities when the
+    probe suite saturates them (noise-free): the gradient stage refines,
+    it does not rescue."""
+    m = E5_2630_V3
+    samples = collect_sweep(m)
+    seed = seed_parameters(blind_template(m), samples)
+    np.testing.assert_allclose(
+        np.exp(np.asarray(seed.log_local_read)),
+        np.asarray(m.node_local_bw("read")),
+        rtol=0.02,
+    )
+    np.testing.assert_allclose(
+        np.exp(np.asarray(seed.log_link_bw)),
+        np.asarray(m.topology.link_bw),
+        rtol=0.02,
+    )
+
+
+def test_probe_suite_shares_thread_count_and_respects_caps():
+    for m in (E5_2630_V3, E5_2699_V3_SNC2, E7_8860_V3):
+        probes = probe_suite(m)
+        nts = {wl.n_threads for wl, _ in probes}
+        assert len(nts) == 1
+        for _, placement in probes:
+            p = np.asarray(placement)
+            assert p.sum() == next(iter(nts))
+            assert p.min() >= 0 and p.max() <= m.cores_per_node
+    with pytest.raises(ValueError):
+        probe_suite(E5_2630_V3, n_threads=E5_2630_V3.cores_per_node + 1)
+
+
+# ---------------------------------------------------------------------------
+# The external counter-trace path
+# ---------------------------------------------------------------------------
+
+
+def test_samples_from_counters_matches_collect_sweep():
+    """A bwsig/counters.py-shaped trace (one CounterSample per run) fits
+    identically to the simulator-collected sweep — the real-machine
+    entry point."""
+    m = E5_2630_V3
+    probes = probe_suite(m)
+    via_sim = collect_sweep(m)
+    counters = [
+        simulate(m, wl, np.asarray(p)).sample for wl, p in probes
+    ]
+    via_trace = samples_from_counters(
+        [wl for wl, _ in probes], np.stack([p for _, p in probes]), counters
+    )
+    for a, b in zip(via_sim[1:], via_trace[1:]):  # skip wl_arrays tuple
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+    res = fit_machine(blind_template(m), via_trace, steps=80)
+    assert float(link_relative_errors(res.machine, m).max()) < 0.05
+    with pytest.raises(ValueError):
+        samples_from_counters([p[0] for p in probes], np.stack([p for _, p in probes]), counters[:-1])
+    # a counters/placements order mismatch must fail loudly, not corrupt
+    # the apportionment: each CounterSample records its own run's placement
+    shuffled = np.stack([p for _, p in probes])[::-1]
+    with pytest.raises(ValueError, match="recorded placement"):
+        samples_from_counters([p[0] for p in probes], shuffled, counters)
+
+
+def test_fit_is_noise_robust():
+    """Measurement noise on the sweep degrades recovery gracefully — the
+    fit averages over the whole sample set instead of trusting any single
+    saturated run."""
+    m = E5_2630_V3
+    res = fit_from_simulated(
+        m, steps=150, noise_std=0.02, key=jax.random.PRNGKey(7)
+    )
+    assert float(link_relative_errors(res.machine, m).max()) < 0.15
+    errs = local_bw_relative_errors(res.machine, m)
+    assert float(errs["read"].max()) < 0.15
+    assert float(errs["write"].max()) < 0.15
+
+
+# ---------------------------------------------------------------------------
+# Per-node bandwidth vectors: the mixed-DIMM regression
+# ---------------------------------------------------------------------------
+
+
+def test_mixed_dimm_banks_are_recovered_per_node():
+    """The calibration must recover UNEQUAL bank capacities — node 1's
+    half-populated DIMMs — which the scalar local_*_bw model could not
+    even represent."""
+    m = E5_2630_V3_MIXED_DIMM
+    res = fit_from_simulated(m, steps=150)
+    fitted_read = np.asarray(res.machine.node_local_bw("read"))
+    assert fitted_read[0] > 1.8 * fitted_read[1]  # asymmetry survives
+    errs = local_bw_relative_errors(res.machine, m)
+    assert float(errs["read"].max()) < 0.05
+    assert float(errs["write"].max()) < 0.05
+    assert float(link_relative_errors(res.machine, m).max()) < 0.05
+
+
+def test_fit_rejects_mismatched_samples():
+    samples = collect_sweep(E5_2630_V3)
+    with pytest.raises(ValueError):
+        fit_machine(blind_template(E5_2699_V3_SNC2), samples, steps=1)

@@ -26,6 +26,7 @@ from _hypothesis_compat import given, settings, st
 from repro.core.bwsig.counters import counters_from_flows
 from repro.core.numa import (
     E5_2630_V3,
+    E5_2630_V3_MIXED_DIMM,
     E5_2630_V3_THROTTLED,
     E5_2699_V3,
     E5_2699_V3_SNC2,
@@ -411,6 +412,91 @@ def test_make_machine_validates_node_fields():
     )
     assert m.n_nodes == 4 and m.topology.name == "snc2x2"
     assert isinstance(m.core_rate, tuple)
+
+
+# ---------------------------------------------------------------------------
+# per-node local bandwidth vectors (mixed DIMM populations)
+# ---------------------------------------------------------------------------
+
+
+def test_node_local_bw_broadcasts_scalar_and_tuple():
+    """Every per-node consumer of local_*_bw goes through node_local_bw:
+    scalars broadcast (the pre-refactor path, same values/dtype), tuples
+    map each bank to its own capacity."""
+    np.testing.assert_array_equal(
+        np.asarray(E5_2630_V3.node_local_bw("read")),
+        np.full((2,), E5_2630_V3.local_read_bw, np.float32),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(E5_2630_V3_MIXED_DIMM.node_local_bw("read")),
+        np.asarray([52e9, 26e9], np.float32),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(E5_2630_V3_MIXED_DIMM.bank_write_caps()),
+        np.asarray([28e9, 14e9], np.float32),
+    )
+    with pytest.raises(ValueError):
+        E5_2630_V3.node_local_bw("sideways")
+
+
+def test_local_bw_tuple_validation_and_fingerprint():
+    with pytest.raises(ValueError):
+        E5_2630_V3._replace(local_read_bw=(52e9,)).validate()
+    with pytest.raises(ValueError):
+        E5_2630_V3._replace(local_write_bw=(28e9, -1.0)).validate()
+    # tuple vs scalar spelling must not collide in signature-cache keys
+    fp = E5_2630_V3.fingerprint()
+    assert E5_2630_V3._replace(local_read_bw=(52e9, 52e9)).fingerprint() != fp
+    assert E5_2630_V3_MIXED_DIMM.fingerprint() != fp
+    # and the per-node values themselves participate
+    assert (
+        E5_2630_V3_MIXED_DIMM._replace(local_read_bw=(26e9, 52e9)).fingerprint()
+        != E5_2630_V3_MIXED_DIMM.fingerprint()
+    )
+
+
+def test_mixed_dimm_banks_cap_per_node():
+    """Simulation respects each bank's own capacity: the half-populated
+    bank saturates at half the bandwidth of the full one."""
+    m = E5_2630_V3_MIXED_DIMM
+    wl = mixed_workload("local", 8, read_mix=(0.0, 1.0, 0.0), read_bpi=8.0)
+    res = simulate(m, wl, jnp.asarray([4, 4], jnp.int32))
+    reads = np.asarray(res.read_flows).sum(0)
+    assert np.isclose(reads[0], 52e9, rtol=1e-3)
+    assert np.isclose(reads[1], 26e9, rtol=1e-3)
+
+
+def test_mixed_dimm_through_evaluate_batch_and_advisor():
+    """The scalar/tuple coercion audit end to end: the batched fit+predict
+    engine stays exact on an in-model workload, and the advisor's roofline
+    charges each bank its own capacity (so a bandwidth-bound workload
+    concentrates on the fat-DIMM node)."""
+    from repro.core.meshsig.advisor import rank_numa_placements
+
+    m = E5_2630_V3_MIXED_DIMM
+    wl = benchmark_workload("Swim", 8)
+    batch = evaluate_batch(m, wl, sweep_placements(m, 8), keys=jax.random.PRNGKey(2))
+    errs = np.asarray(batch.errors_combined)
+    assert np.isfinite(errs).all()
+    assert errs.max() < 2e-3
+    heavy = mixed_workload("bw", 6, read_mix=(0.0, 1.0, 0.0), read_bpi=8.0)
+    ranked = rank_numa_placements(m, heavy)
+    assert ranked[0].placement[0] > ranked[0].placement[1]
+
+
+def test_make_machine_canonicalizes_local_bw_sequences():
+    m = make_machine(
+        "mixed", sockets=2, cores_per_socket=8,
+        local_read_bw=[50e9, 25e9], local_write_bw=[28e9, 14e9],
+        remote_read_ratio=0.2, remote_write_ratio=0.3,
+    )
+    assert m.local_read_bw == (50e9, 25e9)
+    assert isinstance(m.local_read_bw, tuple)
+    # remote path bases anchor on the mean bank bandwidth
+    assert m.remote_read_bw == pytest.approx(0.2 * 37.5e9)
+    assert m.remote_write_bw == pytest.approx(0.3 * 21e9)
+    with pytest.raises(ValueError):
+        make_machine("bad", sockets=2, local_read_bw=[50e9, 25e9, 10e9])
 
 
 # ---------------------------------------------------------------------------

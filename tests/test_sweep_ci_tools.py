@@ -1,0 +1,163 @@
+"""The CI sweep tooling itself: the regression gate script
+(``benchmarks/check_sweep_regression.py`` — previously untested) and the
+artifact-history trend dashboard (``benchmarks/sweep_dashboard.py``).
+
+The gate's contract under test: pass when errors hold, fail on error
+regression beyond tolerance, fail when a baseline sweep is missing from
+the new artifact, ignore sweeps the baseline does not know (new machines
+land in the artifact first, the baseline is updated by hand), and the
+throughput floor only bites when explicitly enabled.
+"""
+
+import importlib.util
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+
+def _load_benchmark(name):
+    path = Path(__file__).resolve().parents[1] / "benchmarks" / f"{name}.py"
+    spec = importlib.util.spec_from_file_location(name, path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.fixture(scope="module")
+def gate():
+    return _load_benchmark("check_sweep_regression")
+
+
+@pytest.fixture(scope="module")
+def dashboard():
+    return _load_benchmark("sweep_dashboard")
+
+
+def _rec(sweep, err, pps=1000.0):
+    return {"sweep": sweep, "median_error_pct": err, "placements_per_sec": pps}
+
+
+# ---------------------------------------------------------------------------
+# check_sweep_regression.check
+# ---------------------------------------------------------------------------
+
+
+def test_gate_passes_within_tolerance(gate):
+    base = [_rec("a", 0.05), _rec("b", 0.10)]
+    new = [_rec("a", 0.20), _rec("b", 0.05)]  # +0.15 <= 0.25 tolerance
+    assert gate.check(new, base, error_tolerance=0.25, min_pps_ratio=0.0) == []
+
+
+def test_gate_fails_on_error_regression(gate):
+    base = [_rec("a", 0.05)]
+    new = [_rec("a", 0.45)]
+    failures = gate.check(new, base, error_tolerance=0.25, min_pps_ratio=0.0)
+    assert len(failures) == 1 and "regressed" in failures[0]
+
+
+def test_gate_fails_when_baseline_sweep_missing_from_artifact(gate):
+    base = [_rec("a", 0.05), _rec("gone", 0.05)]
+    new = [_rec("a", 0.05)]
+    failures = gate.check(new, base, error_tolerance=0.25, min_pps_ratio=0.0)
+    assert len(failures) == 1 and "missing" in failures[0]
+
+
+def test_gate_ignores_new_machine_keys(gate):
+    """A sweep present only in the new artifact (a machine added this PR)
+    must not fail the gate — the committed baseline is extended by hand
+    once the new sweep's numbers settle."""
+    base = [_rec("a", 0.05)]
+    new = [_rec("a", 0.05), _rec("brand-new-machine", 9.99)]
+    assert gate.check(new, base, error_tolerance=0.25, min_pps_ratio=0.0) == []
+
+
+def test_gate_throughput_floor_only_when_enabled(gate):
+    base = [_rec("a", 0.05, pps=1000.0)]
+    new = [_rec("a", 0.05, pps=100.0)]
+    assert gate.check(new, base, error_tolerance=0.25, min_pps_ratio=0.0) == []
+    failures = gate.check(new, base, error_tolerance=0.25, min_pps_ratio=0.5)
+    assert len(failures) == 1 and "throughput" in failures[0]
+
+
+def test_gate_main_pass_and_fail_exit_codes(gate, tmp_path, monkeypatch):
+    base_p = tmp_path / "base.json"
+    new_p = tmp_path / "new.json"
+    base_p.write_text(json.dumps([_rec("a", 0.05)]))
+    new_p.write_text(json.dumps([_rec("a", 0.05)]))
+    monkeypatch.setattr(
+        sys, "argv", ["check", str(new_p), "--baseline", str(base_p)]
+    )
+    gate.main()  # passes: no SystemExit
+    new_p.write_text(json.dumps([_rec("a", 5.0)]))
+    with pytest.raises(SystemExit) as exc:
+        gate.main()
+    assert exc.value.code == 1
+
+
+def test_gate_main_missing_baseline_file(gate, tmp_path, monkeypatch):
+    new_p = tmp_path / "new.json"
+    new_p.write_text(json.dumps([_rec("a", 0.05)]))
+    monkeypatch.setattr(
+        sys,
+        "argv",
+        ["check", str(new_p), "--baseline", str(tmp_path / "nope.json")],
+    )
+    with pytest.raises(FileNotFoundError):
+        gate.main()
+
+
+# ---------------------------------------------------------------------------
+# sweep_dashboard
+# ---------------------------------------------------------------------------
+
+
+def test_sparkline_shapes(dashboard):
+    assert dashboard.sparkline([]) == ""
+    assert dashboard.sparkline([1.0, 1.0, 1.0]) == "▄▄▄"
+    up = dashboard.sparkline([0.0, 0.5, 1.0])
+    assert up[0] == "▁" and up[-1] == "█" and len(up) == 3
+
+
+def test_load_history_orders_skips_garbage_and_appends_current(
+    dashboard, tmp_path
+):
+    hist = tmp_path / "hist"
+    for stamp, err in (("2026-01-02__run-b", 0.2), ("2026-01-01__run-a", 0.1)):
+        d = hist / stamp
+        d.mkdir(parents=True)
+        (d / "placement_sweep.json").write_text(json.dumps([_rec("a", err)]))
+    (hist / "2026-01-02__run-b" / "broken.json").write_text("{nope")
+    (hist / "2026-01-03__empty").mkdir()
+    current = tmp_path / "current.json"
+    current.write_text(json.dumps([_rec("a", 0.3), _rec("new", 1.0)]))
+
+    runs = dashboard.load_history(hist, current)
+    assert [r["run"] for r in runs] == [
+        "2026-01-01__run-a", "2026-01-02__run-b", "current",
+    ]
+    series = dashboard.aggregate(runs)
+    assert series["a"]["errors"] == [0.1, 0.2, 0.3]
+    assert series["new"]["errors"] == [1.0]  # machines added later: short series
+
+    md = dashboard.render_markdown(series)
+    assert "| a | 3 | 0.3000 | +0.1000 |" in md
+    assert "| new | 1 | 1.0000 |" in md
+    assert dashboard.sparkline([0.1, 0.2, 0.3]) in md
+
+
+def test_load_history_without_history_dir(dashboard, tmp_path):
+    """First run of a fresh repo: no prior artifacts, only the current
+    sweep — the dashboard still renders."""
+    current = tmp_path / "current.json"
+    current.write_text(json.dumps([_rec("a", 0.5)]))
+    runs = dashboard.load_history(tmp_path / "does-not-exist", current)
+    assert len(runs) == 1
+    md = dashboard.render_markdown(dashboard.aggregate(runs))
+    assert "| a | 1 | 0.5000 |" in md
+
+
+def test_render_markdown_empty(dashboard):
+    md = dashboard.render_markdown({})
+    assert "no sweep artifacts" in md
