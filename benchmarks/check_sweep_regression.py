@@ -2,16 +2,27 @@
 
 CI runs ``placement_sweep.py --json`` on every push and nightly; this
 script compares that artifact with ``benchmarks/sweep_baseline.json`` and
-exits non-zero when the model's *median error* regresses beyond tolerance
-on any sweep — the accuracy trend check ROADMAP asked for on top of the
-uploaded artifact history.  Throughput (placements/sec) is reported for
-trending but only enforced via the loose ``--min-pps-ratio`` floor (CI
-runner speed varies run to run; the default 0 disables the gate, and the
-in-repo perf floor lives in the test suite instead).
+exits non-zero when, on any sweep,
+
+* the model's *median error* regresses beyond tolerance (the accuracy
+  trend check ROADMAP asked for on top of the uploaded artifact
+  history), or
+* *throughput* (placements/sec) falls below the sweep's absolute
+  ``min_placements_per_sec`` floor committed in the baseline.  The floor
+  locks in the group-collapsed solver's speedup: it is set conservatively
+  (about 2x the pre-grouping CI throughput, against a measured >= 5x
+  algorithmic speedup) so CI-runner speed variance cannot trip it, but a
+  silent fallback to the per-thread path (~1x) always will.
+
+The looser relative ``--min-pps-ratio`` floor (default 0 = disabled)
+remains for local use.  ``--summary`` appends a one-line
+baseline-vs-current speedup summary (for ``$GITHUB_STEP_SUMMARY``, next
+to the dashboard's error trend).
 
     PYTHONPATH=src python benchmarks/check_sweep_regression.py NEW.json \
         [--baseline benchmarks/sweep_baseline.json] \
-        [--error-tolerance 0.25] [--min-pps-ratio 0.0]
+        [--error-tolerance 0.25] [--min-pps-ratio 0.0] \
+        [--summary "$GITHUB_STEP_SUMMARY"]
 """
 
 from __future__ import annotations
@@ -59,7 +70,30 @@ def check(
                 f"{sweep!r}: throughput fell to {ratio:.2f}x of baseline "
                 f"(floor {min_pps_ratio}x)"
             )
+        floor = base.get("min_placements_per_sec")
+        if floor is not None and pps < floor:
+            failures.append(
+                f"{sweep!r}: throughput {pps:.0f} placements/s below the "
+                f"committed floor {floor:.0f} (grouped-solver speedup lost?)"
+            )
     return failures
+
+
+def speedup_summary(new: list[dict], baseline: list[dict]) -> str:
+    """One line: current placements/s as a multiple of the committed
+    (pre-grouping) baseline, per sweep."""
+    base_by_sweep = {rec["sweep"]: rec for rec in baseline}
+    parts = []
+    for rec in new:
+        base = base_by_sweep.get(rec["sweep"])
+        if base is None or not base.get("placements_per_sec"):
+            continue
+        ratio = rec["placements_per_sec"] / base["placements_per_sec"]
+        parts.append(
+            f"{rec['sweep']}: {rec['placements_per_sec']:,.0f} pps "
+            f"(x{ratio:.1f} vs baseline {base['placements_per_sec']:,.0f})"
+        )
+    return "**Sweep throughput** — " + " · ".join(parts) if parts else ""
 
 
 def main() -> None:
@@ -77,7 +111,16 @@ def main() -> None:
         type=float,
         default=0.0,
         help="fail when placements/sec falls below this fraction of baseline "
-        "(0 disables — CI runner speed is not comparable across runs)",
+        "(0 disables — CI runner speed is not comparable across runs; the "
+        "enforced floor is the absolute min_placements_per_sec in the "
+        "baseline records)",
+    )
+    parser.add_argument(
+        "--summary",
+        type=Path,
+        default=None,
+        help="append a one-line baseline-vs-current speedup summary to this "
+        "file ($GITHUB_STEP_SUMMARY)",
     )
     args = parser.parse_args()
 
@@ -89,6 +132,12 @@ def main() -> None:
         error_tolerance=args.error_tolerance,
         min_pps_ratio=args.min_pps_ratio,
     )
+    line = speedup_summary(new, baseline)
+    if line:
+        print(line)
+    if args.summary is not None and line:
+        with args.summary.open("a") as fh:
+            fh.write(line + "\n\n")
     if failures:
         for msg in failures:
             print(f"REGRESSION: {msg}", file=sys.stderr)

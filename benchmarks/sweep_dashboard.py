@@ -118,14 +118,18 @@ def render_markdown(series: dict[str, dict]) -> str:
         )
     lines += [
         "",
-        "Throughput (placements/sec, informational — runner speed varies):",
+        "Throughput (placements/sec; floors are gated, the trend is "
+        "informational — runner speed varies):",
         "",
-        "| sweep | latest | trend |",
-        "| --- | ---: | --- |",
+        "| sweep | latest | x vs first run | trend |",
+        "| --- | ---: | ---: | --- |",
     ]
     for sweep in sorted(series):
         pps = series[sweep]["pps"]
-        lines.append(f"| {sweep} | {pps[-1]:,.0f} | `{sparkline(pps)}` |")
+        ratio = f"x{pps[-1] / pps[0]:.1f}" if pps[0] else "–"
+        lines.append(
+            f"| {sweep} | {pps[-1]:,.0f} | {ratio} | `{sparkline(pps)}` |"
+        )
     return "\n".join(lines) + "\n"
 
 

@@ -46,9 +46,11 @@ from repro.core.numa.simulator import (
     machine_caps,
     simulate,
     simulate_counters,
+    simulate_reference,
     profile_pair,
     symmetric_placement,
     asymmetric_placement,
+    thread_class_starts,
 )
 from repro.core.numa.calibrate import (
     CalibrationParams,
@@ -93,6 +95,8 @@ __all__ = [
     "machine_caps",
     "simulate",
     "simulate_counters",
+    "simulate_reference",
+    "thread_class_starts",
     "profile_pair",
     "symmetric_placement",
     "asymmetric_placement",

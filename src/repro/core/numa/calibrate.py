@@ -60,7 +60,12 @@ from jax import Array
 from repro.core.bwsig.counters import CounterSample
 from repro.core.bwsig.fit import _remote_source_weights
 from repro.core.numa.machine import GB, MachineSpec
-from repro.core.numa.simulator import asymmetric_placement, simulate
+from repro.core.numa.simulator import (
+    asymmetric_placement,
+    class_starts_from_arrays,
+    simulate,
+    thread_class_starts,
+)
 from repro.core.numa.topology import LinkGroups, from_fit, link_groups
 from repro.core.numa.workload import Workload, mixed_workload
 from repro.optim import adamw
@@ -307,13 +312,19 @@ def probe_suite(
     return probes
 
 
-@partial(jax.jit, static_argnames=("machine", "noise_std", "background_bw"))
-def _collect_jit(machine, wl_arrays, placements, keys, noise_std, background_bw):
+@partial(
+    jax.jit,
+    static_argnames=("machine", "noise_std", "background_bw", "thread_classes"),
+)
+def _collect_jit(
+    machine, wl_arrays, placements, keys, noise_std, background_bw, thread_classes
+):
     def one(arrays, placement, key):
         wl = Workload("calib", *arrays)
         res = simulate(
             machine, wl, placement,
             noise_std=noise_std, background_bw=background_bw, key=key,
+            thread_classes=thread_classes,
         )
         smp = res.sample
         return (
@@ -346,6 +357,7 @@ def collect_sweep(
     lr, rr, lw, rw, ins = _collect_jit(
         machine, wl_arrays, placements, keys,
         float(noise_std), float(background_bw),
+        thread_class_starts(wls),
     )
     return CalibrationSamples(
         wl_arrays=wl_arrays,
@@ -460,12 +472,15 @@ def _sweep_loss(
     samples: CalibrationSamples,
     params: CalibrationParams,
     instruction_weight: float,
+    thread_classes: tuple[int, ...],
 ) -> Array:
     caps = _caps_from(template, groups, params)
 
     def per_sample(arrays, placement, olr, orr, olw, orw, oins, el):
         wl = Workload("calib", *arrays)
-        res = simulate(template, wl, placement, caps=caps)
+        res = simulate(
+            template, wl, placement, caps=caps, thread_classes=thread_classes
+        )
         smp = res.sample
         obs = jnp.concatenate([olr, orr, olw, orw]) / el
         sim = jnp.concatenate(
@@ -494,9 +509,15 @@ def _sweep_loss(
 
 @partial(
     jax.jit,
-    static_argnames=("template", "groups", "steps", "lr", "instruction_weight"),
+    static_argnames=(
+        "template", "groups", "steps", "lr", "instruction_weight",
+        "thread_classes",
+    ),
 )
-def _fit_jit(template, groups, samples, params, steps, lr, instruction_weight):
+def _fit_jit(
+    template, groups, samples, params, steps, lr, instruction_weight,
+    thread_classes,
+):
     schedule = adamw.cosine_schedule(
         lr, warmup_steps=min(20, max(steps // 10, 1)), total_steps=steps
     )
@@ -510,7 +531,7 @@ def _fit_jit(template, groups, samples, params, steps, lr, instruction_weight):
         loss, grads = jax.value_and_grad(
             lambda q: _sweep_loss(
                 template, groups, samples, CalibrationParams(**q),
-                instruction_weight,
+                instruction_weight, thread_classes,
             )
         )(p)
         new_p, new_st = adamw.update(
@@ -525,7 +546,10 @@ def _fit_jit(template, groups, samples, params, steps, lr, instruction_weight):
     # history[k] is the loss at the PRE-update params of step k; evaluate
     # the returned params once so the reported final loss matches the
     # machine actually handed back
-    final_loss = _sweep_loss(template, groups, samples, final_params, instruction_weight)
+    final_loss = _sweep_loss(
+        template, groups, samples, final_params, instruction_weight,
+        thread_classes,
+    )
     return final_params, history, final_loss
 
 
@@ -591,12 +615,20 @@ def fit_machine(
         groups = link_groups(template.topology, tie_equal_bw=tie_equal_bw)
     if init is None:
         init = seed_parameters(template, samples, groups)
+    # samples.wl_arrays are concrete here (the jit boundary is below), so
+    # the static class refinement of the whole sweep is readable — this is
+    # what keeps every gradient step on the grouped solver.  The last leaf
+    # is the stacked static_socket scalar, whose trailing axis is samples,
+    # not threads — exclude it.
+    thread_classes = class_starts_from_arrays(samples.wl_arrays[:-1])
     seed_loss = float(
-        _sweep_loss(template, groups, samples, init, instruction_weight)
+        _sweep_loss(
+            template, groups, samples, init, instruction_weight, thread_classes
+        )
     )
     params, history, final_loss = _fit_jit(
         template, groups, samples, init, int(steps), float(lr),
-        float(instruction_weight),
+        float(instruction_weight), thread_classes,
     )
     return CalibrationResult(
         machine=fitted_machine(template, groups, params, name=name),

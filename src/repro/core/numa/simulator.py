@@ -21,6 +21,31 @@ the rate asymmetries between sockets that motivate the normalization step.
 The solver is a fixed-iteration ``lax.fori_loop`` and the whole function is
 ``jit``/``vmap``-able over placements, so evaluating thousands of
 placements (paper §6.2.2: 2322 data points) is a single batched call.
+
+Group-collapsed hot path
+------------------------
+
+Threads on the same NUMA node with the same per-thread workload column
+(mix fractions + bytes/instruction) are *identical* rows of the resource
+slab, so the solver never needs the thread axis: :func:`simulate` runs
+max-min fairness over **thread groups** — ``(class, node)`` equivalence
+classes with integer multiplicities — shrinking the slab from
+``(n_threads, R)`` to ``(n_classes * n_nodes, R)`` (32 -> 8 rows on the
+8-socket preset for a homogeneous workload) and the iteration bound from
+``min(n_threads, R) + 1`` to ``min(n_groups, R) + 1``.  Classes are
+*static* maximal runs of the thread index range over which every
+workload array is constant (:func:`thread_class_starts`); group
+multiplicities are cheap traced interval overlaps, so the grouped path
+stays ``jit``/``vmap``-able over placements and differentiable through
+``caps``.  Per-thread rates, flows and counters are reconstructed
+exactly from the group rates (identical support rows freeze together in
+progressive filling, so members of a group provably share one rate).
+
+:func:`simulate_reference` keeps the per-thread formulation verbatim as
+the test-only reference implementation (the way PR 3's verbatim replica
+pinned the node refactor); when ``simulate`` cannot learn the class
+structure (traced workload arrays and no ``thread_classes`` argument) it
+falls back to that path.
 """
 
 from __future__ import annotations
@@ -210,7 +235,7 @@ def _progressive_fill(usage: Array, caps: Array, iterations: int) -> Array:
     return jnp.where(frozen, x, 1.0)
 
 
-def simulate(
+def simulate_reference(
     machine: MachineSpec,
     workload: Workload,
     n_per_node: Array,
@@ -221,15 +246,13 @@ def simulate(
     key: Array | None = None,
     caps: Array | None = None,
 ) -> SimulationResult:
-    """Run the workload on the machine under the given placement (threads
-    per NUMA node) and emit ground truth + the paper-visible performance
-    counters.
+    """The per-thread reference solver: one resource-slab row per thread.
 
-    ``caps`` substitutes the machine's capacity vector (slab order of
-    :func:`machine_caps`) with traced values — the differentiable-forward
-    hook ``repro.core.numa.calibrate`` fits machine parameters through;
-    everything else about the machine (routes, rates, thread geometry)
-    stays static structure."""
+    This is the pre-grouping formulation kept verbatim — the reference
+    implementation the grouped hot path (:func:`simulate`) is tested
+    against, and the fallback when the class structure of a traced
+    workload is unknown.  Prefer :func:`simulate` everywhere else: it is
+    exact to ~1 ulp and its cost scales with nodes, not threads."""
     s = machine.n_nodes
     n = workload.n_threads
     n_per_node = jnp.asarray(n_per_node)
@@ -270,6 +293,26 @@ def simulate(
     write_flows = onehot.T @ (rates[:, None] * write_unit) * elapsed
     instructions = onehot.T @ (rates * rate_of) * elapsed
 
+    return _finalize_result(
+        rates, read_flows, write_flows, instructions, n_per_node,
+        elapsed, noise_std, background_bw, key, s,
+    )
+
+
+def _finalize_result(
+    rates: Array,
+    read_flows: Array,
+    write_flows: Array,
+    instructions: Array,
+    n_per_node: Array,
+    elapsed: float,
+    noise_std: float,
+    background_bw: float,
+    key: Array | None,
+    s: int,
+) -> SimulationResult:
+    """Measurement noise + counter reduction, shared by the grouped and
+    per-thread paths (op-for-op the pre-grouping tail of ``simulate``)."""
     if noise_std > 0.0 or background_bw > 0.0:
         if key is None:
             key = jax.random.PRNGKey(0)
@@ -293,6 +336,271 @@ def simulate(
         write_flows=write_flows,
         sample=sample,
         throughput=rates.sum(),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Group-collapsed solver: (class, node) equivalence classes of threads
+# ---------------------------------------------------------------------------
+
+
+def class_starts_from_arrays(arrays) -> tuple[int, ...]:
+    """Static thread-class boundaries from concrete per-thread arrays.
+
+    Classes are *maximal runs* of the thread index range over which every
+    array (last axis = threads; scalars are skipped) is constant.  Runs —
+    not value-equivalence classes — because the contiguous thread->node
+    assignment makes interval overlap the multiplicity computation; a
+    finer partition is always correct.  Returns the tuple of class start
+    indices, e.g. ``(0,)`` for a homogeneous workload or ``(0, n//2)``
+    for the Page-rank violator's hot/cold halves."""
+    boundary = None
+    for a in arrays:
+        a = np.asarray(a)
+        if a.ndim == 0 or a.shape[-1] < 2:
+            continue
+        diff = a[..., 1:] != a[..., :-1]
+        diff = diff.reshape(-1, diff.shape[-1]).any(axis=0)
+        boundary = diff if boundary is None else (boundary | diff)
+    if boundary is None:
+        return (0,)
+    return (0,) + tuple(int(i) + 1 for i in np.flatnonzero(boundary))
+
+
+def thread_class_starts(workloads) -> tuple[int, ...]:
+    """Common static class refinement over one or more workloads: the
+    partition of ``[0, n)`` into maximal runs where *every* workload's
+    per-thread arrays are constant.  A batch of workloads evaluated in
+    one trace must share one (static) partition, so the refinement is the
+    union of each workload's class boundaries."""
+    if isinstance(workloads, Workload):
+        workloads = [workloads]
+    # wl[1:-1]: every per-thread array field; static_socket (a scalar, and
+    # a per-*sample* axis once stacked) never partitions the thread range.
+    arrays = [a for wl in workloads for a in wl[1:-1]]
+    return class_starts_from_arrays(arrays)
+
+
+def _infer_thread_classes(workload: Workload) -> tuple[int, ...] | None:
+    """Class boundaries from a concrete workload; ``None`` when any array
+    field is traced (inside jit/vmap the values are unreadable — callers
+    must pass ``thread_classes`` explicitly to stay on the grouped path)."""
+    if any(isinstance(f, jax.core.Tracer) for f in workload[1:]):
+        return None
+    return thread_class_starts(workload)
+
+
+def _group_multiplicities(
+    class_starts: tuple[int, ...], n: int, n_per_node: Array
+) -> Array:
+    """``(C, s)`` thread count of class ``c`` on node ``k``: the overlap
+    of the static class interval with the traced node interval of the
+    contiguous thread->node assignment."""
+    bounds = jnp.asarray(class_starts + (n,), jnp.int32)  # (C+1,) static
+    node_hi = jnp.cumsum(n_per_node.astype(jnp.int32))
+    node_lo = node_hi - n_per_node.astype(jnp.int32)
+    lo = jnp.maximum(bounds[:-1, None], node_lo[None, :])
+    hi = jnp.minimum(bounds[1:, None], node_hi[None, :])
+    return jnp.maximum(hi - lo, 0)
+
+
+def _group_mix_rows(
+    static_frac: Array,  # (C,)
+    local_frac: Array,
+    per_thread_frac: Array,
+    static_socket: Array,
+    n_per_node: Array,
+) -> Array:
+    """``(C, s, s)`` traffic mix over banks for a class-``c`` thread
+    placed on node ``k`` — :func:`_mix_rows` with the thread axis replaced
+    by the (class, node) grid."""
+    s = n_per_node.shape[0]
+    nf = n_per_node.astype(jnp.float32)
+    used = (nf > 0).astype(jnp.float32)
+    s_used = jnp.maximum(used.sum(), 1.0)
+
+    static_row = (jnp.arange(s) == static_socket).astype(jnp.float32)  # (s,)
+    local_rows = jnp.eye(s)  # node k's local row
+    pt_row = nf / jnp.maximum(nf.sum(), 1.0)
+    il_row = used / s_used
+
+    inter = 1.0 - static_frac - local_frac - per_thread_frac
+    return (
+        static_frac[:, None, None] * static_row[None, None, :]
+        + local_frac[:, None, None] * local_rows[None, :, :]
+        + per_thread_frac[:, None, None] * pt_row[None, None, :]
+        + inter[:, None, None] * il_row[None, None, :]
+    )
+
+
+def _group_resource_tensor(
+    machine: MachineSpec,
+    read_unit: Array,  # (C, s, s) bytes/s of one class-c thread on node k
+    write_unit: Array,
+    caps: Array | None = None,
+) -> tuple[Array, Array]:
+    """Per-*group* resource-usage matrix ``U[g, r]`` (``g = c * s + k``)
+    in the exact slab order of :func:`_resource_tensor` / :func:`machine_caps`.
+
+    Each group only ever occupies its own node's row of the ``s x s``
+    remote slabs, so those columns are built by a static scatter (every
+    group row places its ``s`` bank flows at columns ``k*s + j``) instead
+    of the per-thread path's dense one-hot masking; per-link charges
+    gather the node's rows of the full route-incidence matrix (direct and
+    multi-hop routes alike, matching the reference's two-part sum)."""
+    s = machine.n_nodes
+    C = read_unit.shape[0]
+    G = C * s
+    topo = machine.topology
+
+    read_flat = read_unit.reshape(G, s)
+    write_flat = write_unit.reshape(G, s)
+    node_idx = np.tile(np.arange(s), C)  # (G,) static: group g lives on node g%s
+    offdiag = jnp.asarray(
+        np.arange(s)[None, :] != node_idx[:, None], read_flat.dtype
+    )  # (G, s) static constant
+    rr_vals = read_flat * offdiag
+    ww_vals = write_flat * offdiag
+
+    cols = node_idx[:, None] * s + np.arange(s)[None, :]  # (G, s) static
+    rows = np.arange(G)[:, None]
+    rr_remote = jnp.zeros((G, s * s), read_flat.dtype).at[rows, cols].set(rr_vals)
+    ww_remote = jnp.zeros((G, s * s), write_flat.dtype).at[rows, cols].set(ww_vals)
+
+    if topo.n_links:
+        # (s, s, L) static: node k's rows of the full pair->link incidence
+        inc = np.asarray(topo.route_incidence()).reshape(s, s, topo.n_links)
+        inc_rows = jnp.asarray(inc[node_idx])  # (G, s, L) static constant
+        link_usage = jnp.einsum("gj,gjl->gl", rr_vals + ww_vals, inc_rows)
+    else:
+        link_usage = jnp.zeros((G, 0))
+
+    usage = jnp.concatenate(
+        [read_flat, write_flat, rr_remote, ww_remote, link_usage], axis=1
+    )
+    if caps is None:
+        caps = machine_caps(machine)
+    return usage, caps
+
+
+def _progressive_fill_grouped(
+    unit_usage: Array, mult: Array, caps: Array, iterations: int
+) -> Array:
+    """Weighted max-min fairness over thread groups: ``unit_usage[g]`` is
+    one member's resource row, ``mult[g]`` the member count.  Identical
+    rows freeze together in :func:`_progressive_fill` (the freeze rule
+    only reads a row's *support*), so solving over groups with summed
+    usage reproduces the per-thread rates exactly; empty groups carry
+    zero usage and cannot move any bottleneck."""
+    g = unit_usage.shape[0]
+    total_usage = unit_usage * mult[:, None]
+
+    def body(_, state):
+        x, frozen = state
+        active = ~frozen
+        frozen_usage = (total_usage * jnp.where(frozen, x, 0.0)[:, None]).sum(0)
+        act_usage = (total_usage * active[:, None].astype(unit_usage.dtype)).sum(0)
+        resid = jnp.maximum(caps - frozen_usage, 0.0)
+        lam = jnp.where(act_usage > _EPS, resid / jnp.maximum(act_usage, _EPS), jnp.inf)
+        lam_star = jnp.minimum(jnp.min(lam), 1.0)
+        bottleneck = lam <= lam_star * (1.0 + 1e-6)
+        uses_bottleneck = (unit_usage * bottleneck[None, :]).sum(1) > _EPS
+        freeze_now = active & (uses_bottleneck | (lam_star >= 1.0))
+        x = jnp.where(freeze_now, lam_star, x)
+        frozen = frozen | freeze_now
+        return x, frozen
+
+    x0 = jnp.zeros((g,), unit_usage.dtype)
+    frozen0 = jnp.zeros((g,), bool)
+    x, frozen = jax.lax.fori_loop(0, iterations, body, (x0, frozen0))
+    return jnp.where(frozen, x, 1.0)
+
+
+def simulate(
+    machine: MachineSpec,
+    workload: Workload,
+    n_per_node: Array,
+    *,
+    elapsed: float = 1.0,
+    noise_std: float = 0.0,
+    background_bw: float = 0.0,
+    key: Array | None = None,
+    caps: Array | None = None,
+    thread_classes: tuple[int, ...] | None = None,
+) -> SimulationResult:
+    """Run the workload on the machine under the given placement (threads
+    per NUMA node) and emit ground truth + the paper-visible performance
+    counters.
+
+    ``caps`` substitutes the machine's capacity vector (slab order of
+    :func:`machine_caps`) with traced values — the differentiable-forward
+    hook ``repro.core.numa.calibrate`` fits machine parameters through;
+    everything else about the machine (routes, rates, thread geometry)
+    stays static structure.
+
+    ``thread_classes`` is the static class-start partition from
+    :func:`thread_class_starts` — required to stay on the group-collapsed
+    hot path when the workload arrays are traced (inside jit/vmap their
+    values cannot be inspected).  With concrete arrays it is inferred;
+    otherwise the per-thread :func:`simulate_reference` path runs."""
+    if thread_classes is None:
+        thread_classes = _infer_thread_classes(workload)
+    if thread_classes is None:
+        return simulate_reference(
+            machine, workload, n_per_node,
+            elapsed=elapsed, noise_std=noise_std, background_bw=background_bw,
+            key=key, caps=caps,
+        )
+
+    s = machine.n_nodes
+    n = workload.n_threads
+    n_per_node = jnp.asarray(n_per_node)
+    starts = np.asarray(thread_classes, np.int64)
+    if starts.size == 0 or starts[0] != 0 or (np.diff(starts) <= 0).any() or (
+        starts[-1] >= n
+    ):
+        raise ValueError(f"invalid thread_classes {thread_classes} for {n} threads")
+    C = starts.size
+    rep = starts  # class representative = first member (static gather)
+
+    node_rates = machine.node_rates()  # (s,)
+    read_mix = _group_mix_rows(
+        workload.read_static[rep],
+        workload.read_local[rep],
+        workload.read_per_thread[rep],
+        workload.static_socket,
+        n_per_node,
+    )
+    write_mix = _group_mix_rows(
+        workload.write_static[rep],
+        workload.write_local[rep],
+        workload.write_per_thread[rep],
+        workload.static_socket,
+        n_per_node,
+    )
+    # (C, s, s): one class-c thread's unit demand on node k toward bank j
+    read_unit = node_rates[None, :, None] * workload.read_bpi[rep][:, None, None] * read_mix
+    write_unit = node_rates[None, :, None] * workload.write_bpi[rep][:, None, None] * write_mix
+
+    usage, caps = _group_resource_tensor(machine, read_unit, write_unit, caps)
+    mult = _group_multiplicities(thread_classes, n, n_per_node)  # (C, s)
+    mult_f = mult.astype(usage.dtype)
+    iterations = min(usage.shape[0], usage.shape[1]) + 1
+    x = _progressive_fill_grouped(usage, mult_f.reshape(C * s), caps, iterations)
+    xg = x.reshape(C, s)
+
+    weight = mult_f * xg  # (C, s): threads x shared group rate
+    read_flows = jnp.einsum("ck,ckj->kj", weight, read_unit) * elapsed
+    write_flows = jnp.einsum("ck,ckj->kj", weight, write_unit) * elapsed
+    instructions = (weight * node_rates[None, :]).sum(0) * elapsed
+
+    node_of = _thread_nodes(n_per_node, n)
+    class_of = np.searchsorted(starts, np.arange(n), side="right") - 1  # static
+    rates = xg[class_of, node_of]
+
+    return _finalize_result(
+        rates, read_flows, write_flows, instructions, n_per_node,
+        elapsed, noise_std, background_bw, key, s,
     )
 
 
@@ -369,9 +677,11 @@ def profile_pair(
     noise_std: float = 0.0,
     background_bw: float = 0.0,
     key: Array | None = None,
+    thread_classes: tuple[int, ...] | None = None,
 ) -> tuple[CounterSample, CounterSample]:
     """The paper's 2-run profiling protocol (§5.1): one symmetric and one
-    asymmetric placement of the same thread count."""
+    asymmetric placement of the same thread count.  ``thread_classes``
+    keeps traced callers (the batched fit) on the grouped solver."""
     if key is None:
         key = jax.random.PRNGKey(0)
     k_sym, k_asym = jax.random.split(key)
@@ -382,6 +692,7 @@ def profile_pair(
         noise_std=noise_std,
         background_bw=background_bw,
         key=k_sym,
+        thread_classes=thread_classes,
     )
     asym = simulate_counters(
         machine,
@@ -390,5 +701,6 @@ def profile_pair(
         noise_std=noise_std,
         background_bw=background_bw,
         key=k_asym,
+        thread_classes=thread_classes,
     )
     return sym, asym

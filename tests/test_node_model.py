@@ -1,12 +1,14 @@
 """Node-graph machine model: sockets decoupled from NUMA nodes.
 
 * **Behavior preservation**: homogeneous ``nodes_per_socket=1`` machines
-  must reproduce the pre-refactor per-socket model bit for bit — proven
-  two ways: against a verbatim replica of the pre-refactor ``simulate``
-  (platform-independent), and against byte digests of ``simulate`` and
-  ``evaluate_batch`` outputs recorded from the pre-refactor code on both
-  2-socket paper presets (golden; re-record if the pinned jax/XLA version
-  ever changes).
+  must reproduce the pre-refactor per-socket model — proven three ways:
+  ``simulate_reference`` (the per-thread path) stays *bit for bit* equal
+  to a verbatim replica of the pre-refactor ``simulate``
+  (platform-independent) and to byte digests recorded from the
+  pre-refactor code on both 2-socket paper presets (golden; re-record if
+  the pinned jax/XLA version ever changes), while the group-collapsed
+  ``simulate`` hot path matches the replica to <= 1e-6 (its max-min
+  arithmetic reorders float sums across a group's identical rows).
 * **Sub-NUMA clustering**: the SNC-2 preset (4 half-socket nodes, shared
   QPI ports) runs end to end through ``evaluate_batch`` and the advisor.
 * **Heterogeneous core rates**: the throttled preset issues, demands and
@@ -50,6 +52,7 @@ from repro.core.numa.simulator import (
     _resource_tensor,
     _thread_nodes,
     asymmetric_placement,
+    simulate_reference,
     symmetric_placement,
 )
 
@@ -141,10 +144,17 @@ def test_simulate_is_bitwise_legacy_for_single_node_sockets(machine, n_per):
         {},
         {"noise_std": 0.02, "background_bw": 1e8, "key": jax.random.PRNGKey(9)},
     ):
-        new = simulate(machine, wl, jnp.asarray(n_per, jnp.int32), **kwargs)
+        ref = simulate_reference(machine, wl, jnp.asarray(n_per, jnp.int32), **kwargs)
         old = _legacy_simulate(machine, wl, jnp.asarray(n_per, jnp.int32), **kwargs)
-        for got, want in zip(jax.tree.leaves(new), jax.tree.leaves(old)):
+        for got, want in zip(jax.tree.leaves(ref), jax.tree.leaves(old)):
             np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        # the grouped hot path reorders float sums across identical rows:
+        # equal to the per-thread model within solver tolerance, not bits
+        new = simulate(machine, wl, jnp.asarray(n_per, jnp.int32), **kwargs)
+        for got, want in zip(jax.tree.leaves(new), jax.tree.leaves(old)):
+            np.testing.assert_allclose(
+                np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6
+            )
 
 
 def _digest(*arrays) -> str:
@@ -154,14 +164,18 @@ def _digest(*arrays) -> str:
     return d.hexdigest()
 
 
-# Byte digests of simulate / evaluate_batch outputs recorded from the
-# pre-refactor per-socket implementation (commit 43408e4) under the
-# pinned jax version — CG @ 8 threads on both 2-socket paper presets.
+# Byte digests of simulate outputs recorded from the pre-refactor
+# per-socket implementation (commit 43408e4) under the pinned jax version
+# — CG @ 8 threads on both 2-socket paper presets.  ``simulate_reference``
+# (the per-thread path) must still reproduce them byte for byte.  The
+# ``batch`` digests pin the group-collapsed ``evaluate_batch`` pipeline
+# instead (re-recorded at the grouped-solver PR; its equivalence with the
+# per-thread reference is covered to 1e-6 by tests/test_grouped_solver.py).
 _PRE_REFACTOR_DIGESTS = {
-    ("E5-2630v3-8c", "batch"): "3dce606eced07cb36c6e2f1905f2087d",
+    ("E5-2630v3-8c", "batch"): "b22266a0a2722e08689df174ddf6aa46",
     ("E5-2630v3-8c", "sim"): "26bc2013541a68d19b0f83cb220ab9d4",
     ("E5-2630v3-8c", "simnoise"): "929f752f4b02f8aed18b9e281494e44b",
-    ("E5-2699v3-18c", "batch"): "b4c3de86bd8f5f5537a203345ec820f3",
+    ("E5-2699v3-18c", "batch"): "7ab2752d48c14af4f96456f3e27a497d",
     ("E5-2699v3-18c", "sim"): "d129b2fbbb31f4fe72f22f3a7e6ce368",
     ("E5-2699v3-18c", "simnoise"): "d0f57816e463d1bb8fbf00396debe775",
 }
@@ -169,8 +183,9 @@ _PRE_REFACTOR_DIGESTS = {
 
 @pytest.mark.parametrize("machine", [E5_2630_V3, E5_2699_V3])
 def test_golden_digests_match_pre_refactor_model(machine):
-    """simulate AND the whole jitted evaluate_batch pipeline reproduce the
-    pre-refactor outputs byte for byte on both 2-socket presets."""
+    """simulate_reference reproduces the pre-refactor outputs byte for
+    byte on both 2-socket presets; the jitted grouped evaluate_batch
+    pipeline reproduces its own recorded digests (change detector)."""
     wl = benchmark_workload("CG", 8)
     batch = evaluate_batch(
         machine,
@@ -185,7 +200,7 @@ def test_golden_digests_match_pre_refactor_model(machine):
         )
         == _PRE_REFACTOR_DIGESTS[(machine.name, "batch")]
     )
-    res = simulate(machine, wl, jnp.asarray([5, 3], jnp.int32))
+    res = simulate_reference(machine, wl, jnp.asarray([5, 3], jnp.int32))
     assert (
         _digest(
             res.rates,
@@ -199,7 +214,7 @@ def test_golden_digests_match_pre_refactor_model(machine):
         )
         == _PRE_REFACTOR_DIGESTS[(machine.name, "sim")]
     )
-    resn = simulate(
+    resn = simulate_reference(
         machine,
         wl,
         jnp.asarray([2, 6], jnp.int32),

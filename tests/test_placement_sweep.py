@@ -82,6 +82,35 @@ def test_enumerate_rejects_impossible_thread_counts():
         enumerate_placements(E5_2630_V3, 17)
 
 
+def test_vectorized_unranking_matches_bigint_loop_and_brute_force():
+    """The numpy-vectorized unranking emits the exact lexicographic
+    enumeration (checked against a brute-force product filter) and the
+    per-rank bigint fallback (same table, forced path)."""
+    from itertools import product
+
+    from repro.core.numa.evaluate import _composition_table, _unrank_compositions
+
+    s, cap, n = 4, 5, 9
+    table = _composition_table(s, cap, n)
+    total = table[s][n]
+    got = _unrank_compositions(table, range(total), s, cap, n)
+    brute = np.asarray(
+        [c for c in product(range(cap + 1), repeat=s) if sum(c) == n], np.int32
+    )
+    np.testing.assert_array_equal(got, brute)  # product() is lexicographic
+    # the bigint fallback (huge sentinel in an unused cell flips the int64
+    # guard): unrank compositions of n-1 through both paths
+    big = tuple(tuple(row) for row in table[:-1]) + (
+        tuple(table[-1][:-1]) + (2**70,),
+    )
+    total2 = table[s][n - 1]
+    ranks = [0, 1, total2 // 2, total2 - 1]
+    np.testing.assert_array_equal(
+        _unrank_compositions(big, ranks, s, cap, n - 1),
+        _unrank_compositions(table, ranks, s, cap, n - 1),
+    )
+
+
 @settings(max_examples=20, deadline=None)
 @given(
     n_threads=st.integers(1, 32),
@@ -198,6 +227,33 @@ def test_fitted_signature_cache_hits():
     # different noise is a different key
     c = fitted_signatures(machine, wl, noise_std=0.01)[0]
     assert c[0] is not a[0]
+
+
+def test_sig_cache_evicts_oldest_and_keeps_hot_keys(monkeypatch):
+    """Ordered LRU eviction: filling the cache past its high-water mark
+    drops the *oldest* entries, and a key touched mid-fill (LRU hit)
+    survives a full eviction cycle instead of being nuked with the rest."""
+    from repro.core.numa import evaluate as ev
+
+    monkeypatch.setattr(ev, "_SIG_CACHE", {})
+    monkeypatch.setattr(ev, "_SIG_CACHE_MAX", 8)
+
+    def put(i):
+        ev._SIG_CACHE[("key", i)] = i
+        ev._evict_cache_if_full()
+
+    for i in range(8):
+        put(i)
+    hot = ("key", 0)
+    for i in range(8, 15):  # 7 younger entries; touch the hot key each time
+        assert ev._cache_lookup(hot) == 0
+        put(i)
+    assert hot in ev._SIG_CACHE  # survived a full eviction cycle
+    assert len(ev._SIG_CACHE) == 8
+    # the oldest untouched keys are the ones that left
+    assert ("key", 1) not in ev._SIG_CACHE
+    assert ("key", 14) in ev._SIG_CACHE
+    assert ev._cache_lookup(("key", 1)) is None
 
 
 def test_vectorized_link_resources_match_reference_loop():

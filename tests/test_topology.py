@@ -299,8 +299,13 @@ def test_accuracy_medians_match_seed_on_2socket_presets(machine):
         wl = benchmark_workload(bench, 8)
         res = evaluate_accuracy(machine, wl, noise_std=0.02, key=jax.random.PRNGKey(3))
         med = float(np.median(np.asarray(res.errors_combined)) * 100.0)
+        # rel=1e-4 (was 1e-6): the group-collapsed solver reorders float
+        # sums across a group's identical rows, moving medians ~1e-5
+        # relative; a genuine model change moves them orders more (the
+        # grouped/per-thread equivalence itself is pinned at 1e-6 on raw
+        # rates by tests/test_grouped_solver.py)
         assert med == pytest.approx(
-            _SEED_ACCURACY_MEDIANS[(machine.name, bench)], rel=1e-6
+            _SEED_ACCURACY_MEDIANS[(machine.name, bench)], rel=1e-4
         ), bench
 
 
