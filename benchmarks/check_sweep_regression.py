@@ -19,7 +19,12 @@ remains for local use.  ``--summary`` appends a one-line
 baseline-vs-current speedup summary (for ``$GITHUB_STEP_SUMMARY``, next
 to the dashboard's error trend).
 
+Several artifacts may be passed (the placement sweep and the mesh-advisor
+benchmark each write their own JSON); their records are concatenated
+before checking, so every baseline sweep must appear in *some* artifact.
+
     PYTHONPATH=src python benchmarks/check_sweep_regression.py NEW.json \
+        [MORE.json ...] \
         [--baseline benchmarks/sweep_baseline.json] \
         [--error-tolerance 0.25] [--min-pps-ratio 0.0] \
         [--summary "$GITHUB_STEP_SUMMARY"]
@@ -98,7 +103,12 @@ def speedup_summary(new: list[dict], baseline: list[dict]) -> str:
 
 def main() -> None:
     parser = argparse.ArgumentParser(description=__doc__)
-    parser.add_argument("artifact", type=Path, help="placement_sweep --json output")
+    parser.add_argument(
+        "artifact",
+        type=Path,
+        nargs="+",
+        help="one or more benchmark --json outputs (records concatenated)",
+    )
     parser.add_argument("--baseline", type=Path, default=BASELINE)
     parser.add_argument(
         "--error-tolerance",
@@ -124,7 +134,7 @@ def main() -> None:
     )
     args = parser.parse_args()
 
-    new = json.loads(args.artifact.read_text())
+    new = [rec for path in args.artifact for rec in json.loads(path.read_text())]
     baseline = json.loads(args.baseline.read_text())
     failures = check(
         new,

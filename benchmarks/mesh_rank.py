@@ -1,0 +1,125 @@
+"""Mesh-advisor benchmark: routed-model throughput + scalar parity.
+
+The graphtop unification re-based ``rank_meshes``'s collective term on a
+routed :class:`DeviceTopology`.  This benchmark pins two things in CI,
+mirroring what ``placement_sweep.py`` pins for the NUMA advisor:
+
+* **Parity** — on a fully-connected uniform-bandwidth topology the routed
+  model must agree with the scalar ``ici_bw`` roofline: per-candidate
+  step-time error (``median_error_pct``, % of the scalar step time) and
+  top-1 agreement are recorded, and the committed baseline gates the
+  error via ``check_sweep_regression.py``.
+* **Throughput** — candidates/sec through the routed advisor
+  (``placements_per_sec``, so the sweep gate's absolute floor applies
+  unchanged).  A regression here means per-candidate routing work leaked
+  into the hot loop (incidence matrices are cached per graph and must
+  stay so).
+
+The signature is synthetic (the ``tests/test_meshsig.py`` ground-truth
+generator): grad all-reduce on data, param all-gather on data, MoE
+all-to-all on model — no compilation, so the benchmark runs in seconds.
+
+    PYTHONPATH=src python benchmarks/mesh_rank.py [--json OUT.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+N_DEVICES = 16  # keep n^2 x links incidence matrices trivially small
+REPS = 30
+
+
+def synth_profile(axes: dict, *, grad_bytes=1e9, gather_bytes=5e8, a2a_base=2e9):
+    """Ground truth: grad all-reduce on data (e=0), param all-gather on
+    data (e=0), MoE all-to-all on model scaling 1/batch (e=1)."""
+    from repro.core.meshsig.fit import MeshProfile, class_factor
+
+    b = axes.get("data", 1) * axes.get("pod", 1)
+    out = {}
+    kd, km = axes["data"], axes["model"]
+    out[("interleaved", "data")] = class_factor("interleaved", kd) * grad_bytes
+    out[("static", "data")] = class_factor("static", kd) * gather_bytes
+    out[("per_shard", "model")] = class_factor("per_shard", km) * a2a_base / b
+    return MeshProfile(
+        axis_sizes=dict(axes),
+        class_axis_bytes=out,
+        local_bytes=1e10 / b,
+        flops=1e13 / b,
+    )
+
+
+def run() -> dict:
+    from repro.core.meshsig.advisor import CHIP_V5E, rank_meshes
+    from repro.core.meshsig.device_topology import nvlink_island
+    from repro.core.meshsig.fit import fit_mesh_signature
+    from repro.launch.mesh import candidate_mesh_axes
+
+    sig = fit_mesh_signature(
+        synth_profile({"data": 8, "model": 2}),
+        synth_profile({"data": 4, "model": 4}),
+    )
+    candidates = candidate_mesh_axes(N_DEVICES)
+    topo = nvlink_island(N_DEVICES, CHIP_V5E.ici_bw)
+
+    scalar = rank_meshes(sig, candidates, chip=CHIP_V5E)
+    routed = rank_meshes(sig, candidates, chip=CHIP_V5E, topology=topo)
+
+    by_axes = lambda rs: {tuple(sorted(r.axis_sizes.items())): r for r in rs}
+    s_by, r_by = by_axes(scalar), by_axes(routed)
+    errors = sorted(
+        abs(r_by[k].step_s - s_by[k].step_s) / s_by[k].step_s * 100
+        for k in s_by
+    )
+    top1_agree = scalar[0].axis_sizes == routed[0].axis_sizes
+
+    # Throughput: steady-state routed ranking (incidence matrices cached
+    # per graph after the first pass — which already happened above).
+    t0 = time.perf_counter()
+    for _ in range(REPS):
+        rank_meshes(sig, candidates, chip=CHIP_V5E, topology=topo)
+    elapsed = time.perf_counter() - t0
+    pps = REPS * len(candidates) / elapsed
+
+    return {
+        "sweep": "mesh-advisor routed (fc16)",
+        "placements_per_sec": round(pps, 1),
+        "topology": topo.name,
+        "chip": CHIP_V5E.name,
+        "n_devices": N_DEVICES,
+        "candidates": len(candidates),
+        "median_error_pct": round(errors[len(errors) // 2], 6),
+        "max_error_pct": round(errors[-1], 6),
+        "top1_agreement": bool(top1_agree),
+        "elapsed_s": round(elapsed, 3),
+    }
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--json", type=Path, default=None, help="write records here")
+    args = parser.parse_args()
+
+    rec = run()
+    print(
+        f"{rec['sweep']}: {rec['candidates']} candidates, "
+        f"{rec['placements_per_sec']:,.0f} candidates/s, parity median "
+        f"{rec['median_error_pct']:.4f}% (max {rec['max_error_pct']:.4f}%), "
+        f"top-1 {'agrees' if rec['top1_agreement'] else 'DISAGREES'}"
+    )
+    if not rec["top1_agreement"]:
+        raise SystemExit("routed top-1 disagrees with scalar on uniform fc")
+    if args.json is not None:
+        args.json.parent.mkdir(parents=True, exist_ok=True)
+        args.json.write_text(json.dumps([rec], indent=1))
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -31,9 +31,13 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 RESULTS = Path(__file__).resolve().parent / "dryrun_results"
 
-PEAK_FLOPS = 197e12
-HBM_BW = 819e9
-ICI_BW = 50e9
+# Chip constants come from the advisor's ChipSpec presets (one source of
+# truth; these used to be duplicated literals).
+from repro.core.meshsig.advisor import CHIP_V5E  # noqa: E402
+
+PEAK_FLOPS = CHIP_V5E.peak_flops
+HBM_BW = CHIP_V5E.hbm_bw
+ICI_BW = CHIP_V5E.ici_bw
 
 SHAPE_TOKENS = {
     "train_4k": (4096, 256),

@@ -43,13 +43,16 @@ def sparkline(values: list[float]) -> str:
     return "".join(out)
 
 
-def load_history(history_dir: Path, current: Path | None = None) -> list[dict]:
+def load_history(
+    history_dir: Path, current: Path | list[Path] | None = None
+) -> list[dict]:
     """Collect sweep-record lists in run order.
 
     Each entry of ``history_dir`` (sorted by name — the workflow prefixes
     directory names with the artifact's ``created_at`` timestamp, so
-    lexicographic == chronological) contributes its JSON files; a
-    ``current`` artifact, if given, is appended last as this run's point.
+    lexicographic == chronological) contributes its JSON files; the
+    ``current`` artifact(s) — this run may write several (placement sweep
+    + mesh advisor), merged into one "current" point — are appended last.
     Returns ``[{"run": label, "records": [sweep records]}]``; unreadable
     or non-sweep JSON files are skipped (artifact history can contain
     partial uploads from failed runs)."""
@@ -71,11 +74,19 @@ def load_history(history_dir: Path, current: Path | None = None) -> list[dict]:
                     )
             if records:
                 runs.append({"run": entry.name, "records": records})
-    if current is not None and current.exists():
-        data = json.loads(current.read_text())
-        records = [r for r in data if isinstance(r, dict) and "sweep" in r]
-        if records:
-            runs.append({"run": "current", "records": records})
+    currents = (
+        [] if current is None
+        else current if isinstance(current, list)
+        else [current]
+    )
+    records = []
+    for path in currents:
+        if not path.exists():
+            continue
+        data = json.loads(path.read_text())
+        records.extend(r for r in data if isinstance(r, dict) and "sweep" in r)
+    if records:
+        runs.append({"run": "current", "records": records})
     return runs
 
 
@@ -141,8 +152,10 @@ def main() -> None:
     parser.add_argument(
         "--current",
         type=Path,
+        action="append",
         default=None,
-        help="this run's sweep artifact (appended as the newest point)",
+        help="this run's sweep artifact(s); repeatable — all records merge "
+        "into the newest point",
     )
     parser.add_argument("--output", type=Path, default=None)
     parser.add_argument(

@@ -1,0 +1,50 @@
+"""Domain-neutral routed-graph topology engine.
+
+One graph core for every interconnect this repo models: NUMA hosts
+(``repro.core.numa`` — QPI meshes, glued node controllers, sub-NUMA
+clusters) and accelerator device meshes (``repro.core.meshsig`` — ICI
+tori, NVLink islands, multi-host rings).  A :class:`LinkGraph` is a
+hashable link list with per-link capacities and statically computed
+widest-shortest-path routes; consumers derive pair→link incidence
+matrices (unit or fractional-multipath, undirected or directed) and fit
+per-link bandwidths through the :class:`LinkGroups` symmetry packing.
+
+``repro.core.numa.topology`` re-exports all of this under its historical
+names (``Topology`` is a ``LinkGraph`` subclass, so reprs, fingerprints
+and golden digests are unchanged bit-for-bit); new code should import
+from here.
+"""
+
+from repro.core.graphtop.graph import (
+    LinkGraph,
+    LinkGroups,
+    all_widest_routes,
+    from_bandwidth_matrix,
+    from_fit,
+    fully_connected,
+    glued,
+    link_groups,
+    mesh2d,
+    ring,
+    snc,
+    torus2d,
+    torus3d,
+    tree,
+)
+
+__all__ = [
+    "LinkGraph",
+    "LinkGroups",
+    "all_widest_routes",
+    "from_bandwidth_matrix",
+    "from_fit",
+    "fully_connected",
+    "glued",
+    "link_groups",
+    "mesh2d",
+    "ring",
+    "snc",
+    "torus2d",
+    "torus3d",
+    "tree",
+]

@@ -5,8 +5,41 @@ SPMD module the way the paper reads PCM — producing per-class traffic
 counters (FLOPs, HBM bytes, per-axis collective bytes, multiplied through
 loop trip counts).  ``fit`` turns two profiling *compilations* into a mesh
 bandwidth signature; ``advisor`` applies it to rank candidate meshes.
+
+``device_topology`` embeds the mesh into the shared routed-graph engine
+(:mod:`repro.core.graphtop`, the same core that routes NUMA machines) so
+collective bytes are charged per physical link instead of against one
+scalar ``ICI_BW``, and ``calibrate`` fits per-link ICI bandwidths from
+measured collective times the way ``numa/calibrate.py`` fits QPI links.
 """
 
+from repro.core.meshsig.advisor import (
+    CHIP_V5E,
+    CHIP_V5P,
+    ChipSpec,
+    MeshRanking,
+    rank_meshes,
+)
+from repro.core.meshsig.device_topology import (
+    DeviceTopology,
+    ici_torus2d,
+    ici_torus3d,
+    nvlink_island,
+    ring_of_islands,
+)
 from repro.core.meshsig.hlo_counters import HloAnalysis, analyze_hlo
 
-__all__ = ["HloAnalysis", "analyze_hlo"]
+__all__ = [
+    "CHIP_V5E",
+    "CHIP_V5P",
+    "ChipSpec",
+    "DeviceTopology",
+    "HloAnalysis",
+    "MeshRanking",
+    "analyze_hlo",
+    "ici_torus2d",
+    "ici_torus3d",
+    "nvlink_island",
+    "rank_meshes",
+    "ring_of_islands",
+]

@@ -21,12 +21,28 @@ import jax.numpy as jnp
 import numpy as np
 from jax import Array
 
+from repro.core.meshsig.device_topology import DeviceTopology
 from repro.core.meshsig.fit import MeshSignature
 
-# TPU v5e-class chip constants (per chip)
-PEAK_FLOPS = 197e12  # bf16
-HBM_BW = 819e9  # bytes/s
-ICI_BW = 50e9  # bytes/s per link
+
+@dataclass(frozen=True)
+class ChipSpec:
+    """Per-chip roofline constants.  Callers pick a preset (or build their
+    own) instead of monkeypatching module globals."""
+
+    name: str
+    peak_flops: float  # bf16 FLOP/s
+    hbm_bw: float  # bytes/s
+    ici_bw: float  # bytes/s per ICI link (the scalar-model fallback)
+
+
+CHIP_V5E = ChipSpec(name="v5e", peak_flops=197e12, hbm_bw=819e9, ici_bw=50e9)
+CHIP_V5P = ChipSpec(name="v5p", peak_flops=459e12, hbm_bw=2.765e12, ici_bw=100e9)
+
+# Back-compat module aliases (historically monkeypatched; prefer ChipSpec)
+PEAK_FLOPS = CHIP_V5E.peak_flops
+HBM_BW = CHIP_V5E.hbm_bw
+ICI_BW = CHIP_V5E.ici_bw
 
 
 @dataclass
@@ -56,18 +72,36 @@ def rank_meshes(
     sig: MeshSignature,
     candidates: list[dict[str, int]],
     *,
-    peak_flops: float = PEAK_FLOPS,
-    hbm_bw: float = HBM_BW,
-    ici_bw: float = ICI_BW,
+    chip: ChipSpec = CHIP_V5E,
+    topology: DeviceTopology | None = None,
+    peak_flops: float | None = None,
+    hbm_bw: float | None = None,
+    ici_bw: float | None = None,
 ) -> list[MeshRanking]:
     """Evaluate every candidate mesh; returns rankings sorted by predicted
-    step time (best first)."""
+    step time (best first).
+
+    With a :class:`DeviceTopology` the collective term routes every axis
+    ring over the physical link graph (per-directed-link charging; a
+    candidate's dict order picks the row-major device embedding), so two
+    candidates with identical axis sizes can rank differently by how they
+    lay onto the fabric.  Without one, each axis's bytes are divided by
+    the chip's scalar ``ici_bw`` — the two agree exactly on a
+    fully-connected uniform-bandwidth topology.  The explicit
+    ``peak_flops`` / ``hbm_bw`` / ``ici_bw`` keywords override the chip's
+    values (back-compat with the old module-global interface)."""
+    peak_flops = chip.peak_flops if peak_flops is None else peak_flops
+    hbm_bw = chip.hbm_bw if hbm_bw is None else hbm_bw
+    ici_bw = chip.ici_bw if ici_bw is None else ici_bw
     out = []
     for axes in candidates:
         b = axes.get("data", 1) * axes.get("pod", 1)
         flops = sig.flops0 * sig.batch_shards0 / b  # per-device compute
         per_axis_bytes = sig.predict_axis_bytes(axes)
-        per_axis_s = {a: v / ici_bw for a, v in per_axis_bytes.items()}
+        if topology is None:
+            per_axis_s = {a: v / ici_bw for a, v in per_axis_bytes.items()}
+        else:
+            per_axis_s = topology.per_axis_times(axes, per_axis_bytes)
         out.append(
             MeshRanking(
                 axis_sizes=axes,

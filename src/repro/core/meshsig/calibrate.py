@@ -1,0 +1,271 @@
+"""ICI link-bandwidth calibration — ``numa/calibrate.py``'s inverse
+problem, mesh domain.
+
+A :class:`~repro.core.meshsig.device_topology.DeviceTopology` gives the
+advisor a routed forward model ``t = max_l bytes_l / bw_l`` (most-loaded
+directed link).  This module recovers the per-link bandwidths from
+measured collective times, reusing the NUMA calibrator's recipe on the
+shared graph engine:
+
+1. **Probe design** (:func:`probe_suite`) — one collective-permute per
+   directed link between adjacent devices (a 1-hop route charges exactly
+   that link, so its time *is* ``bytes / bw``: the mesh analogue of the
+   per-pair static probes), plus ring probes over whole axis groups that
+   exercise the fabric the way real steps do (multi-link max; these make
+   the refinement stage sensitive to links the pair probes under-drive in
+   a noisy trace).
+2. **Closed-form seeding** (:func:`seed_link_bw`) — every sample lower-
+   bounds each charged link's capacity by ``bytes_l / t``; the permute
+   probes make the bound an equality, so on clean data the seed alone
+   round-trips.
+3. **AdamW refinement in log space** (:func:`fit_device_topology`) — the
+   :class:`~repro.core.graphtop.LinkGroups` packing ties symmetric links
+   (all row links of a torus are one hardware class), and a jitted
+   ``lax.scan`` of ``value_and_grad`` steps minimizes squared relative
+   time error through the (subdifferentiable) max — the same
+   ``repro.optim.adamw`` stage ``numa/calibrate._fit_jit`` runs over the
+   NUMA simulator.
+
+The fitted graph is rebuilt with :func:`repro.core.graphtop.from_fit`
+(routes held static — only capacities are free parameters), exactly the
+contract the NUMA side fits under.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import Array
+
+from repro.core.graphtop import LinkGroups, from_fit, link_groups
+from repro.core.meshsig.device_topology import DeviceTopology
+from repro.optim import adamw
+
+_EPS = 1e-9
+
+
+class CollectiveSamples(NamedTuple):
+    """A calibration sweep: ``P`` measured collective runs.
+
+    ``charges[p]`` is the known per-directed-link byte vector of run ``p``
+    (slot ``2l`` = link ``l`` low->high, ``2l + 1`` reverse — computed
+    from the run's collective schedule by
+    :meth:`DeviceTopology.link_loads`, NOT measured); ``times[p]`` is the
+    measured wall time of the run's collective phase."""
+
+    charges: Array  # (P, 2 * n_links) float32
+    times: Array  # (P,) float32 seconds
+
+    @property
+    def n_samples(self) -> int:
+        return int(self.charges.shape[0])
+
+
+class MeshCalibrationResult(NamedTuple):
+    topology: DeviceTopology  # fitted (concrete, validated graph)
+    link_bw: np.ndarray  # (n_links,) fitted bytes/s
+    groups: LinkGroups
+    loss_history: np.ndarray  # (steps,)
+    seed_loss: float
+    final_loss: float
+
+
+# ---------------------------------------------------------------------------
+# Probe design + synthetic collection
+# ---------------------------------------------------------------------------
+
+
+def probe_suite(
+    template: DeviceTopology,
+    *,
+    probe_bytes: float = 1e9,
+    axis_sizes_list: Sequence[dict[str, int]] = (),
+) -> np.ndarray:
+    """``(P, 2L)`` charge vectors of the designed sweep.
+
+    Per-directed-link permute probes identify every link exactly; the
+    optional axis-ring probes (one per candidate in ``axis_sizes_list``,
+    charging ``probe_bytes`` per device on every axis) add realistic
+    multi-link samples."""
+    L = template.graph.n_links
+    rows: list[np.ndarray] = []
+    for slot in range(2 * L):
+        v = np.zeros((2 * L,), np.float64)
+        v[slot] = probe_bytes
+        rows.append(v)
+    for axes in axis_sizes_list:
+        rows.append(
+            template.link_loads(axes, {a: probe_bytes for a in axes})
+        )
+    return np.stack(rows)
+
+
+def collect_samples(
+    truth: DeviceTopology,
+    charges: np.ndarray,
+    *,
+    noise_std: float = 0.0,
+    key: Array | None = None,
+) -> CollectiveSamples:
+    """Run a charge sweep through the forward model of a ground-truth
+    topology (the synthetic round-trip path; real traces package measured
+    times with the same schedule-derived charges instead)."""
+    charges = np.asarray(charges, np.float64)
+    slot_bw = np.repeat(np.asarray(truth.graph.link_bw, np.float64), 2)
+    times = (charges / slot_bw).max(axis=1)
+    if noise_std > 0.0:
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        noise = np.asarray(jax.random.normal(key, (len(times),)))
+        times = times * np.clip(1.0 + noise_std * noise, 0.05, None)
+    return CollectiveSamples(
+        charges=jnp.asarray(charges, jnp.float32),
+        times=jnp.asarray(times, jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Stage 1: closed-form seeding
+# ---------------------------------------------------------------------------
+
+
+def seed_link_bw(template: DeviceTopology, samples: CollectiveSamples) -> np.ndarray:
+    """``(n_links,)`` seeds: ``t >= bytes_l / bw_l`` for every charged
+    link, so ``bytes_l / t`` lower-bounds ``bw_l``; the permute probes
+    make the best bound tight.  Links no sample drives are floored at the
+    template's value (nothing observed — keep the prior)."""
+    charges = np.asarray(samples.charges, np.float64)  # (P, 2L)
+    times = np.asarray(samples.times, np.float64)[:, None]
+    bounds = charges / np.maximum(times, _EPS)  # (P, 2L)
+    per_slot = bounds.max(axis=0)
+    per_link = np.maximum(per_slot[0::2], per_slot[1::2])
+    prior = np.asarray(template.graph.link_bw, np.float64)
+    return np.where(per_link > 0.0, per_link, prior)
+
+
+# ---------------------------------------------------------------------------
+# Stage 2: AdamW refinement through the max-link forward model
+# ---------------------------------------------------------------------------
+
+
+def _time_loss(groups: LinkGroups, samples: CollectiveSamples, log_bw: Array) -> Array:
+    link_bw = groups.unpack(jnp.exp(log_bw))  # (L,)
+    slot_bw = jnp.repeat(link_bw, 2)  # (2L,)
+    pred = (samples.charges / slot_bw).max(axis=1)  # (P,)
+    rel = (pred - samples.times) / jnp.maximum(samples.times, _EPS)
+    return (rel**2).mean()
+
+
+@partial(jax.jit, static_argnames=("groups", "steps", "lr"))
+def _fit_jit(groups, samples, log_bw, steps, lr):
+    schedule = adamw.cosine_schedule(
+        lr, warmup_steps=min(20, max(steps // 10, 1)), total_steps=steps
+    )
+    state = adamw.init({"log_bw": log_bw})
+
+    def step_fn(carry, _):
+        p, st = carry
+        loss, grads = jax.value_and_grad(
+            lambda q: _time_loss(groups, samples, q["log_bw"])
+        )(p)
+        new_p, new_st = adamw.update(
+            grads, st, p, lr=schedule(st.step), weight_decay=0.0
+        )
+        return (new_p, new_st), loss
+
+    (final, _), history = jax.lax.scan(
+        step_fn, ({"log_bw": log_bw}, state), None, length=steps
+    )
+    final_loss = _time_loss(groups, samples, final["log_bw"])
+    return final["log_bw"], history, final_loss
+
+
+def fit_device_topology(
+    template: DeviceTopology,
+    samples: CollectiveSamples,
+    *,
+    tie_equal_bw: bool = False,
+    groups: LinkGroups | None = None,
+    steps: int = 200,
+    lr: float = 0.05,
+    name: str | None = None,
+) -> MeshCalibrationResult:
+    """Fit per-link ICI bandwidths from a collective sweep.
+
+    ``template`` supplies structure only (link list + routes + charging
+    policy); its bandwidth values seed un-driven links but are otherwise
+    not consulted.  ``tie_equal_bw`` shares one parameter across links the
+    template marks as the same class (a torus axis, the glue links of a
+    multi-host ring) — see :func:`repro.core.graphtop.link_groups`."""
+    if samples.charges.shape[1] != 2 * template.graph.n_links:
+        raise ValueError(
+            f"samples charge {samples.charges.shape[1]} directed slots; "
+            f"template has {2 * template.graph.n_links}"
+        )
+    if groups is None:
+        groups = link_groups(template.graph, tie_equal_bw=tie_equal_bw)
+    seed = seed_link_bw(template, samples)
+    log_bw = jnp.log(jnp.asarray(groups.pack(seed), jnp.float32))
+    seed_loss = float(_time_loss(groups, samples, log_bw))
+    fitted_log, history, final_loss = _fit_jit(
+        groups, samples, log_bw, int(steps), float(lr)
+    )
+    link_bw = np.asarray(
+        groups.unpack(np.exp(np.asarray(fitted_log, np.float64)))
+    )
+    graph = from_fit(
+        template.graph, link_bw,
+        name=name or f"{template.graph.name}-fit",
+    )
+    return MeshCalibrationResult(
+        topology=DeviceTopology(graph=graph, multipath=template.multipath),
+        link_bw=link_bw,
+        groups=groups,
+        loss_history=np.asarray(history),
+        seed_loss=seed_loss,
+        final_loss=float(final_loss),
+    )
+
+
+def fit_from_synthetic(
+    truth: DeviceTopology,
+    template: DeviceTopology | None = None,
+    *,
+    probe_bytes: float = 1e9,
+    axis_sizes_list: Sequence[dict[str, int]] = (),
+    noise_std: float = 0.0,
+    key: Array | None = None,
+    **fit_kwargs,
+) -> MeshCalibrationResult:
+    """The synthetic round trip: sweep ``truth`` through the forward
+    model, then fit blind from a structure-only template (the truth's
+    graph with uniform placeholder bandwidths)."""
+    charges = probe_suite(
+        truth, probe_bytes=probe_bytes, axis_sizes_list=axis_sizes_list
+    )
+    samples = collect_samples(truth, charges, noise_std=noise_std, key=key)
+    if template is None:
+        mean_bw = float(np.mean(truth.graph.link_bw))
+        blind = from_fit(
+            truth.graph,
+            np.full((truth.graph.n_links,), mean_bw),
+            name=f"{truth.graph.name}-blind",
+        )
+        template = DeviceTopology(graph=blind, multipath=truth.multipath)
+    return fit_device_topology(template, samples, **fit_kwargs)
+
+
+def link_relative_errors(
+    fitted: DeviceTopology, reference: DeviceTopology
+) -> np.ndarray:
+    """``(n_links,)`` relative error of fitted link bandwidths against a
+    reference topology with the same link list."""
+    if fitted.graph.link_ends != reference.graph.link_ends:
+        raise ValueError("topologies disagree on the link list")
+    fit = np.asarray(fitted.graph.link_bw, np.float64)
+    ref = np.asarray(reference.graph.link_bw, np.float64)
+    return np.abs(fit - ref) / ref

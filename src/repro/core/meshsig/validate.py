@@ -22,9 +22,10 @@ from pathlib import Path
 import jax
 
 from repro.configs.base import SHAPES, get_config
-from repro.core.meshsig.advisor import rank_meshes
+from repro.core.meshsig.advisor import CHIP_V5E, ChipSpec, rank_meshes
 from repro.core.meshsig.fit import (
     MeshProfile,
+    MeshSignature,
     fit_mesh_signature,
     profile_from_analysis,
 )
@@ -42,6 +43,28 @@ FIT_MESHES = [{"data": 32, "model": 8}, {"data": 64, "model": 4}]
 VAL_MESHES = [{"data": 8, "model": 32}, {"data": 4, "model": 64}, {"data": 16, "model": 16}]
 
 
+def measured_axis_bytes(prof: MeshProfile) -> dict[str, float]:
+    """Collapse a profile's (class, axis) link bytes to per-axis totals —
+    the measured counterpart of ``sig.predict_axis_bytes``."""
+    meas = {a: 0.0 for a in prof.axis_sizes}
+    for (_, a), v in prof.class_axis_bytes.items():
+        meas[a] += v
+    return meas
+
+
+def prediction_errors(
+    sig: MeshSignature, axes: dict[str, int], meas: dict[str, float]
+) -> dict[str, float]:
+    """Per-axis |predicted - measured| as % of the run's total link
+    traffic (the paper's §6.2.2 metric).  Distinct axis sizes attribute
+    measurements exactly; a symmetric mesh only identifies the total."""
+    pred = sig.predict_axis_bytes(axes)
+    total = sum(meas.values()) or 1.0
+    if len(set(axes.values())) == len(axes):
+        return {a: abs(pred.get(a, 0.0) - meas[a]) / total * 100 for a in axes}
+    return {"total": abs(sum(pred.values()) - total) / total * 100}
+
+
 def profile_mesh(cfg, shape, axes: dict) -> tuple[MeshProfile, float]:
     from repro.launch.dryrun import lower_cell  # sets the same XLA_FLAGS
 
@@ -54,7 +77,12 @@ def profile_mesh(cfg, shape, axes: dict) -> tuple[MeshProfile, float]:
     return profile_from_analysis(analysis, axes), time.time() - t0
 
 
-def run_validation(arch: str = "llama3-8b", shape_name: str = "train_4k") -> dict:
+def run_validation(
+    arch: str = "llama3-8b",
+    shape_name: str = "train_4k",
+    *,
+    chip: ChipSpec = CHIP_V5E,
+) -> dict:
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
 
@@ -81,20 +109,8 @@ def run_validation(arch: str = "llama3-8b", shape_name: str = "train_4k") -> dic
             record["meshes"][name] = {"error": str(e)[:300]}
             continue
         pred = sig.predict_axis_bytes(axes)
-        meas = {a: 0.0 for a in axes}
-        for (cls, a), v in prof.class_axis_bytes.items():
-            meas[a] += v
-        total = sum(meas.values()) or 1.0
-        if len(set(axes.values())) == len(axes):
-            # distinct axis sizes: measured attribution is exact
-            mesh_errs = {
-                a: abs(pred.get(a, 0.0) - meas[a]) / total * 100 for a in axes
-            }
-        else:
-            # symmetric mesh: only the total is measurable unambiguously
-            mesh_errs = {
-                "total": abs(sum(pred.values()) - total) / total * 100
-            }
+        meas = measured_axis_bytes(prof)
+        mesh_errs = prediction_errors(sig, axes, meas)
         errors.extend(mesh_errs.values())
         actual_times[name] = sum(meas.values())
         record["meshes"][name] = {
@@ -109,7 +125,7 @@ def run_validation(arch: str = "llama3-8b", shape_name: str = "train_4k") -> dic
     record["max_error_pct"] = errors[-1] if errors else None
 
     # Advisor ranking vs measured total link bytes on the validation meshes
-    rankings = rank_meshes(sig, VAL_MESHES)
+    rankings = rank_meshes(sig, VAL_MESHES, chip=chip)
     record["advisor_order"] = [
         "x".join(str(v) for v in r.axis_sizes.values()) for r in rankings
     ]

@@ -9,7 +9,9 @@ ground truth, or by any ``bwsig/counters.py``-shaped counter trace from a
 real machine — recover the free parameters of a machine:
 
 * the per-link interconnect bandwidths (through the topology's
-  symmetry/structure packing, :func:`repro.core.numa.topology.link_groups`),
+  symmetry/structure packing, :func:`repro.core.graphtop.link_groups` —
+  the same packing + AdamW-in-log-space recipe
+  :mod:`repro.core.meshsig.calibrate` runs for ICI links),
 * ``hop_attenuation``, and
 * the (per-node) ``local_read_bw`` / ``local_write_bw`` tuples,
 

@@ -16,7 +16,8 @@ remote/local ratios.  The *model* never sees these constants — they only
 shape the simulated ground truth.
 
 Beyond the paper, every machine carries a :class:`Topology` — a per-link
-interconnect bandwidth matrix with static shortest-path routing — instead
+interconnect bandwidth matrix with static shortest-path routing (the
+shared :mod:`repro.core.graphtop` engine under its NUMA name) — instead
 of the single scalar ``qpi_bw`` the 2-socket formulation used.  Remote
 path capacities become per-ordered-pair, attenuated per extra hop
 (``hop_attenuation``), and interconnect capacity is enforced per *link*

@@ -21,6 +21,10 @@ the rate asymmetries between sockets that motivate the normalization step.
 The solver is a fixed-iteration ``lax.fori_loop`` and the whole function is
 ``jit``/``vmap``-able over placements, so evaluating thousands of
 placements (paper §6.2.2: 2322 data points) is a single batched call.
+Interconnect structure (link list, routes, the pair→link incidence
+matrices consumed below) comes from the machine's topology — a
+:mod:`repro.core.graphtop` link graph — and enters the trace as
+compile-time constants.
 
 Group-collapsed hot path
 ------------------------

@@ -1,31 +1,27 @@
-"""Interconnect topologies: link bandwidth matrices + static routing.
+"""NUMA interconnect topologies — the host-side face of
+:mod:`repro.core.graphtop`.
 
-The paper's machines are dual-socket boxes where "the interconnect" is a
-single QPI link, but large NUMA machines have strongly distance-dependent
-bandwidth (STREAM-style measurements show per-hop cliffs — Bergstrom,
-arXiv:1103.3225), and glued 8-socket systems route far socket pairs
-through node controllers.  A :class:`Topology` captures that structure:
+Historically this module *was* the graph engine; the machinery (hashable
+link graphs, BFS widest-shortest-path routing with deterministic
+tie-breaks, pair→link incidence matrices, the :class:`LinkGroups`
+calibration packing, and the generic builders) now lives in
+:mod:`repro.core.graphtop.graph`, shared with the accelerator-mesh
+models in :mod:`repro.core.meshsig.device_topology`.  Everything that was
+importable from here still is:
 
-* an undirected link list with per-link capacities (bytes/s), and
-* a statically computed shortest-path routing table: for every ordered
-  socket pair, the sequence of links its traffic crosses.
-
-Everything is stored as nested tuples of python scalars, so a
-``Topology`` (and the :class:`~repro.core.numa.machine.MachineSpec` that
-embeds one) stays hashable — it can be a ``jax.jit`` static argument and
-a signature-cache key even when the builder was handed numpy/JAX arrays
-for the bandwidth matrix.  The derived *arrays* (link capacities, hop
-matrix, pair→link routing incidence) are materialized lazily and cached
-per topology; inside a trace they are compile-time constants, so the
-simulator's resource slab keeps a fixed ``(n, n_links)`` shape that jit
-and vmap handle identically for any socket count.
-
-Routing is hop-count shortest path (BFS) with bandwidth-aware tie-breaks:
-among equal-hop routes the one with the largest bottleneck link bandwidth
-wins (widest-shortest path), and remaining ties fall back to the
-smallest-id predecessor in the previous BFS layer — with uniform link
-bandwidths this reduces exactly to the old smallest-predecessor rule, so
-routing tables stay reproducible across processes.
+* :class:`Topology` is a field-free subclass of
+  :class:`~repro.core.graphtop.LinkGraph`.  ``namedtuple`` reprs, ``_make``
+  and ``_replace`` all go through ``self.__class__``, so a ``Topology``
+  prints as ``Topology(...)`` exactly as before — which is what keeps
+  :meth:`~repro.core.numa.machine.MachineSpec.fingerprint` digests (they
+  hash ``repr(topology)``) and every golden pin bit-for-bit unchanged.
+* The builders below rewrap the shared implementations and preserve the
+  historical names (``fc{n}``, ``ring{n}``, ``mesh{rows}x{cols}``,
+  ``glued8s``, ``snc{s}x{n}``), link enumeration order, and routing
+  tables byte-for-byte.
+* ``LinkGroups`` / ``link_groups`` / ``from_fit`` / ``from_bandwidth_matrix``
+  re-export the shared code (``from_fit`` preserves the template's class,
+  so fitting a ``Topology`` yields a ``Topology``).
 
 A topology's nodes are NUMA *nodes*, not sockets: a sub-NUMA-clustered
 (SNC / Cluster-on-Die) part contributes ``nodes_per_socket`` nodes per
@@ -36,392 +32,61 @@ requires ``n_nodes == sockets * nodes_per_socket``.
 
 from __future__ import annotations
 
-from functools import lru_cache
-from typing import NamedTuple, Sequence
-
-import numpy as np
-
-
-class Topology(NamedTuple):
-    """An interconnect graph over ``n_nodes`` NUMA nodes with static routes.
-
-    ``link_ends[l] = (i, j)`` with ``i < j`` names the l-th undirected
-    link; ``link_bw[l]`` is its capacity in bytes/s (both directions share
-    it, like QPI).  ``routes[i * n_nodes + j]`` is the tuple of link
-    indices the ordered pair ``i -> j`` crosses (empty for ``i == j``).
-    """
-
-    name: str
-    n_nodes: int
-    link_ends: tuple[tuple[int, int], ...]
-    link_bw: tuple[float, ...]
-    routes: tuple[tuple[int, ...], ...]
-
-    @property
-    def n_links(self) -> int:
-        return len(self.link_ends)
-
-    def route(self, i: int, j: int) -> tuple[int, ...]:
-        """Link indices crossed by traffic from socket ``i`` to ``j``."""
-        return self.routes[i * self.n_nodes + j]
-
-    @property
-    def max_hops(self) -> int:
-        return max((len(r) for r in self.routes), default=0)
-
-    @property
-    def is_fully_direct(self) -> bool:
-        """True when every distinct pair is one hop (no routed traffic) —
-        the regime where the link model degenerates to the scalar-pair
-        model of the original 2-socket formulation."""
-        return self.max_hops <= 1
-
-    def hop_matrix(self) -> np.ndarray:
-        """``(n, n)`` int hop counts (0 on the diagonal)."""
-        return _hop_matrix(self)
-
-    def route_incidence(self) -> np.ndarray:
-        """``(n*n, n_links)`` float32 matrix ``R`` with ``R[i*n+j, l] = 1``
-        iff link ``l`` is on the route ``i -> j``.  Charging per-link usage
-        is then one matmul: ``flows.reshape(-1, n*n) @ R``."""
-        return _route_incidence(self, multihop_only=False)
-
-    def route_incidence_multihop(self) -> np.ndarray:
-        """Like :meth:`route_incidence` but with single-hop rows zeroed —
-        the *extra* charges routed topologies add on top of the direct
-        endpoint-pair traffic every link always carries."""
-        return _route_incidence(self, multihop_only=True)
-
-    def validate(self) -> None:
-        n = self.n_nodes
-        if len(self.routes) != n * n:
-            raise ValueError(f"routes must have {n * n} entries")
-        if len(self.link_bw) != len(self.link_ends):
-            raise ValueError("link_bw and link_ends disagree on link count")
-        if len(set(self.link_ends)) != len(self.link_ends):
-            raise ValueError("duplicate links: endpoint pairs must be unique")
-        for l, (i, j) in enumerate(self.link_ends):
-            if not (0 <= i < j < n):
-                raise ValueError(f"link {l} endpoints {(i, j)} invalid")
-            if self.link_bw[l] <= 0:
-                raise ValueError(f"link {l} has non-positive bandwidth")
-        for i in range(n):
-            for j in range(n):
-                r = self.route(i, j)
-                if i == j:
-                    if r:
-                        raise ValueError(f"self-route {i} must be empty")
-                    continue
-                if not r:
-                    raise ValueError(f"nodes {i} and {j} are disconnected")
-                at = i
-                for l in r:
-                    a, b = self.link_ends[l]
-                    if at == a:
-                        at = b
-                    elif at == b:
-                        at = a
-                    else:
-                        raise ValueError(f"route {i}->{j} breaks at link {l}")
-                if at != j:
-                    raise ValueError(f"route {i}->{j} ends at {at}")
+from repro.core.graphtop import graph as _graph
+from repro.core.graphtop.graph import (  # noqa: F401  (re-exported API)
+    LinkGraph,
+    LinkGroups,
+    _as_bw_list,
+    _shortest_routes,
+    all_widest_routes,
+    from_fit,
+    link_groups,
+)
 
 
-@lru_cache(maxsize=128)
-def _hop_matrix(topo: Topology) -> np.ndarray:
-    n = topo.n_nodes
-    hops = np.zeros((n, n), np.int32)
-    for i in range(n):
-        for j in range(n):
-            hops[i, j] = len(topo.route(i, j))
-    hops.setflags(write=False)
-    return hops
+class Topology(LinkGraph):
+    """An interconnect graph over ``n_nodes`` NUMA nodes with static
+    routes — a :class:`~repro.core.graphtop.LinkGraph` under its
+    historical NUMA name (no new fields, no new behaviour; the class
+    identity matters because machine fingerprints digest ``repr``)."""
+
+    __slots__ = ()
 
 
-@lru_cache(maxsize=128)
-def _route_incidence(topo: Topology, *, multihop_only: bool) -> np.ndarray:
-    n = topo.n_nodes
-    R = np.zeros((n * n, topo.n_links), np.float32)
-    for i in range(n):
-        for j in range(n):
-            r = topo.route(i, j)
-            if multihop_only and len(r) <= 1:
-                continue
-            for l in r:
-                R[i * n + j, l] = 1.0
-    R.setflags(write=False)
-    return R
-
-
-# ---------------------------------------------------------------------------
-# Routing
-# ---------------------------------------------------------------------------
-
-
-def _shortest_routes(
-    n: int,
-    link_ends: Sequence[tuple[int, int]],
-    link_bw: Sequence[float] | None = None,
-) -> tuple[tuple[int, ...], ...]:
-    """BFS hop-count routing for every ordered pair, with bandwidth-aware
-    tie-breaking: among equal-hop shortest paths the route with the largest
-    bottleneck link bandwidth wins (widest-shortest path).  Remaining ties
-    break deterministically toward the smallest-id predecessor in the
-    previous BFS layer, then the smallest link id — with uniform link
-    bandwidths (or ``link_bw=None``) this is exactly the old
-    smallest-predecessor rule, so routing tables are reproducible across
-    processes and unchanged for unweighted topologies."""
-    widths = (
-        [float("inf")] * len(link_ends) if link_bw is None else [float(b) for b in link_bw]
+def _rewrap(g: LinkGraph, *, name: str | None = None) -> Topology:
+    topo = Topology(
+        name=g.name if name is None else name,
+        n_nodes=g.n_nodes,
+        link_ends=g.link_ends,
+        link_bw=g.link_bw,
+        routes=g.routes,
     )
-    adj: list[list[tuple[int, int]]] = [[] for _ in range(n)]  # node -> (nbr, link)
-    for l, (i, j) in enumerate(link_ends):
-        adj[i].append((j, l))
-        adj[j].append((i, l))
-    for nbrs in adj:
-        nbrs.sort()
-
-    routes: list[tuple[int, ...]] = []
-    for src in range(n):
-        dist = {src: 0}
-        order: list[int] = []  # nodes in (layer, id) order — DP dependencies first
-        frontier = [src]
-        while frontier:
-            nxt: list[int] = []
-            for u in frontier:
-                for v, _ in adj[u]:
-                    if v not in dist:
-                        dist[v] = dist[u] + 1
-                        nxt.append(v)
-            nxt = sorted(set(nxt))
-            order.extend(nxt)
-            frontier = nxt
-        # Widest-path DP over the BFS layering: a node's route width is the
-        # best min(predecessor width, entering link bandwidth) over the
-        # previous layer, ties preferring (smallest pred id, smallest link).
-        width = {src: float("inf")}
-        prev: dict[int, tuple[int, int]] = {}  # node -> (prev node, link)
-        for v in order:
-            best: tuple[float, int, int] | None = None
-            for u, l in adj[v]:
-                if dist.get(u) == dist[v] - 1:
-                    key = (-min(width[u], widths[l]), u, l)
-                    if best is None or key < best:
-                        best = key
-            assert best is not None  # v was discovered from the previous layer
-            width[v] = -best[0]
-            prev[v] = (best[1], best[2])
-        for dst in range(n):
-            if dst == src:
-                routes.append(())
-                continue
-            if dst not in dist:
-                raise ValueError(f"node {dst} unreachable from {src}")
-            path: list[int] = []
-            at = dst
-            while at != src:
-                at, l = prev[at]
-                path.append(l)
-            routes.append(tuple(reversed(path)))
-    return tuple(routes)
+    return topo
 
 
-def _as_bw_list(link_bw, n_links: int, what: str) -> list[float]:
-    """Canonicalize a scalar / sequence / array of link bandwidths to a
-    plain list of python floats (array-valued input stays hashable)."""
-    arr = np.asarray(link_bw, np.float64)
-    if arr.ndim == 0:
-        return [float(arr)] * n_links
-    flat = [float(v) for v in arr.reshape(-1)]
-    if len(flat) != n_links:
-        raise ValueError(f"{what}: expected {n_links} bandwidths, got {len(flat)}")
-    return flat
-
-
-def from_bandwidth_matrix(name: str, bw: np.ndarray) -> Topology:
+def from_bandwidth_matrix(name: str, bw) -> Topology:
     """Build a topology from a symmetric ``(n, n)`` link-bandwidth matrix
-    (0 = no link) — the natural form for measured machines.  Accepts any
-    array-like; values are canonicalized to python floats."""
-    bw = np.asarray(bw, np.float64)
-    if bw.ndim != 2 or bw.shape[0] != bw.shape[1]:
-        raise ValueError(f"need a square matrix, got shape {bw.shape}")
-    if not np.allclose(bw, bw.T):
-        raise ValueError("link bandwidth matrix must be symmetric")
-    if (bw < 0).any():
-        raise ValueError("link bandwidths must be >= 0 (0 = no link)")
-    n = bw.shape[0]
-    ends = [(i, j) for i in range(n) for j in range(i + 1, n) if bw[i, j] > 0]
-    bws = [float(bw[i, j]) for i, j in ends]
-    topo = Topology(
-        name=name,
-        n_nodes=n,
-        link_ends=tuple(ends),
-        link_bw=tuple(bws),
-        routes=_shortest_routes(n, ends, bws),
-    )
-    topo.validate()
-    return topo
-
-
-# ---------------------------------------------------------------------------
-# Calibration support: parameter <-> link-matrix packing and fitted rebuilds
-# ---------------------------------------------------------------------------
-
-
-class LinkGroups(NamedTuple):
-    """Parameter↔matrix packing for fitting link bandwidths.
-
-    ``groups`` partitions a topology's link ids into tied classes: every
-    link in a group shares one free parameter (the symmetry/structure mask
-    of the inverse problem — e.g. a glued 8-socket machine's 12 QPI links
-    are one hardware part, its 4 node-controller links another).  The
-    untied parameterization is ``n_links`` singleton groups.  ``pack``
-    reduces per-link values to the free-parameter vector; ``unpack``
-    scatters a parameter vector back to per-link order.  Both work on
-    numpy and traced JAX arrays (``unpack`` is a pure gather), so the
-    packing layer sits inside a jitted objective.
-    """
-
-    groups: tuple[tuple[int, ...], ...]
-
-    @property
-    def n_params(self) -> int:
-        return len(self.groups)
-
-    @property
-    def n_links(self) -> int:
-        return sum(len(g) for g in self.groups)
-
-    def link_index(self) -> np.ndarray:
-        """``(n_links,)`` free-parameter id of every link."""
-        idx = np.zeros((self.n_links,), np.int32)
-        for p, group in enumerate(self.groups):
-            for l in group:
-                idx[l] = p
-        return idx
-
-    def pack(self, link_bw) -> np.ndarray:
-        """Per-link values -> ``(n_params,)`` group means."""
-        bw = np.asarray(link_bw, np.float64)
-        return np.array([bw[list(g)].mean() for g in self.groups])
-
-    def unpack(self, params):
-        """``(n_params,)`` free parameters -> per-link values (a gather:
-        differentiable, vmappable)."""
-        return params[self.link_index()]
-
-    def validate(self) -> None:
-        seen = sorted(l for g in self.groups for l in g)
-        if seen != list(range(len(seen))):
-            raise ValueError("groups must partition the link ids exactly")
-        if any(not g for g in self.groups):
-            raise ValueError("empty link group")
-
-
-def link_groups(topo: Topology, *, tie_equal_bw: bool = False) -> LinkGroups:
-    """The natural parameterization of a topology's link bandwidths.
-
-    With ``tie_equal_bw`` links whose *template* bandwidths are equal share
-    one parameter (structural knowledge: same physical link class);
-    otherwise every link is free.  Fitting stays well-posed either way —
-    ties just let a link that never saturates in the sample set inherit
-    its class's recovered capacity."""
-    if not tie_equal_bw:
-        groups = tuple((l,) for l in range(topo.n_links))
-    else:
-        by_bw: dict[float, list[int]] = {}
-        for l, bw in enumerate(topo.link_bw):
-            by_bw.setdefault(float(bw), []).append(l)
-        groups = tuple(tuple(ls) for _, ls in sorted(by_bw.items()))
-    out = LinkGroups(groups=groups)
-    out.validate()
-    return out
-
-
-def from_fit(template: Topology, link_bw, *, name: str | None = None) -> Topology:
-    """Rebuild a topology from fitted per-link bandwidths, holding the
-    template's link list AND routing tables static — the contract of the
-    calibration inverse problem (§ the forward model's routes are
-    compile-time structure; only capacities are free parameters).  Values
-    are canonicalized to python floats so the result stays hashable."""
-    bws = _as_bw_list(link_bw, template.n_links, "from_fit")
-    topo = Topology(
-        name=template.name if name is None else name,
-        n_nodes=template.n_nodes,
-        link_ends=template.link_ends,
-        link_bw=tuple(bws),
-        routes=template.routes,
-    )
-    topo.validate()
-    return topo
-
-
-# ---------------------------------------------------------------------------
-# Builders
-# ---------------------------------------------------------------------------
+    (0 = no link) — the natural form for measured machines."""
+    return _rewrap(_graph.from_bandwidth_matrix(name, bw))
 
 
 def fully_connected(n: int, link_bw) -> Topology:
     """Every socket pair directly linked (the 2-socket machines and fully
     QPI-meshed quad Haswell-EX).  Links enumerate in upper-triangle order,
     matching the scalar-pair model's resource layout exactly."""
-    ends = [(i, j) for i in range(n) for j in range(i + 1, n)]
-    bws = _as_bw_list(link_bw, len(ends), "fully_connected")
-    topo = Topology(
-        name=f"fc{n}",
-        n_nodes=n,
-        link_ends=tuple(ends),
-        link_bw=tuple(bws),
-        routes=_shortest_routes(n, ends, bws),
-    )
-    topo.validate()
-    return topo
+    return _rewrap(_graph.fully_connected(n, link_bw))
 
 
 def ring(n: int, link_bw) -> Topology:
     """Sockets on a bidirectional ring — the worst-case hop spread
     (diameter ``n // 2``)."""
-    if n < 2:
-        raise ValueError("ring needs >= 2 nodes")
-    ends = sorted(tuple(sorted((i, (i + 1) % n))) for i in range(n))
-    ends = list(dict.fromkeys(ends))  # n == 2: one link, not two
-    bws = _as_bw_list(link_bw, len(ends), "ring")
-    topo = Topology(
-        name=f"ring{n}",
-        n_nodes=n,
-        link_ends=tuple(ends),
-        link_bw=tuple(bws),
-        routes=_shortest_routes(n, ends, bws),
-    )
-    topo.validate()
-    return topo
+    return _rewrap(_graph.ring(n, link_bw))
 
 
 def mesh2d(rows: int, cols: int, link_bw) -> Topology:
     """Sockets on a ``rows x cols`` grid with nearest-neighbour links
     (SGI/HPE hypercube-ish blades flattened to 2D)."""
-    n = rows * cols
-    if n < 2:
-        raise ValueError("mesh2d needs >= 2 nodes")
-    ends = []
-    for r in range(rows):
-        for c in range(cols):
-            u = r * cols + c
-            if c + 1 < cols:
-                ends.append((u, u + 1))
-            if r + 1 < rows:
-                ends.append((u, u + cols))
-    ends.sort()
-    bws = _as_bw_list(link_bw, len(ends), "mesh2d")
-    topo = Topology(
-        name=f"mesh{rows}x{cols}",
-        n_nodes=n,
-        link_ends=tuple(ends),
-        link_bw=tuple(bws),
-        routes=_shortest_routes(n, ends, bws),
-    )
-    topo.validate()
-    return topo
+    return _rewrap(_graph.mesh2d(rows, cols, link_bw))
 
 
 def glued_8s(qpi_bw: float, nc_bw: float) -> Topology:
@@ -430,29 +95,9 @@ def glued_8s(qpi_bw: float, nc_bw: float) -> Topology:
     twin ``i + 4`` over a node-controller link.  Cross-quad non-twin pairs
     route over 2 hops (one QPI + one controller link), so far traffic
     charges both — the hop-count bandwidth cliff the scalar model could
-    not express."""
-    ends: list[tuple[int, int]] = []
-    bws: list[float] = []
-    for base in (0, 4):
-        for i in range(4):
-            for j in range(i + 1, 4):
-                ends.append((base + i, base + j))
-                bws.append(float(qpi_bw))
-    for i in range(4):
-        ends.append((i, i + 4))
-        bws.append(float(nc_bw))
-    order = sorted(range(len(ends)), key=lambda k: ends[k])
-    ends = [ends[k] for k in order]
-    bws = [bws[k] for k in order]
-    topo = Topology(
-        name="glued8s",
-        n_nodes=8,
-        link_ends=tuple(ends),
-        link_bw=tuple(bws),
-        routes=_shortest_routes(8, ends, bws),
-    )
-    topo.validate()
-    return topo
+    not express.  Exactly :func:`repro.core.graphtop.glued` with two
+    islands of four, under the historical ``glued8s`` name."""
+    return _rewrap(_graph.glued(2, 4, qpi_bw, nc_bw), name="glued8s")
 
 
 def snc(
@@ -466,32 +111,4 @@ def snc(
     of a socket's nodes *share* the one QPI port — the SNC reality a
     per-socket machine model cannot express.  With ``nodes_per_socket=1``
     this degenerates to :func:`fully_connected`."""
-    if sockets < 2:
-        raise ValueError("snc needs >= 2 sockets")
-    if nodes_per_socket < 1:
-        raise ValueError("snc needs >= 1 node per socket")
-    ends: list[tuple[int, int]] = []
-    bws: list[float] = []
-    for s in range(sockets):
-        base = s * nodes_per_socket
-        for i in range(nodes_per_socket):
-            for j in range(i + 1, nodes_per_socket):
-                ends.append((base + i, base + j))
-                bws.append(float(intra_bw))
-    for a in range(sockets):
-        for b in range(a + 1, sockets):
-            ends.append((a * nodes_per_socket, b * nodes_per_socket))
-            bws.append(float(qpi_bw))
-    order = sorted(range(len(ends)), key=lambda k: ends[k])
-    ends = [ends[k] for k in order]
-    bws = [bws[k] for k in order]
-    n = sockets * nodes_per_socket
-    topo = Topology(
-        name=f"snc{sockets}x{nodes_per_socket}",
-        n_nodes=n,
-        link_ends=tuple(ends),
-        link_bw=tuple(bws),
-        routes=_shortest_routes(n, ends, bws),
-    )
-    topo.validate()
-    return topo
+    return _rewrap(_graph.snc(sockets, nodes_per_socket, qpi_bw=qpi_bw, intra_bw=intra_bw))

@@ -30,6 +30,60 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def candidate_mesh_axes(
+    n_devices: int,
+    *,
+    axis_names: tuple[str, str] = ("data", "model"),
+    min_model: int = 1,
+    max_model: int | None = None,
+) -> list[dict[str, int]]:
+    """Every 2-axis factorization of ``n_devices`` (model axis between
+    ``min_model`` and ``max_model``), in advisor candidate form — the
+    enumeration ``advise_mesh_shape`` and the mesh-rank benchmark score."""
+    if n_devices < 1:
+        raise ValueError("need >= 1 device")
+    if max_model is None:
+        max_model = n_devices
+    outer, inner = axis_names
+    out = []
+    for model in range(min_model, max_model + 1):
+        if n_devices % model:
+            continue
+        out.append({outer: n_devices // model, inner: model})
+    if not out:
+        raise ValueError(
+            f"no factorization of {n_devices} devices with model axis in "
+            f"[{min_model}, {max_model}]"
+        )
+    return out
+
+
+def advise_mesh_shape(
+    sig,
+    n_devices: int,
+    *,
+    chip=None,
+    topology=None,
+    axis_names: tuple[str, str] = ("data", "model"),
+    min_model: int = 1,
+    max_model: int | None = None,
+):
+    """Rank every 2-axis mesh factorization of ``n_devices`` by predicted
+    step time through the shared advisor — scalar roofline by default, the
+    routed per-link model when a
+    :class:`~repro.core.meshsig.device_topology.DeviceTopology` is given.
+    Returns the advisor's sorted :class:`MeshRanking` list (best first)."""
+    from repro.core.meshsig.advisor import CHIP_V5E, rank_meshes
+
+    candidates = candidate_mesh_axes(
+        n_devices, axis_names=axis_names, min_model=min_model,
+        max_model=max_model,
+    )
+    return rank_meshes(
+        sig, candidates, chip=chip or CHIP_V5E, topology=topology
+    )
+
+
 def serve_params_replicated(cfg: ModelConfig) -> bool:
     """True when bf16 params / model-axis fit comfortably per chip."""
     tp = 16

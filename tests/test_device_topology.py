@@ -1,0 +1,254 @@
+"""Routed device meshes + the ICI calibration round trip.
+
+The two acceptance pins for the routed collective model live here:
+
+* **Scalar parity** — on a fully-connected uniform-bandwidth topology the
+  routed advisor equals the scalar ``ici_bw`` division exactly, so the
+  refactor cannot drift rankings on fabrics the old model already handled.
+* **Cross-island regression** — on a glued multi-host topology the routed
+  model separates two candidates with *identical axis sizes* (island-local
+  vs glue-striding embeddings) that the scalar model scores identically.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.graphtop import from_fit, ring
+from repro.core.meshsig.advisor import CHIP_V5E, rank_meshes
+from repro.core.meshsig.calibrate import (
+    fit_device_topology,
+    fit_from_synthetic,
+    link_relative_errors,
+    probe_suite,
+    collect_samples,
+)
+from repro.core.meshsig.device_topology import (
+    DeviceTopology,
+    ici_torus2d,
+    nvlink_island,
+    ring_of_islands,
+)
+from repro.core.meshsig.fit import MeshProfile, class_factor, fit_mesh_signature
+
+
+def synth_profile(axes, *, grad_bytes=1e9, gather_bytes=5e8, a2a_base=2e9):
+    """Same ground-truth generator as ``test_meshsig`` / the mesh-rank
+    benchmark: grad all-reduce + param all-gather on data, MoE all-to-all
+    on model scaling 1/batch."""
+    b = axes.get("data", 1) * axes.get("pod", 1)
+    kd, km = axes["data"], axes["model"]
+    out = {
+        ("interleaved", "data"): class_factor("interleaved", kd) * grad_bytes,
+        ("static", "data"): class_factor("static", kd) * gather_bytes,
+        ("per_shard", "model"): class_factor("per_shard", km) * a2a_base / b,
+    }
+    return MeshProfile(
+        axis_sizes=dict(axes),
+        class_axis_bytes=out,
+        local_bytes=1e10 / b,
+        flops=1e13 / b,
+    )
+
+
+def fitted_sig():
+    return fit_mesh_signature(
+        synth_profile({"data": 8, "model": 2}),
+        synth_profile({"data": 4, "model": 4}),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Embedding + charging mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_device_groups_row_major_and_order_dependent():
+    topo = nvlink_island(8)
+    g1 = topo.device_groups({"data": 2, "model": 4})
+    assert g1["model"] == [[0, 1, 2, 3], [4, 5, 6, 7]]  # minor = contiguous
+    assert g1["data"] == [[0, 4], [1, 5], [2, 6], [3, 7]]
+    g2 = topo.device_groups({"model": 4, "data": 2})
+    assert g2["model"] == [[0, 2, 4, 6], [1, 3, 5, 7]]  # now major = strided
+    assert g2["data"] == [[0, 1], [2, 3], [4, 5], [6, 7]]
+
+
+def test_device_groups_size_mismatch_raises():
+    with pytest.raises(ValueError, match="need 8 devices"):
+        nvlink_island(4).device_groups({"data": 2, "model": 4})
+
+
+def test_axis_pair_bytes_ring_successors():
+    topo = nvlink_island(4)
+    pair = topo.axis_pair_bytes({"data": 4}, "data", 3.0)
+    n = 4
+    sent = {(i, j) for i in range(n) for j in range(n) if pair[i * n + j]}
+    assert sent == {(0, 1), (1, 2), (2, 3), (3, 0)}
+    assert pair.sum() == pytest.approx(4 * 3.0)
+    # size-1 groups (and zero bytes) charge nothing
+    assert not topo.axis_pair_bytes({"data": 1, "model": 4}, "data", 3.0).any()
+    assert not topo.axis_pair_bytes({"data": 4}, "data", 0.0).any()
+
+
+def test_link_loads_one_hop_conservation():
+    topo = ici_torus2d(4, 4)
+    B = {"data": 2e9, "model": 3e9}
+    loads = topo.link_loads({"data": 4, "model": 4}, B)
+    # both axes embed as contiguous torus rings: every ring step is one
+    # hop, so total directed bytes == devices * per-device bytes per axis
+    assert loads.sum() == pytest.approx(16 * (2e9 + 3e9))
+
+
+# ---------------------------------------------------------------------------
+# Acceptance pin 1: scalar parity on fully-connected uniform fabrics
+# ---------------------------------------------------------------------------
+
+
+def test_fc_uniform_equals_scalar_model():
+    topo = nvlink_island(16, CHIP_V5E.ici_bw)
+    axes = {"data": 4, "model": 4}
+    B = {"data": 7e8, "model": 13e8}
+    routed = topo.per_axis_times(axes, B)
+    for a in axes:
+        assert routed[a] == pytest.approx(B[a] / CHIP_V5E.ici_bw, rel=1e-12)
+
+
+def test_rank_meshes_routed_scalar_parity_fc():
+    sig = fitted_sig()
+    candidates = [
+        {"data": 16, "model": 1},
+        {"data": 8, "model": 2},
+        {"data": 4, "model": 4},
+        {"data": 2, "model": 8},
+        {"data": 1, "model": 16},
+    ]
+    scalar = rank_meshes(sig, candidates)
+    routed = rank_meshes(
+        sig, candidates, topology=nvlink_island(16, CHIP_V5E.ici_bw)
+    )
+    s_by = {tuple(sorted(r.axis_sizes.items())): r for r in scalar}
+    for r in routed:
+        s = s_by[tuple(sorted(r.axis_sizes.items()))]
+        assert r.step_s == pytest.approx(s.step_s, rel=1e-9)
+        assert r.collective_s == pytest.approx(s.collective_s, rel=1e-9)
+    assert [r.axis_sizes for r in routed] == [r.axis_sizes for r in scalar]
+
+
+# ---------------------------------------------------------------------------
+# Acceptance pin 2: glued multi-host separates identical axis sizes
+# ---------------------------------------------------------------------------
+
+
+def test_cross_island_ranked_below_island_local():
+    # heavy MoE all-to-all makes the MODEL axis the one that must stay
+    # inside an island
+    sig = fit_mesh_signature(
+        synth_profile({"data": 8, "model": 2}, grad_bytes=1e8,
+                      gather_bytes=5e7, a2a_base=64e9),
+        synth_profile({"data": 4, "model": 4}, grad_bytes=1e8,
+                      gather_bytes=5e7, a2a_base=64e9),
+    )
+    topo = ring_of_islands(2, 8)
+    island_local = {"data": 2, "model": 8}  # model contiguous, inside islands
+    cross_island = {"model": 8, "data": 2}  # model strided across the glue
+    # scalar model: same sizes -> literally identical step time (the two
+    # dicts are ==, so only the embedding-aware model can tell them apart)
+    s = rank_meshes(sig, [island_local, cross_island])
+    assert s[0].step_s == pytest.approx(s[1].step_s, rel=1e-12)
+    # routed model: the glue links are ~18x thinner than NVLink, so the
+    # striding candidate funnels its heavy model ring into them
+    r = rank_meshes(sig, [island_local, cross_island], topology=topo)
+    assert list(r[0].axis_sizes) == ["data", "model"]  # island-local wins
+    assert list(r[1].axis_sizes) == ["model", "data"]
+    assert r[1].collective_s > 3 * r[0].collective_s
+
+
+def test_per_axis_times_sees_glue_bottleneck():
+    topo = ring_of_islands(2, 8)
+    B = {"data": 1e9, "model": 8e9}
+    local = topo.per_axis_times({"data": 2, "model": 8}, B)
+    strided = topo.per_axis_times({"model": 8, "data": 2}, B)
+    assert strided["model"] > 3 * local["model"]
+
+
+# ---------------------------------------------------------------------------
+# Multipath charging (satellite: off by default, splits when enabled)
+# ---------------------------------------------------------------------------
+
+
+def test_multipath_splits_ring_collective_both_ways():
+    # ring of 4 devices; the strided major axis pairs opposite corners,
+    # whose two 2-hop routes are equal-cost
+    axes = {"a": 2, "b": 2}
+    B = {"a": 4e9, "b": 0.0}
+    single = DeviceTopology(graph=ring(4, 10e9))
+    multi = DeviceTopology(graph=ring(4, 10e9), multipath=True)
+    l1 = single.link_loads(axes, B)
+    l2 = multi.link_loads(axes, B)
+    assert np.count_nonzero(l1) < 8  # single path leaves slots idle
+    assert np.count_nonzero(l2) == 8  # every direction carries traffic
+    assert l1.sum() == pytest.approx(l2.sum())  # same total byte-hops
+    # splitting halves the most-loaded link, so the axis time halves
+    t1 = single.per_axis_times(axes, B)["a"]
+    t2 = multi.per_axis_times(axes, B)["a"]
+    assert t2 == pytest.approx(t1 / 2)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance pin 3: ICI calibration round trip within 5%
+# ---------------------------------------------------------------------------
+
+
+def perturbed_torus(rows=4, cols=4, base=50e9, spread=0.3, seed=0):
+    t = ici_torus2d(rows, cols, base)
+    rng = np.random.default_rng(seed)
+    bw = base * (1 + spread * rng.uniform(-1, 1, t.graph.n_links))
+    return DeviceTopology(graph=from_fit(t.graph, bw), multipath=False)
+
+
+def test_calibration_roundtrip_synthetic_torus():
+    truth = perturbed_torus()
+    res = fit_from_synthetic(
+        truth, axis_sizes_list=[{"data": 4, "model": 4}, {"data": 2, "model": 8}]
+    )
+    errs = link_relative_errors(res.topology, truth)
+    assert errs.max() < 0.05, errs.max()
+    assert res.final_loss < 1e-3
+    assert res.topology.graph.routes == truth.graph.routes  # structure held
+
+
+def test_calibration_roundtrip_with_noise():
+    truth = perturbed_torus(seed=3)
+    import jax
+
+    res = fit_from_synthetic(
+        truth,
+        axis_sizes_list=[{"data": 4, "model": 4}],
+        noise_std=0.01,
+        key=jax.random.PRNGKey(7),
+    )
+    assert link_relative_errors(res.topology, truth).max() < 0.05
+
+
+def test_calibration_tie_equal_bw_groups_classes():
+    # glued ring: the island links are one hardware class, the glue links
+    # another.  The template encodes the class partition via placeholder
+    # bandwidths (tie_equal_bw ties links with equal TEMPLATE values); the
+    # fit then recovers one shared parameter per class.
+    truth = ring_of_islands(2, 4, island_bw=400e9, host_bw=20e9)
+    placeholder = [
+        100e9 if (i < 4) == (j < 4) else 1e9  # island-internal vs glue
+        for i, j in truth.graph.link_ends
+    ]
+    template = DeviceTopology(graph=from_fit(truth.graph, placeholder))
+    res = fit_from_synthetic(truth, template, tie_equal_bw=True)
+    assert res.groups.n_params == 2
+    assert link_relative_errors(res.topology, truth).max() < 0.05
+
+
+def test_fit_rejects_mismatched_charge_width():
+    truth = perturbed_torus()
+    charges = probe_suite(truth)
+    samples = collect_samples(truth, charges)
+    wrong = nvlink_island(4)
+    with pytest.raises(ValueError, match="directed slots"):
+        fit_device_topology(wrong, samples)

@@ -1,0 +1,195 @@
+"""The shared routed-graph engine (``repro.core.graphtop``) and the
+bit-for-bit contract of its NUMA wrapper (``repro.core.numa.topology``).
+
+The wrapper pins are the load-bearing ones: machine fingerprints digest
+``repr(topology)``, so ``Topology`` must remain a class literally named
+``Topology`` producing byte-identical reprs, link orders and routes off
+the re-hosted engine.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import graphtop as G
+from repro.core.numa import topology as numa_topo
+
+
+# ---------------------------------------------------------------------------
+# New builders
+# ---------------------------------------------------------------------------
+
+
+def test_torus2d_wraps_both_axes():
+    t = G.torus2d(3, 4, 10e9)
+    t.validate()
+    assert t.n_nodes == 12
+    # every node has degree 4 (two per axis)
+    deg = np.zeros(12)
+    for i, j in t.link_ends:
+        deg[i] += 1
+        deg[j] += 1
+    assert (deg == 4).all()
+    # wrap makes the worst pair ceil(3/2) + ceil(4/2) = 1 + 2 = 3 hops
+    assert t.max_hops == 3
+
+
+def test_torus2d_length2_axis_dedupes_wrap_link():
+    t = G.torus2d(2, 2, 10e9)
+    # 2x2 torus: each pair of adjacent nodes shares ONE link, not two
+    assert t.n_links == 4
+    t.validate()
+
+
+def test_torus3d_shape():
+    t = G.torus3d(2, 2, 4, 10e9)
+    t.validate()
+    assert t.n_nodes == 16
+    # degree: z axis contributes 2, each length-2 axis 1 (deduped wrap)
+    deg = np.zeros(16)
+    for i, j in t.link_ends:
+        deg[i] += 1
+        deg[j] += 1
+    assert (deg == 4).all()
+
+
+def test_tree_routes_through_root():
+    t = G.tree(7, 10e9)  # balanced binary: 0 -> (1, 2) -> (3..6)
+    t.validate()
+    assert t.n_links == 6
+    # leaves in different subtrees route through the root
+    route = t.route(3, 5)
+    ends = {t.link_ends[l] for l in route}
+    assert (0, 1) in ends and (0, 2) in ends and len(route) == 4
+
+
+def test_glued_generalizes_glued_8s():
+    gen = G.glued(2, 4, 12.8e9, 9.6e9)
+    old = numa_topo.glued_8s(12.8e9, 9.6e9)
+    assert gen.link_ends == old.link_ends
+    assert gen.link_bw == old.link_bw
+    assert gen.routes == old.routes
+    assert gen.name == "glued2x4" and old.name == "glued8s"
+
+
+def test_glued_ring_islands_wraps():
+    g = G.glued(3, 2, 100e9, 10e9, ring_islands=True)
+    g.validate()
+    # 3 islands x 1 intra link + 3 glue stages x 2 twins = 9 links
+    assert g.n_links == 9
+    # ring wrap: island 2 reaches island 0 directly (1 hop via twin)
+    assert len(g.route(4, 0)) == 1
+
+
+def test_glued_two_islands_no_duplicate_wrap():
+    a = G.glued(2, 3, 100e9, 10e9, ring_islands=True)
+    b = G.glued(2, 3, 100e9, 10e9)
+    assert a.link_ends == b.link_ends  # wrap == forward link for 2 islands
+
+
+# ---------------------------------------------------------------------------
+# Multipath routing (the carried-over ROADMAP thread)
+# ---------------------------------------------------------------------------
+
+
+def test_ring_multipath_splits_both_directions():
+    r = G.ring(4, 10e9)
+    n = r.n_nodes
+    # single-path: the 0 -> 2 pair pins one side of the ring
+    single = r.route_incidence()
+    assert single[0 * n + 2].sum() == 2.0
+    assert set(np.unique(single)) <= {0.0, 1.0}
+    # multipath: both 2-hop sides carry half the flow each — all 4 links
+    multi = r.route_incidence(multipath=True)
+    row = multi[0 * n + 2]
+    assert row.tolist() == [0.5, 0.5, 0.5, 0.5]
+    # adjacent pairs still have a unique shortest route
+    assert multi[0 * n + 1].tolist() == [1.0, 0.0, 0.0, 0.0]
+
+
+def test_multipath_off_is_bitwise_default():
+    for g in (G.ring(6, 5e9), G.torus2d(3, 3, 5e9), G.glued(2, 4, 10e9, 5e9)):
+        a = g.route_incidence()
+        b = g.route_incidence(multipath=False)
+        assert a is b  # same cached array — the old table, untouched
+
+
+def test_all_widest_routes_respects_bottleneck():
+    # diamond: 0-1-3 wide, 0-2-3 narrow; only the wide route is optimal
+    bw = np.zeros((4, 4))
+    bw[0, 1] = bw[1, 0] = 10e9
+    bw[1, 3] = bw[3, 1] = 10e9
+    bw[0, 2] = bw[2, 0] = 1e9
+    bw[2, 3] = bw[3, 2] = 10e9
+    g = G.from_bandwidth_matrix("diamond", bw)
+    routes = g.all_routes(0, 3)
+    assert len(routes) == 1
+    assert routes[0] == g.route(0, 3)
+    # equal-bandwidth diamond: both routes are optimal
+    bw[0, 2] = bw[2, 0] = 10e9
+    g2 = G.from_bandwidth_matrix("diamond-eq", bw)
+    assert len(g2.all_routes(0, 3)) == 2
+    assert g.route(0, 3) in g2.all_routes(0, 3)
+
+
+def test_directed_incidence_walks_directions():
+    r = G.ring(4, 10e9)
+    n = r.n_nodes
+    R = r.directed_route_incidence()
+    # 0 -> 1 crosses link (0,1) low->high: slot 0; 1 -> 0 the reverse slot
+    l01 = r.link_ends.index((0, 1))
+    assert R[0 * n + 1, 2 * l01] == 1.0 and R[0 * n + 1, 2 * l01 + 1] == 0.0
+    assert R[1 * n + 0, 2 * l01] == 0.0 and R[1 * n + 0, 2 * l01 + 1] == 1.0
+    # undirected fold of the directed matrix == the undirected matrix
+    undirected = R[:, 0::2] + R[:, 1::2]
+    assert np.array_equal(undirected, r.route_incidence())
+
+
+def test_directed_incidence_multipath_fractional():
+    r = G.ring(4, 10e9)
+    R = r.directed_route_incidence(multipath=True)
+    row = R[0 * 4 + 2]
+    assert row.sum() == pytest.approx(2.0)  # 2 hops of total flow
+    assert set(np.round(row[row > 0], 6)) == {0.5}
+
+
+# ---------------------------------------------------------------------------
+# NUMA wrapper: bit-for-bit compatibility pins
+# ---------------------------------------------------------------------------
+
+
+def test_topology_class_and_repr_preserved():
+    t = numa_topo.fully_connected(4, 10e9)
+    assert type(t).__name__ == "Topology"
+    assert isinstance(t, G.LinkGraph)
+    assert repr(t).startswith("Topology(name='fc4', n_nodes=4,")
+    # _replace and from_fit preserve the subclass (fingerprints depend on it)
+    assert type(t._replace(name="x")) is numa_topo.Topology
+    assert type(numa_topo.from_fit(t, np.asarray(t.link_bw) * 2)) is numa_topo.Topology
+    assert type(numa_topo.from_bandwidth_matrix("m", np.array([[0, 1e9], [1e9, 0]]))) \
+        is numa_topo.Topology
+
+
+def test_wrapper_builders_match_engine():
+    pairs = [
+        (numa_topo.fully_connected(4, 10e9), G.fully_connected(4, 10e9)),
+        (numa_topo.ring(5, 5e9), G.ring(5, 5e9)),
+        (numa_topo.mesh2d(2, 3, 5e9), G.mesh2d(2, 3, 5e9)),
+        (
+            numa_topo.snc(2, 2, qpi_bw=9e9, intra_bw=30e9),
+            G.snc(2, 2, qpi_bw=9e9, intra_bw=30e9),
+        ),
+    ]
+    for wrapped, engine in pairs:
+        assert tuple(wrapped) == tuple(engine)  # same fields, NUMA class
+        assert type(wrapped) is numa_topo.Topology
+
+
+def test_machine_fingerprints_unchanged():
+    """Golden pins: the digests these presets had before the graphtop
+    extraction.  fingerprint() hashes repr(topology) among other fields, so
+    any drift in class name, link order or routing breaks these."""
+    from repro.core.numa.machine import E5_2630_V3, E7_8860_V3, E5_2699_V3_SNC2
+
+    assert E5_2630_V3.fingerprint() == "134f795377b0ac9a817e78565d19b8f8"
+    assert E7_8860_V3.fingerprint() == "b48bf7290b885333f6bc953b102373fa"
+    assert E5_2699_V3_SNC2.fingerprint() == "7490ad694bceecbcb02dee20719e29e3"

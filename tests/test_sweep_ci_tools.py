@@ -96,6 +96,37 @@ def test_gate_main_pass_and_fail_exit_codes(gate, tmp_path, monkeypatch):
     assert exc.value.code == 1
 
 
+def test_gate_main_concatenates_multiple_artifacts(gate, tmp_path, monkeypatch):
+    """CI passes the placement sweep AND the mesh-advisor artifact in one
+    invocation; every baseline sweep just has to appear in *some* of them."""
+    base_p = tmp_path / "base.json"
+    base_p.write_text(json.dumps([_rec("a", 0.05), _rec("mesh", 0.0)]))
+    sweep_p = tmp_path / "sweep.json"
+    sweep_p.write_text(json.dumps([_rec("a", 0.05)]))
+    mesh_p = tmp_path / "mesh.json"
+    mesh_p.write_text(json.dumps([_rec("mesh", 0.0)]))
+    monkeypatch.setattr(
+        sys,
+        "argv",
+        ["check", str(sweep_p), str(mesh_p), "--baseline", str(base_p)],
+    )
+    gate.main()  # both sweeps found across the two artifacts: passes
+    monkeypatch.setattr(
+        sys, "argv", ["check", str(sweep_p), "--baseline", str(base_p)]
+    )
+    with pytest.raises(SystemExit):  # mesh record now missing
+        gate.main()
+
+
+def test_gate_absolute_floor_from_baseline_record(gate):
+    base = [dict(_rec("a", 0.05, pps=1000.0), min_placements_per_sec=800)]
+    ok = [_rec("a", 0.05, pps=900.0)]
+    slow = [_rec("a", 0.05, pps=500.0)]
+    assert gate.check(ok, base, error_tolerance=0.25, min_pps_ratio=0.0) == []
+    failures = gate.check(slow, base, error_tolerance=0.25, min_pps_ratio=0.0)
+    assert len(failures) == 1 and "floor" in failures[0]
+
+
 def test_gate_main_missing_baseline_file(gate, tmp_path, monkeypatch):
     new_p = tmp_path / "new.json"
     new_p.write_text(json.dumps([_rec("a", 0.05)]))
@@ -145,6 +176,25 @@ def test_load_history_orders_skips_garbage_and_appends_current(
     assert "| a | 3 | 0.3000 | +0.1000 |" in md
     assert "| new | 1 | 1.0000 |" in md
     assert dashboard.sparkline([0.1, 0.2, 0.3]) in md
+
+
+def test_load_history_merges_multiple_currents(dashboard, tmp_path):
+    """This run's several artifacts (placement sweep + mesh advisor) merge
+    into ONE trailing "current" point, not separate runs."""
+    hist = tmp_path / "hist"
+    d = hist / "2026-01-01__run-a"
+    d.mkdir(parents=True)
+    (d / "placement_sweep.json").write_text(json.dumps([_rec("a", 0.1)]))
+    sweep = tmp_path / "sweep.json"
+    sweep.write_text(json.dumps([_rec("a", 0.2)]))
+    mesh = tmp_path / "mesh.json"
+    mesh.write_text(json.dumps([_rec("mesh", 0.0)]))
+
+    runs = dashboard.load_history(hist, [sweep, mesh, tmp_path / "absent.json"])
+    assert [r["run"] for r in runs] == ["2026-01-01__run-a", "current"]
+    series = dashboard.aggregate(runs)
+    assert series["a"]["errors"] == [0.1, 0.2]
+    assert series["mesh"]["errors"] == [0.0]
 
 
 def test_load_history_without_history_dir(dashboard, tmp_path):
