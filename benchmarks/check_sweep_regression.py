@@ -9,10 +9,15 @@ exits non-zero when, on any sweep,
   history), or
 * *throughput* (placements/sec) falls below the sweep's absolute
   ``min_placements_per_sec`` floor committed in the baseline.  The floor
-  locks in the group-collapsed solver's speedup: it is set conservatively
-  (about 2x the pre-grouping CI throughput, against a measured >= 5x
-  algorithmic speedup) so CI-runner speed variance cannot trip it, but a
-  silent fallback to the per-thread path (~1x) always will.
+  locks in the batched-engine speedups (the grouped solver and the
+  shared-slab batching each contributed one 3x+ step): it is set
+  conservatively so CI-runner speed variance cannot trip it, but a silent
+  fallback to a slower path always will; or
+* on a ``placement-search`` record (``benchmarks/placement_search.py``),
+  the optimizer's *regret* against the best-known reference exceeds the
+  committed ``max_regret_pct``, or its warm *time-to-solution* exceeds
+  the committed ``max_time_to_solution_s`` (the 16-node record's < 1 s
+  floor is the searchable-without-enumeration acceptance bar).
 
 The looser relative ``--min-pps-ratio`` floor (default 0 = disabled)
 remains for local use.  ``--summary`` appends a one-line
@@ -55,6 +60,37 @@ def check(
         rec = new_by_sweep.get(sweep)
         if rec is None:
             failures.append(f"{sweep!r}: missing from the new artifact")
+            continue
+        if "regret_pct" in base:
+            # placement-search record: gate optimizer regret against the
+            # best-known reference and warm time-to-solution against the
+            # committed absolute floor (like min_placements_per_sec, set
+            # with CI-runner headroom; the 16-node machine's < 1 s floor
+            # is the PR's searchable-without-enumeration acceptance bar)
+            regret = rec["regret_pct"]
+            max_regret = base.get("max_regret_pct", 1.0)
+            status = "OK" if regret <= max_regret else "FAIL"
+            print(
+                f"{sweep}: regret {regret:.4f}% vs {rec.get('regret_vs', '?')} "
+                f"(max {max_regret}%) [{status}]"
+            )
+            if regret > max_regret:
+                failures.append(
+                    f"{sweep!r}: search regret {regret:.4f}% exceeds "
+                    f"{max_regret}%"
+                )
+            tts = rec["time_to_solution_s"]
+            cap = base.get("max_time_to_solution_s")
+            status = "OK" if cap is None or tts <= cap else "FAIL"
+            print(
+                f"{sweep}: time-to-solution {tts:.3f}s "
+                f"(max {cap}s) [{status}]"
+            )
+            if cap is not None and tts > cap:
+                failures.append(
+                    f"{sweep!r}: time-to-solution {tts:.3f}s above the "
+                    f"committed floor {cap}s"
+                )
             continue
         err, base_err = rec["median_error_pct"], base["median_error_pct"]
         delta = err - base_err

@@ -1,0 +1,157 @@
+"""Time-to-solution benchmark for the placement *search* engines.
+
+The sweep benchmark (``placement_sweep.py``) measures how fast the batched
+engine scores every composition; this one measures how fast the search
+modes find the *best* composition without scoring them all:
+
+* ``optimize_placement`` — multi-start gradient ascent through the
+  differentiable grouped solver, rounded and hill-polished;
+* ``branch_and_bound`` — best-first over compositions under the
+  admissible per-group roofline bound (certificate of optimality).
+
+Three records are emitted:
+
+* two exhaustively-checkable machines (the 4-socket preset and the SNC-2
+  preset) where *regret* is measured against the true ``evaluate_batch``
+  argmax over the full enumeration, and
+* the 16-node SNC machine (8 sockets x 2 nodes, ~1.07e10 compositions)
+  where no exhaustive reference exists: regret is measured against the
+  branch-and-bound incumbent, itself certified within 1% by its bound,
+  and the headline number is the gradient searcher's warm
+  time-to-solution (< 1 s floor, gated in CI).
+
+Run directly:
+
+    PYTHONPATH=src python benchmarks/placement_search.py [--json OUT.json]
+
+``--json`` artifacts are uploaded by CI next to the sweep artifact and
+gated against ``benchmarks/sweep_baseline.json`` by
+``benchmarks/check_sweep_regression.py`` (regret <= max_regret_pct,
+time-to-solution <= max_time_to_solution_s).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, time.perf_counter() - t0
+
+
+def search_record(
+    label: str,
+    machine,
+    n_threads: int,
+    *,
+    benchmark: str = "CG",
+    exhaustive_cap: int | None = 20_000,
+    bnb_kwargs: dict | None = None,
+) -> dict:
+    """One benchmark record: warm gradient-search time-to-solution plus
+    regret against the best available reference (exhaustive argmax when
+    the space fits under ``exhaustive_cap``, else the certified
+    branch-and-bound incumbent)."""
+    from repro.core.numa import (
+        branch_and_bound,
+        exact_objectives,
+        optimize_placement,
+    )
+    from repro.core.numa.benchmarks import benchmark_workload
+    from repro.core.numa.evaluate import count_placements, enumerate_placements
+
+    wl = benchmark_workload(benchmark, n_threads)
+    space = count_placements(machine, n_threads)
+
+    grad = optimize_placement(machine, wl)  # compile + first solve
+    grad, time_grad = _timed(lambda: optimize_placement(machine, wl))
+    bnb, time_bnb = _timed(
+        lambda: branch_and_bound(
+            machine, wl,
+            seed_placements=[grad.placement],
+            **(bnb_kwargs or {}),
+        )
+    )
+
+    if space <= (exhaustive_cap or 0):
+        placements = np.asarray(enumerate_placements(machine, n_threads))
+        optimum = float(np.asarray(exact_objectives(machine, wl, placements)).max())
+        regret_vs = "exhaustive"
+    else:
+        optimum = bnb.objective
+        regret_vs = (
+            f"bnb-incumbent(gap<={bnb_kwargs.get('gap', 0.0):.0%})"
+            if bnb_kwargs else "bnb-incumbent"
+        )
+    regret_pct = max(0.0, (optimum - grad.objective) / optimum * 100.0)
+
+    return {
+        "sweep": label,
+        "machine": machine.name,
+        "n_nodes": machine.n_nodes,
+        "n_threads": n_threads,
+        "benchmark": benchmark,
+        "search_space": space,
+        "time_to_solution_s": round(time_grad, 4),
+        "regret_pct": round(regret_pct, 4),
+        "regret_vs": regret_vs,
+        "evaluations": grad.evaluations,
+        "objective": round(grad.objective, 1),
+        "bnb_time_s": round(time_bnb, 4),
+        "bnb_nodes": bnb.nodes_expanded,
+        "bnb_optimal": bnb.optimal,
+    }
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--json",
+        type=Path,
+        default=None,
+        help="write results as a JSON artifact (for CI upload/trending)",
+    )
+    args = parser.parse_args()
+
+    from repro.core.numa import E5_2699_V3_SNC2, E7_4830_V3, make_machine
+
+    m16 = make_machine(
+        "snc2-8s", sockets=8, cores_per_socket=8, nodes_per_socket=2,
+        qpi_bw=25.6e9,
+    )
+    records = [
+        search_record(
+            "placement-search 4-socket (vs exhaustive)", E7_4830_V3, 24
+        ),
+        search_record(
+            "placement-search SNC-2 (vs exhaustive)", E5_2699_V3_SNC2, 16
+        ),
+        search_record(
+            "placement-search 16-node SNC 8s",
+            m16,
+            32,
+            exhaustive_cap=None,
+            bnb_kwargs={"gap": 0.01, "max_nodes": 20_000},
+        ),
+    ]
+    for rec in records:
+        print(f"{rec['sweep']}:")
+        for k, v in rec.items():
+            if k != "sweep":
+                print(f"  {k}: {v}")
+
+    if args.json is not None:
+        args.json.parent.mkdir(parents=True, exist_ok=True)
+        args.json.write_text(json.dumps(records, indent=2) + "\n")
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

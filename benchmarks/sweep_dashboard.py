@@ -95,21 +95,36 @@ def aggregate(runs: list[dict]) -> dict[str, dict]:
 
     Returns ``{sweep label: {"errors": [...], "pps": [...], "runs":
     [...]}}`` with one point per run that reported the sweep (machines
-    added later simply have shorter series)."""
+    added later simply have shorter series).  ``placement-search``
+    records (``regret_pct`` / ``time_to_solution_s`` instead of error /
+    throughput — see ``benchmarks/placement_search.py``) aggregate into
+    ``regret`` / ``tts`` series instead."""
     series: dict[str, dict] = {}
     for run in runs:
         by_sweep = {rec["sweep"]: rec for rec in run["records"]}
         for sweep, rec in by_sweep.items():
-            s = series.setdefault(sweep, {"errors": [], "pps": [], "runs": []})
-            s["errors"].append(float(rec["median_error_pct"]))
-            s["pps"].append(float(rec.get("placements_per_sec", 0.0)))
+            if "regret_pct" in rec:
+                s = series.setdefault(
+                    sweep, {"regret": [], "tts": [], "runs": []}
+                )
+                s["regret"].append(float(rec["regret_pct"]))
+                s["tts"].append(float(rec.get("time_to_solution_s", 0.0)))
+            else:
+                s = series.setdefault(
+                    sweep, {"errors": [], "pps": [], "runs": []}
+                )
+                s["errors"].append(float(rec["median_error_pct"]))
+                s["pps"].append(float(rec.get("placements_per_sec", 0.0)))
             s["runs"].append(run["run"])
     return series
 
 
 def render_markdown(series: dict[str, dict]) -> str:
     """The dashboard: one row per sweep with the latest median error, the
-    delta against the previous run, series extremes and a sparkline."""
+    delta against the previous run, series extremes and a sparkline;
+    placement-search rows trend regret and warm time-to-solution."""
+    sweeps = sorted(k for k, s in series.items() if "errors" in s)
+    searches = sorted(k for k, s in series.items() if "regret" in s)
     lines = [
         "## Placement-sweep trend",
         "",
@@ -119,7 +134,7 @@ def render_markdown(series: dict[str, dict]) -> str:
     if not series:
         lines.append("| _no sweep artifacts found_ | | | | | | |")
         return "\n".join(lines) + "\n"
-    for sweep in sorted(series):
+    for sweep in sweeps:
         errs = series[sweep]["errors"]
         latest = errs[-1]
         delta = latest - errs[-2] if len(errs) > 1 else 0.0
@@ -135,12 +150,27 @@ def render_markdown(series: dict[str, dict]) -> str:
         "| sweep | latest | x vs first run | trend |",
         "| --- | ---: | ---: | --- |",
     ]
-    for sweep in sorted(series):
+    for sweep in sweeps:
         pps = series[sweep]["pps"]
         ratio = f"x{pps[-1] / pps[0]:.1f}" if pps[0] else "–"
         lines.append(
             f"| {sweep} | {pps[-1]:,.0f} | {ratio} | `{sparkline(pps)}` |"
         )
+    if searches:
+        lines += [
+            "",
+            "Placement search (optimizer regret vs best-known reference, "
+            "and warm time-to-solution; both gated):",
+            "",
+            "| search | runs | regret % (latest) | worst | time-to-solution s (latest) | trend (tts) |",
+            "| --- | ---: | ---: | ---: | ---: | --- |",
+        ]
+        for sweep in searches:
+            regret, tts = series[sweep]["regret"], series[sweep]["tts"]
+            lines.append(
+                f"| {sweep} | {len(regret)} | {regret[-1]:.4f} "
+                f"| {max(regret):.4f} | {tts[-1]:.3f} | `{sparkline(tts)}` |"
+            )
     return "\n".join(lines) + "\n"
 
 

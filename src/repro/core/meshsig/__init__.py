@@ -18,6 +18,7 @@ from repro.core.meshsig.advisor import (
     CHIP_V5P,
     ChipSpec,
     MeshRanking,
+    numa_placement_bounds,
     rank_meshes,
 )
 from repro.core.meshsig.device_topology import (
@@ -39,6 +40,7 @@ __all__ = [
     "analyze_hlo",
     "ici_torus2d",
     "ici_torus3d",
+    "numa_placement_bounds",
     "nvlink_island",
     "rank_meshes",
     "ring_of_islands",

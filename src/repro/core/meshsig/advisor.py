@@ -250,3 +250,24 @@ def rank_numa_placements(
         )
         for i in order
     ]
+
+
+def numa_placement_bounds(machine, workload, placements, *, thread_classes=None):
+    """Admissible per-placement upper bounds on total work rate
+    (instructions/s), suitable for certifying search optimality.
+
+    The ranking score above (:func:`_placement_scores`) is a *heuristic*
+    roofline: it scales every thread by the single worst resource
+    utilization, which can under-estimate a placement whose threads split
+    across independently-saturating resources — i.e. it is NOT an
+    admissible bound and must never be used to prune a branch-and-bound
+    search.  This helper delegates to the simulator-side bound
+    (:func:`repro.core.numa.search.placement_upper_bound`), which caps each
+    thread group by its isolated-rate resource ceilings and therefore
+    always sits at or above the simulated rate.
+    """
+    from repro.core.numa.search import placement_upper_bound
+
+    return placement_upper_bound(
+        machine, workload, placements, thread_classes=thread_classes
+    )

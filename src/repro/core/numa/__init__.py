@@ -52,6 +52,14 @@ from repro.core.numa.simulator import (
     asymmetric_placement,
     thread_class_starts,
 )
+from repro.core.numa.search import (
+    SearchResult,
+    branch_and_bound,
+    exact_objectives,
+    optimize_placement,
+    placement_upper_bound,
+    relaxed_work_rate,
+)
 from repro.core.numa.calibrate import (
     CalibrationParams,
     CalibrationResult,
@@ -100,6 +108,12 @@ __all__ = [
     "profile_pair",
     "symmetric_placement",
     "asymmetric_placement",
+    "SearchResult",
+    "branch_and_bound",
+    "exact_objectives",
+    "optimize_placement",
+    "placement_upper_bound",
+    "relaxed_work_rate",
     "CalibrationParams",
     "CalibrationResult",
     "CalibrationSamples",

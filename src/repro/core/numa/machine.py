@@ -46,6 +46,7 @@ model bit for bit.
 from __future__ import annotations
 
 import hashlib
+from functools import lru_cache
 from typing import NamedTuple
 
 import jax.numpy as jnp
@@ -195,24 +196,32 @@ class MachineSpec(NamedTuple):
         """Content digest over every field (topology included) — the
         machine component of signature-cache keys, stable across processes
         and robust to array-valued topology input (canonicalized to
-        tuples at construction)."""
-        digest = hashlib.blake2b(digest_size=16)
-        for part in (
-            self.name,
-            self.sockets,
-            self.cores_per_socket,
-            self.nodes_per_socket,
-            self.local_read_bw,
-            self.local_write_bw,
-            self.remote_read_bw,
-            self.remote_write_bw,
-            self.core_rate,
-            self.hop_attenuation,
-            self.topology,
-        ):
-            digest.update(repr(part).encode())
-            digest.update(b"\x1f")  # field separator: '325.0' != '32','5.0'
-        return digest.hexdigest()
+        tuples at construction).  Memoized on the spec itself (specs are
+        immutable): the repr walk over the topology tables is ms-scale on
+        8-socket machines and signature-cache keys are built on every
+        ``evaluate_batch`` call."""
+        return _fingerprint(self)
+
+
+@lru_cache(maxsize=256)
+def _fingerprint(machine: MachineSpec) -> str:
+    digest = hashlib.blake2b(digest_size=16)
+    for part in (
+        machine.name,
+        machine.sockets,
+        machine.cores_per_socket,
+        machine.nodes_per_socket,
+        machine.local_read_bw,
+        machine.local_write_bw,
+        machine.remote_read_bw,
+        machine.remote_write_bw,
+        machine.core_rate,
+        machine.hop_attenuation,
+        machine.topology,
+    ):
+        digest.update(repr(part).encode())
+        digest.update(b"\x1f")  # field separator: '325.0' != '32','5.0'
+    return digest.hexdigest()
 
 
 # Xeon E5-2630 v3: 8 cores, 2.4 GHz, DDR4-1866.  The cheap machine whose

@@ -144,6 +144,7 @@ def _resource_tensor(
     write_unit: Array,  # (n, s)
     node_of: Array,  # (n,)
     caps: Array | None = None,  # capacity-vector override (calibration)
+    multipath: bool = False,
 ) -> tuple[Array, Array]:
     """Build the per-thread resource-usage matrix ``U[t, r]`` and the
     capacity vector ``caps[r]``.
@@ -160,6 +161,11 @@ def _resource_tensor(
     machine-derived capacity vector (same slab order, from
     :func:`machine_caps`) — the hook the calibration fit differentiates
     through.
+
+    ``multipath=True`` splits each pair's flow evenly over all of its
+    equal-cost widest routes (``graphtop`` fractional incidence) instead
+    of charging the single primary route; the default single-route
+    charging is unchanged bit for bit.
     """
     s = machine.n_nodes
     n = node_of.shape[0]
@@ -178,9 +184,15 @@ def _resource_tensor(
     # endpoint-index gather summed in the scalar-pair model's exact order,
     # so fully-connected topologies reproduce it bit for bit.  (2) Routed
     # traffic: multi-hop pairs charge the full flow to every link on their
-    # route via the static pair->link incidence matrix.
+    # route via the static pair->link incidence matrix.  Under multipath
+    # the two-part split is meaningless (a "direct" pair may still split
+    # over parallel equal-cost routes), so the whole charge goes through
+    # the fractional incidence in one matmul.
     n_links = topo.n_links
-    if n_links:
+    if n_links and multipath:
+        inc = jnp.asarray(topo.route_incidence(multipath=True))  # (s*s, L)
+        link_usage = (rr_remote + ww_remote).reshape(n, s * s) @ inc
+    elif n_links:
         ends_i = np.asarray([e[0] for e in topo.link_ends])
         ends_j = np.asarray([e[1] for e in topo.link_ends])
         link_usage = (
@@ -249,6 +261,7 @@ def simulate_reference(
     background_bw: float = 0.0,
     key: Array | None = None,
     caps: Array | None = None,
+    multipath: bool = False,
 ) -> SimulationResult:
     """The per-thread reference solver: one resource-slab row per thread.
 
@@ -282,7 +295,9 @@ def simulate_reference(
     read_unit = rate_of[:, None] * workload.read_bpi[:, None] * read_mix
     write_unit = rate_of[:, None] * workload.write_bpi[:, None] * write_mix
 
-    usage, caps = _resource_tensor(machine, read_unit, write_unit, node_of, caps)
+    usage, caps = _resource_tensor(
+        machine, read_unit, write_unit, node_of, caps, multipath=multipath
+    )
     # Each progressive-filling iteration freezes at least one thread set
     # (either a bottleneck's users or, at lam* >= 1, every active thread),
     # and each bottleneck saturates at most one new resource — so
@@ -442,6 +457,7 @@ def _group_resource_tensor(
     read_unit: Array,  # (C, s, s) bytes/s of one class-c thread on node k
     write_unit: Array,
     caps: Array | None = None,
+    multipath: bool = False,
 ) -> tuple[Array, Array]:
     """Per-*group* resource-usage matrix ``U[g, r]`` (``g = c * s + k``)
     in the exact slab order of :func:`_resource_tensor` / :func:`machine_caps`.
@@ -451,7 +467,9 @@ def _group_resource_tensor(
     group row places its ``s`` bank flows at columns ``k*s + j``) instead
     of the per-thread path's dense one-hot masking; per-link charges
     gather the node's rows of the full route-incidence matrix (direct and
-    multi-hop routes alike, matching the reference's two-part sum)."""
+    multi-hop routes alike, matching the reference's two-part sum).
+    ``multipath=True`` swaps in the fractional equal-cost-multipath
+    incidence (bit-for-bit unchanged when off)."""
     s = machine.n_nodes
     C = read_unit.shape[0]
     G = C * s
@@ -473,7 +491,9 @@ def _group_resource_tensor(
 
     if topo.n_links:
         # (s, s, L) static: node k's rows of the full pair->link incidence
-        inc = np.asarray(topo.route_incidence()).reshape(s, s, topo.n_links)
+        inc = np.asarray(
+            topo.route_incidence(multipath=multipath)
+        ).reshape(s, s, topo.n_links)
         inc_rows = jnp.asarray(inc[node_idx])  # (G, s, L) static constant
         link_usage = jnp.einsum("gj,gjl->gl", rr_vals + ww_vals, inc_rows)
     else:
@@ -520,6 +540,311 @@ def _progressive_fill_grouped(
     return jnp.where(frozen, x, 1.0)
 
 
+# ---------------------------------------------------------------------------
+# Batched shared-slab evaluation: one resource build per support bucket
+# ---------------------------------------------------------------------------
+#
+# A placement enters the grouped solver through exactly three channels:
+# the (C, s) multiplicity grid, the per-thread row ``pt_row = n / sum(n)``
+# and the interleave row ``il_row = used / s_used`` (support only).  The
+# unit-demand tensor is *linear* in the mix rows, so it decomposes exactly:
+#
+#   unit(c, k, j) = base(c, k, j)                      static + local terms
+#                 + pt_coeff(c, k) * pt_row(j)         per-thread term
+#                 + il_coeff(c, k) * il_row(j)         interleaved term
+#
+# ``base`` and the coefficients are placement-independent (built once per
+# benchmark); ``il_row`` only depends on the placement's *support pattern*
+# (which nodes hold any thread), so placements are bucketed by support and
+# the base+interleave slab — including its per-link charges — is built
+# once per bucket.  Only the rank-1 ``pt_row`` update and the multiplicity
+# grid remain per-placement work.
+#
+# The slab itself is kept *structured* instead of materializing the dense
+# ``(G, R)`` matrix of :func:`_group_resource_tensor`: each remote path
+# ``(k, j)`` is used only by the C groups living on node ``k``, so the
+# remote constraints stay in ``(C, s, s)`` form (``2*C*s^2`` entries
+# instead of the dense scatter's ``2*C*s^3``) and the fill contracts them
+# with per-node einsums.  The max-min semantics are identical; only the
+# zero padding is gone.
+
+
+class GroupSlabs(NamedTuple):
+    """Placement-independent slab components of one benchmark's unit
+    demand (see the decomposition note above)."""
+
+    base_read: Array  # (C, s, s) static + local unit demand
+    base_write: Array  # (C, s, s)
+    pt_read: Array  # (C, s) coefficient of the per-thread row
+    pt_write: Array  # (C, s)
+    il_read: Array  # (C, s) coefficient of the interleave row
+    il_write: Array  # (C, s)
+
+
+class GroupedBatchResult(NamedTuple):
+    """Per-placement ground truth from :func:`simulate_grouped_batch`
+    (noise-free; measurement noise is a batched post-pass for the callers
+    that want it)."""
+
+    read_flows: Array  # (P, s, s)
+    write_flows: Array  # (P, s, s)
+    instructions: Array  # (P, s)
+    throughput: Array  # (P,) sum of thread rates
+    group_rates: Array  # (P, C, s) shared rate of class c on node k
+
+
+def group_slab_components(
+    machine: MachineSpec,
+    workload: Workload,
+    thread_classes: tuple[int, ...],
+) -> GroupSlabs:
+    """Build the placement-independent unit-demand components for every
+    (class, node) group — one call per benchmark, shared by every
+    placement bucket."""
+    s = machine.n_nodes
+    rep = np.asarray(thread_classes, np.int64)  # class representatives
+    node_rates = machine.node_rates()  # (s,)
+
+    def direction(static_frac, local_frac, pt_frac, bpi):
+        sf = static_frac[rep]
+        lf = local_frac[rep]
+        pf = pt_frac[rep]
+        inter = 1.0 - sf - lf - pf
+        unit = node_rates[None, :, None] * bpi[rep][:, None, None]  # (C, s, 1)
+        static_row = (
+            jnp.arange(s) == workload.static_socket
+        ).astype(node_rates.dtype)
+        base = unit * (
+            sf[:, None, None] * static_row[None, None, :]
+            + lf[:, None, None] * jnp.eye(s, dtype=node_rates.dtype)[None, :, :]
+        )
+        coeff = unit[:, :, 0]  # (C, s)
+        return base, coeff * pf[:, None], coeff * inter[:, None]
+
+    base_r, pt_r, il_r = direction(
+        workload.read_static,
+        workload.read_local,
+        workload.read_per_thread,
+        workload.read_bpi,
+    )
+    base_w, pt_w, il_w = direction(
+        workload.write_static,
+        workload.write_local,
+        workload.write_per_thread,
+        workload.write_bpi,
+    )
+    return GroupSlabs(base_r, base_w, pt_r, pt_w, il_r, il_w)
+
+
+def split_caps(
+    machine: MachineSpec, caps: Array | None = None
+) -> tuple[Array, Array, Array]:
+    """Split a :func:`machine_caps`-order capacity vector into the
+    structured fill's three blocks: dense ``[bank reads (s), bank writes
+    (s), links (L)]``, remote-read ``(s, s)`` and remote-write ``(s, s)``."""
+    s = machine.n_nodes
+    if caps is None:
+        dense = jnp.concatenate(
+            [machine.bank_read_caps(), machine.bank_write_caps(), machine.link_caps()]
+        )
+        return dense, machine.remote_read_caps(), machine.remote_write_caps()
+    dense = jnp.concatenate([caps[: 2 * s], caps[2 * s + 2 * s * s :]])
+    rr = caps[2 * s : 2 * s + s * s].reshape(s, s)
+    ww = caps[2 * s + s * s : 2 * s + 2 * s * s].reshape(s, s)
+    return dense, rr, ww
+
+
+def _progressive_fill_structured(
+    dense: Array,  # (G, 2s + L) unit usage: bank reads, bank writes, links
+    rem_read: Array,  # (C, s, s) off-diagonal-masked remote read unit usage
+    rem_write: Array,  # (C, s, s)
+    mult: Array,  # (G,) group multiplicities (float)
+    dense_caps: Array,  # (2s + L,)
+    rr_caps: Array,  # (s, s) inf diagonal
+    ww_caps: Array,  # (s, s)
+    iterations: int,
+    early_exit: bool = False,
+) -> Array:
+    """:func:`_progressive_fill_grouped` over the structured slab: the
+    dense block matmuls while each remote path contracts only the C groups
+    on its source node.  Same freeze rule, bottleneck tolerance and
+    fixed-point; ``early_exit=True`` swaps the fori_loop for a while_loop
+    that stops once every group froze (bit-identical — post-freeze
+    iterations are no-ops — but not reverse-differentiable, so the
+    calibration/search gradient paths keep the fixed-count loop)."""
+    C, s, _ = rem_read.shape
+    g = dense.shape[0]
+    dtype = dense.dtype
+
+    def body(state):
+        x, frozen = state
+        active = ~frozen
+        wt_frozen = (jnp.where(frozen, x, 0.0) * mult).astype(dtype)
+        wt_active = jnp.where(active, mult, 0.0).astype(dtype)
+        fz_dense = wt_frozen @ dense
+        act_dense = wt_active @ dense
+        wf = wt_frozen.reshape(C, s)
+        wa = wt_active.reshape(C, s)
+        fz_rr = jnp.einsum("ck,ckj->kj", wf, rem_read)
+        act_rr = jnp.einsum("ck,ckj->kj", wa, rem_read)
+        fz_ww = jnp.einsum("ck,ckj->kj", wf, rem_write)
+        act_ww = jnp.einsum("ck,ckj->kj", wa, rem_write)
+
+        def lam_of(resid, act):
+            return jnp.where(
+                act > _EPS, resid / jnp.maximum(act, _EPS), jnp.inf
+            )
+
+        lam_d = lam_of(jnp.maximum(dense_caps - fz_dense, 0.0), act_dense)
+        lam_rr = lam_of(jnp.maximum(rr_caps - fz_rr, 0.0), act_rr)
+        lam_ww = lam_of(jnp.maximum(ww_caps - fz_ww, 0.0), act_ww)
+        lam_star = jnp.minimum(
+            jnp.minimum(jnp.min(lam_d), jnp.min(lam_rr)),
+            jnp.minimum(jnp.min(lam_ww), 1.0),
+        )
+        tol = lam_star * (1.0 + 1e-6)
+        bn_d = lam_d <= tol
+        bn_rr = lam_rr <= tol
+        bn_ww = lam_ww <= tol
+        uses = (
+            (dense * bn_d[None, :]).sum(1)
+            + jnp.einsum("ckj,kj->ck", rem_read, bn_rr.astype(dtype)).reshape(g)
+            + jnp.einsum("ckj,kj->ck", rem_write, bn_ww.astype(dtype)).reshape(g)
+        ) > _EPS
+        freeze_now = active & (uses | (lam_star >= 1.0))
+        x = jnp.where(freeze_now, lam_star, x)
+        frozen = frozen | freeze_now
+        return x, frozen
+
+    state0 = (jnp.zeros((g,), dtype), jnp.zeros((g,), bool))
+    if early_exit:
+        x, frozen = jax.lax.while_loop(
+            lambda st: ~jnp.all(st[1]), body, state0
+        )
+    else:
+        x, frozen = jax.lax.fori_loop(
+            0, iterations, lambda _, st: body(st), state0
+        )
+    return jnp.where(frozen, x, 1.0)
+
+
+def support_patterns(placements) -> tuple[np.ndarray, np.ndarray]:
+    """Host-side bucketing of concrete placements by support pattern
+    (which nodes hold any thread).  Returns the ``(n_buckets, s)`` 0/1
+    support matrix — rows in lexicographic order, so the bucket layout is
+    deterministic regardless of placement order — and the ``(P,)`` bucket
+    id of every placement."""
+    p = np.asarray(placements)
+    sup = (p > 0).astype(np.int32)
+    uniq, slab_id = np.unique(sup, axis=0, return_inverse=True)
+    return uniq, slab_id.astype(np.int32).reshape(-1)
+
+
+def simulate_grouped_batch(
+    machine: MachineSpec,
+    workload: Workload,
+    placements: Array,  # (P, s) integer thread counts per node
+    *,
+    thread_classes: tuple[int, ...],
+    support: Array | None = None,  # (n_buckets, s) support patterns
+    slab_id: Array | None = None,  # (P,) bucket of each placement
+    caps: Array | None = None,
+    multipath: bool = False,
+    elapsed: float = 1.0,
+    early_exit: bool = True,
+) -> GroupedBatchResult:
+    """Ground truth for a whole placement batch in one pass: bucket the
+    placements by support pattern, build the base+interleave slab once per
+    bucket, and vmap the structured progressive fill over only the traced
+    multiplicity grids and rank-1 per-thread updates.
+
+    ``support`` / ``slab_id`` (from :func:`support_patterns`) may be
+    passed in when the caller already bucketed on the host — mandatory
+    when ``placements`` is traced; computed here otherwise."""
+    s = machine.n_nodes
+    n = workload.n_threads
+    topo = machine.topology
+    placements = jnp.asarray(placements)
+    if support is None or slab_id is None:
+        support, slab_id = support_patterns(placements)
+    support = jnp.asarray(support)
+    slab_id = jnp.asarray(slab_id)
+
+    comps = group_slab_components(machine, workload, thread_classes)
+    C = comps.base_read.shape[0]
+    G = C * s
+    dtype = comps.base_read.dtype
+    dense_caps, rr_caps, ww_caps = split_caps(machine, caps)
+    offdiag = (1.0 - jnp.eye(s, dtype=dtype))[None, :, :]  # (1, s, s)
+    node_rates = machine.node_rates().astype(dtype)
+    n_links = topo.n_links
+    if n_links:
+        inc = jnp.asarray(
+            np.asarray(
+                topo.route_incidence(multipath=multipath), np.float32
+            ).reshape(s, s, n_links)
+        )
+    iterations = min(G, 2 * s + 2 * s * s + n_links) + 1
+
+    def bucket_slab(sup):
+        used = sup.astype(dtype)
+        il_row = used / jnp.maximum(used.sum(), 1.0)  # (s,)
+        ru = comps.base_read + comps.il_read[:, :, None] * il_row[None, None, :]
+        wu = comps.base_write + comps.il_write[:, :, None] * il_row[None, None, :]
+        if n_links:
+            cross = (ru + wu) * offdiag
+            lu = jnp.einsum("ckj,kjl->ckl", cross, inc)
+        else:
+            lu = jnp.zeros((C, s, 0), dtype)
+        return ru, wu, lu
+
+    b_ru, b_wu, b_lu = jax.vmap(bucket_slab)(support)
+
+    if n_links:
+        # per-link charge of one unit of pt_row flow from node k (the
+        # diagonal rows of inc are all-zero, so no off-diagonal mask needed)
+        def pt_link(pt_row):
+            return jnp.einsum("j,kjl->kl", pt_row, inc)  # (s, L)
+    starts = tuple(int(v) for v in np.asarray(thread_classes, np.int64))
+
+    def per_placement(p, sid):
+        nf = p.astype(dtype)
+        pt_row = nf / jnp.maximum(nf.sum(), 1.0)
+        ru = b_ru[sid] + comps.pt_read[:, :, None] * pt_row[None, None, :]
+        wu = b_wu[sid] + comps.pt_write[:, :, None] * pt_row[None, None, :]
+        if n_links:
+            lu = b_lu[sid] + (
+                (comps.pt_read + comps.pt_write)[:, :, None]
+                * pt_link(pt_row)[None, :, :]
+            )
+        else:
+            lu = b_lu[sid]
+        dense = jnp.concatenate(
+            [ru.reshape(G, s), wu.reshape(G, s), lu.reshape(G, n_links)], axis=1
+        )
+        rem_read = ru * offdiag
+        rem_write = wu * offdiag
+        mult = _group_multiplicities(starts, n, p).astype(dtype)  # (C, s)
+        x = _progressive_fill_structured(
+            dense, rem_read, rem_write, mult.reshape(G),
+            dense_caps, rr_caps, ww_caps, iterations, early_exit=early_exit,
+        )
+        xg = x.reshape(C, s)
+        weight = mult * xg
+        read_flows = jnp.einsum("ck,ckj->kj", weight, ru) * elapsed
+        write_flows = jnp.einsum("ck,ckj->kj", weight, wu) * elapsed
+        instructions = (weight * node_rates[None, :]).sum(0) * elapsed
+        return GroupedBatchResult(
+            read_flows=read_flows,
+            write_flows=write_flows,
+            instructions=instructions,
+            throughput=weight.sum(),
+            group_rates=xg,
+        )
+
+    return jax.vmap(per_placement)(placements, slab_id)
+
+
 def simulate(
     machine: MachineSpec,
     workload: Workload,
@@ -531,6 +856,7 @@ def simulate(
     key: Array | None = None,
     caps: Array | None = None,
     thread_classes: tuple[int, ...] | None = None,
+    multipath: bool = False,
 ) -> SimulationResult:
     """Run the workload on the machine under the given placement (threads
     per NUMA node) and emit ground truth + the paper-visible performance
@@ -553,7 +879,7 @@ def simulate(
         return simulate_reference(
             machine, workload, n_per_node,
             elapsed=elapsed, noise_std=noise_std, background_bw=background_bw,
-            key=key, caps=caps,
+            key=key, caps=caps, multipath=multipath,
         )
 
     s = machine.n_nodes
@@ -586,7 +912,9 @@ def simulate(
     read_unit = node_rates[None, :, None] * workload.read_bpi[rep][:, None, None] * read_mix
     write_unit = node_rates[None, :, None] * workload.write_bpi[rep][:, None, None] * write_mix
 
-    usage, caps = _group_resource_tensor(machine, read_unit, write_unit, caps)
+    usage, caps = _group_resource_tensor(
+        machine, read_unit, write_unit, caps, multipath=multipath
+    )
     mult = _group_multiplicities(thread_classes, n, n_per_node)  # (C, s)
     mult_f = mult.astype(usage.dtype)
     iterations = min(usage.shape[0], usage.shape[1]) + 1

@@ -169,13 +169,16 @@ def _digest(*arrays) -> str:
 # — CG @ 8 threads on both 2-socket paper presets.  ``simulate_reference``
 # (the per-thread path) must still reproduce them byte for byte.  The
 # ``batch`` digests pin the group-collapsed ``evaluate_batch`` pipeline
-# instead (re-recorded at the grouped-solver PR; its equivalence with the
-# per-thread reference is covered to 1e-6 by tests/test_grouped_solver.py).
+# instead (re-recorded at the grouped-solver PR and again at the
+# shared-slab batch PR, which batched the measurement-noise draws — new
+# PRNG stream, same model; equivalence with the per-thread reference is
+# covered to 1e-6 by tests/test_grouped_solver.py and noise-free by
+# tests/test_placement_sweep.py).
 _PRE_REFACTOR_DIGESTS = {
-    ("E5-2630v3-8c", "batch"): "b22266a0a2722e08689df174ddf6aa46",
+    ("E5-2630v3-8c", "batch"): "cbc81790eff3f6f609638af31319e114",
     ("E5-2630v3-8c", "sim"): "26bc2013541a68d19b0f83cb220ab9d4",
     ("E5-2630v3-8c", "simnoise"): "929f752f4b02f8aed18b9e281494e44b",
-    ("E5-2699v3-18c", "batch"): "7ab2752d48c14af4f96456f3e27a497d",
+    ("E5-2699v3-18c", "batch"): "715d4b8762d838c68f3cab36de16827f",
     ("E5-2699v3-18c", "sim"): "d129b2fbbb31f4fe72f22f3a7e6ce368",
     ("E5-2699v3-18c", "simnoise"): "d0f57816e463d1bb8fbf00396debe775",
 }

@@ -165,10 +165,16 @@ def test_evaluate_batch_equals_per_placement_simulate_4socket():
     placements = enumerate_placements(machine, 16, max_placements=16, seed=1)
     key = jax.random.PRNGKey(7)
 
-    with jax.disable_jit():  # eager == eager must be exact
+    with jax.disable_jit():
+        # eager vs eager: the shared-slab engine computes the same math
+        # with batched contractions (structured remote einsums, closed-form
+        # counter predictions), so equality holds to float32 round-off
+        # rather than bit-for-bit
         batch = evaluate_batch(machine, wl, placements, keys=key)
         manual, manual_sig = _manual_accuracy(machine, wl, placements, key)
-        np.testing.assert_array_equal(np.asarray(batch.errors_combined[0]), manual)
+        np.testing.assert_allclose(
+            np.asarray(batch.errors_combined[0]), manual, atol=1e-6
+        )
 
     # the jitted trace agrees to float tolerance (XLA fusion reorders ops)
     batch_jit = evaluate_batch(machine, wl, placements, keys=key)

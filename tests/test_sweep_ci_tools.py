@@ -127,6 +127,57 @@ def test_gate_absolute_floor_from_baseline_record(gate):
     assert len(failures) == 1 and "floor" in failures[0]
 
 
+def _search_rec(sweep, regret=0.0, tts=0.1, **extra):
+    return {
+        "sweep": sweep,
+        "regret_pct": regret,
+        "regret_vs": "exhaustive",
+        "time_to_solution_s": tts,
+        **extra,
+    }
+
+
+def test_gate_search_records_pass_within_limits(gate):
+    base = [
+        _search_rec("search-a", max_regret_pct=1.0, max_time_to_solution_s=1.0)
+    ]
+    new = [_search_rec("search-a", regret=0.9, tts=0.95)]
+    assert gate.check(new, base, error_tolerance=0.25, min_pps_ratio=0.0) == []
+
+
+def test_gate_search_records_fail_on_regret_and_time(gate):
+    base = [
+        _search_rec("search-a", max_regret_pct=1.0, max_time_to_solution_s=1.0)
+    ]
+    bad_regret = [_search_rec("search-a", regret=1.5, tts=0.1)]
+    failures = gate.check(
+        bad_regret, base, error_tolerance=0.25, min_pps_ratio=0.0
+    )
+    assert len(failures) == 1 and "regret" in failures[0]
+    slow = [_search_rec("search-a", regret=0.0, tts=2.5)]
+    failures = gate.check(slow, base, error_tolerance=0.25, min_pps_ratio=0.0)
+    assert len(failures) == 1 and "time-to-solution" in failures[0]
+
+
+def test_gate_mixes_sweep_and_search_records(gate):
+    """One baseline holds both record kinds (as the committed
+    sweep_baseline.json now does); each is gated by its own rule and a
+    search record never trips the error/throughput checks."""
+    base = [
+        dict(_rec("a", 0.05, pps=1000.0), min_placements_per_sec=800),
+        _search_rec("search-a", max_regret_pct=1.0, max_time_to_solution_s=1.0),
+    ]
+    new = [_rec("a", 0.05, pps=900.0), _search_rec("search-a")]
+    assert gate.check(new, base, error_tolerance=0.25, min_pps_ratio=0.0) == []
+    failures = gate.check(
+        [_rec("a", 0.05, pps=900.0), _search_rec("search-a", regret=2.0)],
+        base,
+        error_tolerance=0.25,
+        min_pps_ratio=0.0,
+    )
+    assert len(failures) == 1 and "regret" in failures[0]
+
+
 def test_gate_main_missing_baseline_file(gate, tmp_path, monkeypatch):
     new_p = tmp_path / "new.json"
     new_p.write_text(json.dumps([_rec("a", 0.05)]))
@@ -211,3 +262,28 @@ def test_load_history_without_history_dir(dashboard, tmp_path):
 def test_render_markdown_empty(dashboard):
     md = dashboard.render_markdown({})
     assert "no sweep artifacts" in md
+
+
+def test_dashboard_trends_search_records(dashboard, tmp_path):
+    hist = tmp_path / "hist"
+    d = hist / "2026-01-01__run-a"
+    d.mkdir(parents=True)
+    (d / "placement_search.json").write_text(
+        json.dumps([_search_rec("search-a", regret=0.0, tts=0.5)])
+    )
+    current = tmp_path / "current.json"
+    current.write_text(
+        json.dumps(
+            [_rec("a", 0.1), _search_rec("search-a", regret=0.2, tts=0.4)]
+        )
+    )
+    runs = dashboard.load_history(hist, current)
+    series = dashboard.aggregate(runs)
+    assert series["search-a"]["regret"] == [0.0, 0.2]
+    assert series["search-a"]["tts"] == [0.5, 0.4]
+    assert series["a"]["errors"] == [0.1]
+    md = dashboard.render_markdown(series)
+    assert "Placement search" in md
+    assert "| search-a | 2 | 0.2000 | 0.2000 | 0.400 |" in md
+    # the sweep table must not pick up the search record
+    assert "| search-a | 1 |" not in md
