@@ -1,0 +1,168 @@
+"""Throughput + tail-latency benchmark for the placement-advisor service.
+
+Drives open-loop load against an :class:`repro.serve.AdvisorService` in
+four phases and emits one record per phase, gated in CI against
+``benchmarks/sweep_baseline.json`` by ``check_sweep_regression.py``:
+
+* **cache-hit** — a hot signature set served from the tier-1 LRU; commits
+  a ``min_qps`` floor (>= 10x the miss-path floor: the cache must earn
+  its place) and a ``max_p99_ms`` ceiling.
+* **miss-batched** — distinct signatures submitted open-loop so
+  concurrent misses coalesce; commits the batched-sweep qps floor, a p99
+  ceiling and a mean-batch-size floor (coalescing actually happening).
+* **search-fallback** — fresh queries against a 16-node machine whose
+  composition space (~1.07e10) exceeds any sweep; answered by
+  advisor-warm-started branch and bound.
+* **mixed** — a 1000-query hit/miss/search stream over warmed machines;
+  commits qps + p99 AND ``max_retraces = 0``: steady-state serving must
+  not retrace, whatever the stream's batching pattern.
+
+Run directly:
+
+    PYTHONPATH=src python benchmarks/advisor_serve.py [--json OUT.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+
+def serve_records(
+    *,
+    n_hot: int = 32,
+    n_hits: int = 2000,
+    n_miss: int = 256,
+    n_search: int = 4,
+    n_mixed: int = 1000,
+    max_batch: int = 8,
+    max_wait_ms: float = 2.0,
+    workers: int = 4,
+) -> list[dict]:
+    from repro.core.numa import E7_4830_V3, make_machine
+    from repro.launch.advisor_serve import (
+        drive_async,
+        drive_threads,
+        mixed_stream,
+        signature_pool,
+    )
+    from repro.serve import AdvisorService
+
+    service = AdvisorService(
+        max_batch=max_batch, max_wait_s=max_wait_ms / 1e3
+    )
+    sweep_fp = service.register(E7_4830_V3)
+    m16 = make_machine(
+        "snc2-8s", sockets=8, cores_per_socket=8, nodes_per_socket=2,
+        qpi_bw=25.6e9,
+    )
+    search_fp = service.register(m16)
+
+    hot = signature_pool(n_hot, seed=0)
+    miss_sigs = signature_pool(n_miss, seed=7)
+    mixed_fresh = signature_pool(n_mixed, seed=11)
+    search_sigs = signature_pool(max(2, n_search), seed=13)
+
+    # -- warmup: trace each group's single steady-state shape, pre-answer
+    # the hot set, and warm the search path (fit + B&B jit caches)
+    service.warmup(sweep_fp, 24)
+    for sig in hot:
+        service.query(sweep_fp, sig, 24)
+    service.query(search_fp, search_sigs[0], 32)
+    service.metrics.reset(keep_traces=True)
+
+    records: list[dict] = []
+
+    def phase_record(sweep: str, n_queries: int, wall: float,
+                     tier: str) -> dict:
+        snap = service.metrics.snapshot()
+        rec = {
+            "sweep": sweep,
+            "queries": n_queries,
+            "qps": round(n_queries / wall, 1),
+            "wall_s": round(wall, 4),
+            "p50_ms": round(snap.get(f"{tier}_p50_ms", float("nan")), 4),
+            "p99_ms": round(snap.get(f"{tier}_p99_ms", float("nan")), 4),
+            "retraces": snap["retraces"],
+        }
+        if tier == "batch":
+            rec["mean_batch_size"] = round(snap["mean_batch_size"], 2)
+        service.metrics.reset(keep_traces=True)
+        return rec
+
+    # -- phase 1: cache hits (closed-loop threads over the hot set)
+    stream = [
+        (sweep_fp, hot[i % n_hot], 24) for i in range(n_hits)
+    ]
+    _, wall = drive_threads(service, stream, n_workers=workers)
+    records.append(
+        phase_record("advisor-serve cache-hit", n_hits, wall, "cache")
+    )
+
+    # -- phase 2: batched misses (open-loop submit, coalesced)
+    stream = [(sweep_fp, sig, 24) for sig in miss_sigs]
+    _, wall = drive_async(service, stream)
+    records.append(
+        phase_record("advisor-serve miss-batched", n_miss, wall, "batch")
+    )
+
+    # -- phase 3: search fallback (fresh signatures, warm search path)
+    stream = [(search_fp, sig, 32) for sig in search_sigs[:n_search]]
+    _, wall = drive_threads(service, stream, n_workers=2)
+    records.append(
+        phase_record("advisor-serve search-fallback", n_search, wall, "search")
+    )
+
+    # -- phase 4: mixed 1k-query stream; the retrace counter must stay 0
+    stream = mixed_stream(
+        hot, mixed_fresh, search_sigs[:n_search], n_mixed,
+        sweep_target=(sweep_fp, 24), search_target=(search_fp, 32),
+        hit_fraction=0.8, search_fraction=0.02,
+    )
+    snap_before = service.metrics.snapshot()
+    _, wall = drive_threads(service, stream, n_workers=workers)
+    snap = service.metrics.snapshot()
+    rec = {
+        "sweep": "advisor-serve mixed",
+        "queries": n_mixed,
+        "qps": round(n_mixed / wall, 1),
+        "wall_s": round(wall, 4),
+        "p50_ms": round(snap["p50_ms"], 4),
+        "p99_ms": round(snap["p99_ms"], 4),
+        "retraces": snap["retraces"] - snap_before["retraces"],
+        "hit_rate": round(snap["tier_counts"]["cache"] / n_mixed, 3),
+        "tier_counts": snap["tier_counts"],
+        "mean_batch_size": round(snap["mean_batch_size"], 2),
+    }
+    records.append(rec)
+
+    service.close()
+    return records
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--json",
+        type=Path,
+        default=None,
+        help="write results as a JSON artifact (for CI upload/trending)",
+    )
+    args = parser.parse_args()
+
+    records = serve_records()
+    for rec in records:
+        print(f"{rec['sweep']}:")
+        for k, v in rec.items():
+            if k != "sweep":
+                print(f"  {k}: {v}")
+
+    if args.json is not None:
+        args.json.parent.mkdir(parents=True, exist_ok=True)
+        args.json.write_text(json.dumps(records, indent=2) + "\n")
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -17,7 +17,12 @@ exits non-zero when, on any sweep,
   the optimizer's *regret* against the best-known reference exceeds the
   committed ``max_regret_pct``, or its warm *time-to-solution* exceeds
   the committed ``max_time_to_solution_s`` (the 16-node record's < 1 s
-  floor is the searchable-without-enumeration acceptance bar).
+  floor is the searchable-without-enumeration acceptance bar); or
+* on an ``advisor-serve`` record (``benchmarks/advisor_serve.py``),
+  service qps falls below ``min_qps``, p99 latency exceeds
+  ``max_p99_ms``, the mixed stream's jit retrace counter exceeds
+  ``max_retraces`` (committed as 0), or micro-batch coalescing degrades
+  below ``min_mean_batch_size``.
 
 The looser relative ``--min-pps-ratio`` floor (default 0 = disabled)
 remains for local use.  ``--summary`` appends a one-line
@@ -60,6 +65,59 @@ def check(
         rec = new_by_sweep.get(sweep)
         if rec is None:
             failures.append(f"{sweep!r}: missing from the new artifact")
+            continue
+        if "min_qps" in base:
+            # advisor-serve record (benchmarks/advisor_serve.py): gate
+            # service throughput against the committed absolute qps floor,
+            # tail latency against the p99 ceiling, and — on the mixed
+            # stream — the jit retrace counter against max_retraces (0:
+            # steady-state serving must never retrace).  Floors are set
+            # with CI-runner headroom like min_placements_per_sec; the
+            # cache-hit floor sits >= 10x the miss-path floor by
+            # construction (the acceptance bar for the answer cache).
+            qps, floor = rec["qps"], base["min_qps"]
+            status = "OK" if qps >= floor else "FAIL"
+            print(f"{sweep}: {qps:.0f} qps (floor {floor:.0f}) [{status}]")
+            if qps < floor:
+                failures.append(
+                    f"{sweep!r}: {qps:.0f} qps below the committed floor "
+                    f"{floor:.0f} (serve fast path lost?)"
+                )
+            cap = base.get("max_p99_ms")
+            if cap is not None:
+                p99 = rec["p99_ms"]
+                status = "OK" if p99 <= cap else "FAIL"
+                print(f"{sweep}: p99 {p99:.3f}ms (max {cap}ms) [{status}]")
+                if p99 > cap:
+                    failures.append(
+                        f"{sweep!r}: p99 {p99:.3f}ms above the committed "
+                        f"ceiling {cap}ms"
+                    )
+            cap = base.get("max_retraces")
+            if cap is not None:
+                retraces = rec["retraces"]
+                status = "OK" if retraces <= cap else "FAIL"
+                print(
+                    f"{sweep}: {retraces} retraces (max {cap}) [{status}]"
+                )
+                if retraces > cap:
+                    failures.append(
+                        f"{sweep!r}: {retraces} jit retraces at steady "
+                        f"state (max {cap}) — a serve shape is varying"
+                    )
+            floor = base.get("min_mean_batch_size")
+            if floor is not None:
+                mean = rec["mean_batch_size"]
+                status = "OK" if mean >= floor else "FAIL"
+                print(
+                    f"{sweep}: mean batch {mean:.2f} (floor {floor}) "
+                    f"[{status}]"
+                )
+                if mean < floor:
+                    failures.append(
+                        f"{sweep!r}: mean batch size {mean:.2f} below "
+                        f"{floor} (micro-batch coalescing lost?)"
+                    )
             continue
         if "regret_pct" in base:
             # placement-search record: gate optimizer regret against the

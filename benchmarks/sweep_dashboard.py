@@ -98,12 +98,19 @@ def aggregate(runs: list[dict]) -> dict[str, dict]:
     added later simply have shorter series).  ``placement-search``
     records (``regret_pct`` / ``time_to_solution_s`` instead of error /
     throughput — see ``benchmarks/placement_search.py``) aggregate into
-    ``regret`` / ``tts`` series instead."""
+    ``regret`` / ``tts`` series instead, and ``advisor-serve`` records
+    (``benchmarks/advisor_serve.py``) into ``qps`` / ``p99`` series."""
     series: dict[str, dict] = {}
     for run in runs:
         by_sweep = {rec["sweep"]: rec for rec in run["records"]}
         for sweep, rec in by_sweep.items():
-            if "regret_pct" in rec:
+            if "qps" in rec:
+                s = series.setdefault(
+                    sweep, {"qps": [], "p99": [], "runs": []}
+                )
+                s["qps"].append(float(rec["qps"]))
+                s["p99"].append(float(rec.get("p99_ms", 0.0)))
+            elif "regret_pct" in rec:
                 s = series.setdefault(
                     sweep, {"regret": [], "tts": [], "runs": []}
                 )
@@ -122,7 +129,8 @@ def aggregate(runs: list[dict]) -> dict[str, dict]:
 def render_markdown(series: dict[str, dict]) -> str:
     """The dashboard: one row per sweep with the latest median error, the
     delta against the previous run, series extremes and a sparkline;
-    placement-search rows trend regret and warm time-to-solution."""
+    placement-search rows trend regret and warm time-to-solution;
+    advisor-serve rows trend phase qps and p99 latency."""
     sweeps = sorted(k for k, s in series.items() if "errors" in s)
     searches = sorted(k for k, s in series.items() if "regret" in s)
     lines = [
@@ -170,6 +178,23 @@ def render_markdown(series: dict[str, dict]) -> str:
             lines.append(
                 f"| {sweep} | {len(regret)} | {regret[-1]:.4f} "
                 f"| {max(regret):.4f} | {tts[-1]:.3f} | `{sparkline(tts)}` |"
+            )
+    serves = sorted(k for k, s in series.items() if "qps" in s)
+    if serves:
+        lines += [
+            "",
+            "Advisor service (throughput + tail latency per phase; qps "
+            "floors, p99 ceilings and the zero-retrace bar are gated):",
+            "",
+            "| phase | runs | qps (latest) | x vs first run | p99 ms (latest) | worst p99 | trend (qps) |",
+            "| --- | ---: | ---: | ---: | ---: | ---: | --- |",
+        ]
+        for sweep in serves:
+            qps, p99 = series[sweep]["qps"], series[sweep]["p99"]
+            ratio = f"x{qps[-1] / qps[0]:.1f}" if qps[0] else "–"
+            lines.append(
+                f"| {sweep} | {len(qps)} | {qps[-1]:,.0f} | {ratio} "
+                f"| {p99[-1]:.3f} | {max(p99):.3f} | `{sparkline(qps)}` |"
             )
     return "\n".join(lines) + "\n"
 

@@ -18,6 +18,7 @@ from here.
 from repro.core.graphtop.graph import (
     LinkGraph,
     LinkGroups,
+    all_shortest_routes,
     all_widest_routes,
     from_bandwidth_matrix,
     from_fit,
@@ -35,6 +36,7 @@ from repro.core.graphtop.graph import (
 __all__ = [
     "LinkGraph",
     "LinkGroups",
+    "all_shortest_routes",
     "all_widest_routes",
     "from_bandwidth_matrix",
     "from_fit",

@@ -92,16 +92,37 @@ class LinkGraph(NamedTuple):
         """``(n, n)`` int hop counts (0 on the diagonal)."""
         return _hop_matrix(self)
 
-    def route_incidence(self, *, multipath: bool = False) -> np.ndarray:
+    def route_incidence(
+        self, *, multipath: bool = False, weighting: str = "equal"
+    ) -> np.ndarray:
         """``(n*n, n_links)`` float32 matrix ``R`` with ``R[i*n+j, l] = 1``
         iff link ``l`` is on the route ``i -> j``.  Charging per-link usage
         is then one matmul: ``flows.reshape(-1, n*n) @ R``.  With
-        ``multipath=True`` each pair's flow splits evenly over all of its
-        equal-hop equal-bottleneck routes, so entries become fractional
-        (``1/k`` per route crossing the link); the default single-route
-        table is unchanged bit-for-bit."""
+        ``multipath=True`` each pair's flow splits over its equal-hop
+        routes, so entries become fractional; ``weighting`` picks the
+        split:
+
+        * ``"equal"`` (default) — ``1/k`` over the equal-hop
+          *equal-bottleneck* (widest-tie) route set, bit-for-bit the
+          historical table;
+        * ``"bottleneck"`` — over ALL equal-hop shortest routes, each
+          weighted by its bottleneck link bandwidth (a route through a
+          thin link carries proportionally less of the pair's flow —
+          ECMP with unequal-cost shares).  With all-equal route
+          bottlenecks this coincides with ``"equal"`` over the same set.
+
+        The default single-route table is unchanged bit-for-bit."""
         if multipath:
-            return _route_incidence_multipath(self)
+            if weighting == "equal":
+                return _route_incidence_multipath(self)
+            if weighting == "bottleneck":
+                return _route_incidence_bottleneck(self)
+            raise ValueError(
+                f"unknown multipath weighting {weighting!r} "
+                "(expected 'equal' or 'bottleneck')"
+            )
+        if weighting != "equal":
+            raise ValueError("weighting requires multipath=True")
         return _route_incidence(self, multihop_only=False)
 
     def route_incidence_multihop(self) -> np.ndarray:
@@ -110,20 +131,41 @@ class LinkGraph(NamedTuple):
         endpoint-pair traffic every link always carries."""
         return _route_incidence(self, multihop_only=True)
 
-    def directed_route_incidence(self, *, multipath: bool = False) -> np.ndarray:
+    def directed_route_incidence(
+        self, *, multipath: bool = False, weighting: str = "equal"
+    ) -> np.ndarray:
         """``(n*n, 2 * n_links)`` float32 incidence over *directed* link
         slots: column ``2l`` is link ``l`` traversed in canonical
         (low-id -> high-id) direction, ``2l + 1`` the reverse.  Full-duplex
         fabrics (ICI, NVLink) charge each direction against the link's full
         capacity; half-duplex consumers can fold the two columns.  With
-        ``multipath=True`` entries are the fractional multipath split."""
-        return _directed_route_incidence(self, multipath=multipath)
+        ``multipath=True`` entries are the fractional multipath split
+        (``weighting`` as in :meth:`route_incidence`: equal over widest
+        ties, or bottleneck-bandwidth-proportional over all shortest
+        routes)."""
+        if weighting not in ("equal", "bottleneck"):
+            raise ValueError(
+                f"unknown multipath weighting {weighting!r} "
+                "(expected 'equal' or 'bottleneck')"
+            )
+        if weighting == "bottleneck" and not multipath:
+            raise ValueError("weighting requires multipath=True")
+        return _directed_route_incidence(
+            self, multipath=multipath, weighting=weighting
+        )
 
     def all_routes(self, i: int, j: int) -> tuple[tuple[int, ...], ...]:
         """Every equal-hop route from ``i`` to ``j`` whose bottleneck
         bandwidth ties the widest-shortest optimum (deterministic order;
         the primary ``route(i, j)`` is always among them)."""
         return all_widest_routes(self)[i * self.n_nodes + j]
+
+    def all_shortest_routes_of(self, i: int, j: int) -> tuple[tuple[int, ...], ...]:
+        """Every equal-hop shortest route from ``i`` to ``j`` regardless
+        of bottleneck bandwidth — the route set bottleneck-weighted
+        multipath splits over (:meth:`route_incidence` with
+        ``weighting="bottleneck"``)."""
+        return all_shortest_routes(self)[i * self.n_nodes + j]
 
     def validate(self) -> None:
         n = self.n_nodes
@@ -202,6 +244,38 @@ def _route_incidence_multipath(graph: LinkGraph) -> np.ndarray:
     return R
 
 
+def _route_shares(
+    graph: LinkGraph, alts: tuple[tuple[int, ...], ...]
+) -> list[float]:
+    """Bottleneck-proportional flow shares over a route set: route ``r``
+    carries ``bottleneck(r) / sum_r' bottleneck(r')`` of the pair's flow.
+    Equal bottlenecks reduce to the even ``1/k`` split."""
+    widths = [
+        min((graph.link_bw[l] for l in r), default=float("inf")) for r in alts
+    ]
+    total = sum(widths)
+    return [w / total for w in widths]
+
+
+@lru_cache(maxsize=128)
+def _route_incidence_bottleneck(graph: LinkGraph) -> np.ndarray:
+    """Unequal ECMP: split each pair's flow over ALL its equal-hop
+    shortest routes, weighted by route bottleneck bandwidth — a route
+    whose narrowest link is 10x thinner carries 10x less flow, instead of
+    being either excluded (widest-tie equal split) or charged evenly."""
+    n = graph.n_nodes
+    R = np.zeros((n * n, graph.n_links), np.float32)
+    routes = all_shortest_routes(graph)
+    for pair, alts in enumerate(routes):
+        if not alts:
+            continue
+        for r, share in zip(alts, _route_shares(graph, alts)):
+            for l in r:
+                R[pair, l] += share
+    R.setflags(write=False)
+    return R
+
+
 def _walk_directions(graph: LinkGraph, src: int, route: tuple[int, ...]):
     """Yield ``(link, direction)`` along ``route`` from ``src``: direction
     0 traverses the link low-id -> high-id, 1 the reverse."""
@@ -217,19 +291,29 @@ def _walk_directions(graph: LinkGraph, src: int, route: tuple[int, ...]):
 
 
 @lru_cache(maxsize=128)
-def _directed_route_incidence(graph: LinkGraph, *, multipath: bool) -> np.ndarray:
+def _directed_route_incidence(
+    graph: LinkGraph, *, multipath: bool, weighting: str = "equal"
+) -> np.ndarray:
     n = graph.n_nodes
     R = np.zeros((n * n, 2 * graph.n_links), np.float32)
     for i in range(n):
         for j in range(n):
-            alts = graph.all_routes(i, j) if multipath else (graph.route(i, j),)
+            if not multipath:
+                alts = (graph.route(i, j),)
+            elif weighting == "bottleneck":
+                alts = graph.all_shortest_routes_of(i, j)
+            else:
+                alts = graph.all_routes(i, j)
             alts = tuple(r for r in alts if r)
             if not alts:
                 continue
-            w = 1.0 / len(alts)
-            for r in alts:
+            if multipath and weighting == "bottleneck":
+                shares = _route_shares(graph, alts)
+            else:
+                shares = [1.0 / len(alts)] * len(alts)
+            for r, share in zip(alts, shares):
                 for l, d in _walk_directions(graph, i, r):
-                    R[i * n + j, 2 * l + d] += w
+                    R[i * n + j, 2 * l + d] += share
     R.setflags(write=False)
     return R
 
@@ -370,6 +454,61 @@ def all_widest_routes(graph: LinkGraph) -> tuple[tuple[tuple[int, ...], ...], ..
                 for prefix in routes_to(u):
                     if min((widths[k] for k in prefix), default=float("inf")) >= target:
                         acc.append(prefix + (l,))
+            memo[v] = tuple(acc)
+            return memo[v]
+
+        for dst in range(n):
+            if dst == src:
+                out.append(())
+            elif dst not in dist:
+                raise ValueError(f"node {dst} unreachable from {src}")
+            else:
+                out.append(routes_to(dst))
+    return tuple(out)
+
+
+@lru_cache(maxsize=64)
+def all_shortest_routes(graph: LinkGraph) -> tuple[tuple[tuple[int, ...], ...], ...]:
+    """For every ordered pair, ALL equal-hop shortest routes — no
+    bottleneck filtering (superset of :func:`all_widest_routes` per pair).
+    This is the route set unequal (bottleneck-weighted) multipath splits
+    over: a route through a thin link stays in the set and carries a
+    proportionally small share, where the widest-tie set would drop it
+    entirely.  Deterministic (predecessor-id, link-id) enumeration order,
+    same caveats on combinatorial torus route counts as
+    :func:`all_widest_routes`."""
+    n = graph.n_nodes
+    adj: list[list[tuple[int, int]]] = [[] for _ in range(n)]
+    for l, (i, j) in enumerate(graph.link_ends):
+        adj[i].append((j, l))
+        adj[j].append((i, l))
+    for nbrs in adj:
+        nbrs.sort()
+
+    out: list[tuple[tuple[int, ...], ...]] = []
+    for src in range(n):
+        dist = {src: 0}
+        frontier = [src]
+        while frontier:
+            nxt: list[int] = []
+            for u in frontier:
+                for v, _ in adj[u]:
+                    if v not in dist:
+                        dist[v] = dist[u] + 1
+                        nxt.append(v)
+            frontier = sorted(set(nxt))
+        memo: dict[int, tuple[tuple[int, ...], ...]] = {src: ((),)}
+
+        def routes_to(v: int) -> tuple[tuple[int, ...], ...]:
+            got = memo.get(v)
+            if got is not None:
+                return got
+            acc: list[tuple[int, ...]] = []
+            for u, l in adj[v]:
+                if dist.get(u) != dist[v] - 1:
+                    continue
+                for prefix in routes_to(u):
+                    acc.append(prefix + (l,))
             memo[v] = tuple(acc)
             return memo[v]
 

@@ -213,6 +213,7 @@ def rank_numa_placements(
     key=None,
     max_placements: int | None = None,
     top_k: int | None = None,
+    placements=None,
 ) -> list[PlacementRanking]:
     """Rank every one-thread-per-core placement of ``workload`` over
     ``machine``'s NUMA nodes (any node count, heterogeneous core rates
@@ -221,7 +222,10 @@ def rank_numa_placements(
 
     Profiling cost is exactly the paper's 2 runs (cached); ranking cost is
     one vmapped matrix evaluation over the candidate set — no simulation
-    or measurement per candidate.
+    or measurement per candidate.  ``placements`` overrides the candidate
+    set (an ``(P, s)`` array): callers that already hold an enumerated or
+    sampled set — the advisor service's per-machine placement cache, a
+    search warm start — rank it directly instead of re-enumerating.
     """
     from repro.core.numa.evaluate import enumerate_placements, fitted_signatures
 
@@ -229,9 +233,12 @@ def rank_numa_placements(
         machine, workload, noise_std=noise_std,
         keys=None if key is None else jnp.stack([key]),
     )
-    placements = enumerate_placements(
-        machine, workload.n_threads, max_placements=max_placements
-    )
+    if placements is None:
+        placements = enumerate_placements(
+            machine, workload.n_threads, max_placements=max_placements
+        )
+    else:
+        placements = jnp.asarray(placements)
     read_bpi = float(np.asarray(workload.read_bpi).mean())
     write_bpi = float(np.asarray(workload.write_bpi).mean())
     fracs, thrs = _placement_scores(

@@ -54,6 +54,7 @@ from repro.core.numa.simulator import (
 )
 from repro.core.numa.search import (
     SearchResult,
+    advisor_warm_seeds,
     branch_and_bound,
     exact_objectives,
     optimize_placement,
@@ -109,6 +110,7 @@ __all__ = [
     "symmetric_placement",
     "asymmetric_placement",
     "SearchResult",
+    "advisor_warm_seeds",
     "branch_and_bound",
     "exact_objectives",
     "optimize_placement",

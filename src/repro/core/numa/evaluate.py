@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import hashlib
 import random as _pyrandom
+import threading
 from functools import lru_cache, partial
 from typing import NamedTuple, Sequence
 
@@ -279,6 +280,28 @@ def _as_workload_list(
     return wl_list
 
 
+def _memo_get(cache: dict, lock: threading.RLock, key):
+    """LRU-touching lookup into an id-keyed memo cache: a hit re-inserts
+    the entry at the young end (python dicts preserve insertion order), so
+    hot keys survive eviction cycles.  Guarded by ``lock`` — the advisor
+    service hammers these memos from concurrent threads."""
+    with lock:
+        hit = cache.pop(key, None)
+        if hit is not None:
+            cache[key] = hit
+        return hit
+
+
+def _memo_put(cache: dict, lock: threading.RLock, key, value, max_entries: int):
+    """Bounded insert: evict oldest-first past ``max_entries`` (the memos
+    used to grow per distinct object id for the life of the process under
+    workloads that never repeat — the serving miss path is exactly that)."""
+    with lock:
+        cache[key] = value
+        while len(cache) > max_entries:
+            cache.pop(next(iter(cache)))
+
+
 def _stack_workloads(wl_list: Sequence[Workload]) -> tuple[Array, ...]:
     """Stack each array field over a leading benchmark axis.
 
@@ -286,21 +309,27 @@ def _stack_workloads(wl_list: Sequence[Workload]) -> tuple[Array, ...]:
     workloads alive, so ids cannot be recycled while a key is live):
     sweep/advisor loops re-evaluate the same suite hundreds of times and
     the ~40 small ``jnp.stack`` dispatches were a measurable slice of the
-    per-call wall time."""
+    per-call wall time.  LRU-bounded and lock-guarded (see
+    :func:`_memo_get`): unbounded id-keyed growth and torn eviction were
+    both real failure modes once the advisor service started calling this
+    from many threads."""
     key = tuple(id(w) for w in wl_list)
-    hit = _STACK_CACHE.get(key)
+    hit = _memo_get(_STACK_CACHE, _MEMO_LOCK, key)
     if hit is not None:
         return hit[1]
     stacked = tuple(
         jnp.stack(parts)
         for parts in zip(*(_workload_arrays(w) for w in wl_list))
     )
-    _STACK_CACHE[key] = (tuple(wl_list), stacked)
-    while len(_STACK_CACHE) > 64:
-        _STACK_CACHE.pop(next(iter(_STACK_CACHE)))
+    _memo_put(
+        _STACK_CACHE, _MEMO_LOCK, key, (tuple(wl_list), stacked),
+        _MEMO_CACHE_MAX,
+    )
     return stacked
 
 
+_MEMO_LOCK = threading.RLock()
+_MEMO_CACHE_MAX = 64
 _STACK_CACHE: dict[tuple, tuple] = {}
 
 
@@ -308,16 +337,17 @@ def _support_arrays(placements: Array) -> tuple[Array, Array]:
     """Device-ready ``(support, slab_id)`` for a placement batch, memoized
     on the batch object's identity (the value keeps the batch alive) —
     the host-side ``np.unique`` bucketing is pure overhead when the same
-    enumerated sweep is evaluated repeatedly."""
+    enumerated sweep is evaluated repeatedly.  Same LRU bound + lock as
+    :func:`_stack_workloads`."""
     key = id(placements)
-    hit = _SUPPORT_CACHE.get(key)
+    hit = _memo_get(_SUPPORT_CACHE, _MEMO_LOCK, key)
     if hit is not None:
         return hit[1]
     support, slab_id = support_patterns(placements)
     value = (jnp.asarray(support), jnp.asarray(slab_id))
-    _SUPPORT_CACHE[key] = (placements, value)
-    while len(_SUPPORT_CACHE) > 64:
-        _SUPPORT_CACHE.pop(next(iter(_SUPPORT_CACHE)))
+    _memo_put(
+        _SUPPORT_CACHE, _MEMO_LOCK, key, (placements, value), _MEMO_CACHE_MAX
+    )
     return value
 
 
@@ -512,12 +542,14 @@ def evaluate_batch(
         csigs_np = jax.tree.map(np.asarray, csigs)
         misfit_np = np.asarray(misfit)
         for i in missing:
-            _SIG_CACHE[cache_keys[i]] = (
-                _tree_index(sigs_np, i),
-                _tree_index(csigs_np, i),
-                misfit_np[i],
+            _cache_insert(
+                cache_keys[i],
+                (
+                    _tree_index(sigs_np, i),
+                    _tree_index(csigs_np, i),
+                    misfit_np[i],
+                ),
             )
-        _evict_cache_if_full()
     return result
 
 
@@ -543,6 +575,13 @@ def _accuracy_from_batch(batch: BatchAccuracy, i: int) -> AccuracyResult:
 
 _SIG_CACHE: dict[tuple, tuple[BandwidthSignature, BandwidthSignature, Array]] = {}
 _SIG_CACHE_MAX = 4096
+# One re-entrant lock serializes every _SIG_CACHE read-modify-write: the
+# LRU touch (pop + re-insert) and the eviction sweep are multi-step dict
+# mutations that interleave corruptly under free threading.  Fits are
+# idempotent, so two threads racing on the same *miss* just both compute
+# and the second insert wins — correctness never depends on the lock
+# covering the (long) jitted fit itself.
+_SIG_LOCK = threading.RLock()
 
 
 def _workload_fingerprint(wl: Workload) -> tuple:
@@ -578,21 +617,32 @@ def _evict_cache_if_full() -> None:
     hot keys migrate to the young end and survive eviction cycles — the
     previous behaviour of clearing the whole cache at the high-water mark
     threw away every hot signature with the cold ones)."""
-    while len(_SIG_CACHE) > _SIG_CACHE_MAX:
-        _SIG_CACHE.pop(next(iter(_SIG_CACHE)))
+    with _SIG_LOCK:
+        while len(_SIG_CACHE) > _SIG_CACHE_MAX:
+            _SIG_CACHE.pop(next(iter(_SIG_CACHE)))
 
 
 def _cache_lookup(cache_key: tuple):
-    """LRU-touching get: a hit moves the entry to the young (newest) end."""
-    value = _SIG_CACHE.pop(cache_key, None)
-    if value is not None:
+    """LRU-touching get: a hit moves the entry to the young (newest) end
+    (atomically — pop + re-insert under the cache lock)."""
+    with _SIG_LOCK:
+        value = _SIG_CACHE.pop(cache_key, None)
+        if value is not None:
+            _SIG_CACHE[cache_key] = value
+        return value
+
+
+def _cache_insert(cache_key: tuple, value) -> None:
+    """Locked insert + eviction sweep (the only way entries enter the
+    signature cache)."""
+    with _SIG_LOCK:
         _SIG_CACHE[cache_key] = value
-    return value
+        while len(_SIG_CACHE) > _SIG_CACHE_MAX:
+            _SIG_CACHE.pop(next(iter(_SIG_CACHE)))
 
 
 def _cache_signatures(machine, wl, noise_std, background_bw, key, value) -> None:
-    _SIG_CACHE[_cache_key(machine, wl, noise_std, background_bw, key)] = value
-    _evict_cache_if_full()
+    _cache_insert(_cache_key(machine, wl, noise_std, background_bw, key), value)
 
 
 @partial(
@@ -653,8 +703,7 @@ def fitted_signatures(
                 _tree_index(csigs, row),
                 mis[row],
             )
-            _SIG_CACHE[cache_keys[i]] = results[i]
-        _evict_cache_if_full()
+            _cache_insert(cache_keys[i], results[i])
     return [results[i] for i in range(len(wl_list))]
 
 

@@ -60,6 +60,7 @@ from repro.core.numa.simulator import (
     _group_multiplicities,
     _progressive_fill_structured,
     group_slab_components,
+    pad_rows,
     simulate_grouped_batch,
     split_caps,
     thread_class_starts,
@@ -122,13 +123,8 @@ def exact_objectives(
     if p.ndim == 1:
         p = p[None, :]
     n_rows = p.shape[0]
-    padded = 8
-    while padded < n_rows:
-        padded *= 2
-    if padded != n_rows:
-        p = np.concatenate([p, np.repeat(p[:1], padded - n_rows, axis=0)])
     out = _objective_batch_jit(
-        machine, tuple(workload[1:]), jnp.asarray(p), classes
+        machine, tuple(workload[1:]), jnp.asarray(pad_rows(p)), classes
     )
     return np.asarray(out)[:n_rows]
 
@@ -540,6 +536,46 @@ def _heuristic_seeds(machine: MachineSpec, n: int) -> list[np.ndarray]:
     return seeds
 
 
+def advisor_warm_seeds(
+    machine: MachineSpec,
+    workload: Workload,
+    *,
+    top_k: int = 8,
+    max_placements: int = 4096,
+    noise_std: float = 0.0,
+    key=None,
+) -> list[np.ndarray]:
+    """Incumbent seeds from the advisor's *signature-only* ranking
+    (:func:`repro.core.meshsig.advisor.rank_numa_placements`): the top-k
+    placements by the cheap roofline score, to be evaluated *exactly* by
+    the caller.  The ranking costs one cached 2-run fit plus a vmapped
+    matrix pass over (a sample of) the composition space — no simulation
+    per candidate — so it is a legitimate warm start even on machines
+    whose spaces cannot be enumerated (``max_placements`` caps the ranked
+    sample there).  The roofline is a heuristic, NOT admissible
+    (:func:`repro.core.meshsig.advisor.numa_placement_bounds`): seeds only
+    ever *raise* the incumbent, they never prune — so a warm start can
+    never worsen the certificate.
+
+    Returns no seeds when the thread count does not divide evenly over the
+    nodes: the 2-run fit needs the symmetric profiling placement, so the
+    ranking is unavailable and the caller falls back to its heuristic
+    seeds alone."""
+    from repro.core.meshsig.advisor import rank_numa_placements
+
+    if workload.n_threads % machine.n_nodes != 0:
+        return []
+    ranked = rank_numa_placements(
+        machine,
+        workload,
+        top_k=top_k,
+        max_placements=max_placements,
+        noise_std=noise_std,
+        key=key,
+    )
+    return [np.asarray(r.placement, np.int32) for r in ranked]
+
+
 def branch_and_bound(
     machine: MachineSpec,
     workload: Workload,
@@ -549,6 +585,8 @@ def branch_and_bound(
     max_nodes: int = 200_000,
     leaf_batch: int = 64,
     seed_placements: Sequence | None = None,
+    advisor_seeds: int = 0,
+    advisor_max_placements: int = 4096,
 ) -> SearchResult:
     """Best-first branch and bound over thread compositions.  Returns a
     placement whose exact work rate is within ``gap`` (relative) of the
@@ -559,7 +597,14 @@ def branch_and_bound(
     prefix value plus the suffix DP completion (both admissible — see
     :func:`placement_upper_bound`).  Leaves are evaluated exactly in
     jitted batches of ``leaf_batch``; pure-python everywhere else, so the
-    search itself never compiles anything new."""
+    search itself never compiles anything new.
+
+    ``advisor_seeds > 0`` warm-starts the incumbent from the advisor's
+    signature-only ranking (:func:`advisor_warm_seeds` top-k, evaluated
+    exactly alongside the heuristic seeds).  A better initial incumbent
+    tightens the prune level from the first pop, so the warm start can
+    only shrink the expanded tree — it never loosens the certificate
+    (seeds never prune; only exact evaluations move the incumbent)."""
     classes = _classes_for(workload, thread_classes)
     s = machine.n_nodes
     n = workload.n_threads
@@ -570,6 +615,15 @@ def branch_and_bound(
     value, suffix = tables.value, tables.suffix
 
     seeds = [np.asarray(p, np.int32) for p in (seed_placements or [])]
+    if advisor_seeds > 0:
+        seeds.extend(
+            advisor_warm_seeds(
+                machine,
+                workload,
+                top_k=advisor_seeds,
+                max_placements=advisor_max_placements,
+            )
+        )
     seeds.extend(_heuristic_seeds(machine, n))
     incumbent_p = seeds[0]
     vals = exact_objectives(machine, workload, np.stack(seeds), thread_classes=classes)

@@ -728,6 +728,34 @@ def _progressive_fill_structured(
     return jnp.where(frozen, x, 1.0)
 
 
+def bucket_size(n: int, *, base: int = 8) -> int:
+    """The padded batch size for ``n`` rows: the smallest power-of-two
+    bucket >= ``base`` that holds them.  Variable-size batches (search
+    leaf batches, the advisor service's micro-batches) jit one trace per
+    *bucket* instead of one per exact size, so steady-state serving stops
+    retracing as soon as every bucket has been seen once."""
+    if n < 0:
+        raise ValueError(f"cannot bucket {n} rows")
+    padded = base
+    while padded < n:
+        padded *= 2
+    return padded
+
+
+def pad_rows(rows: np.ndarray, *, base: int = 8) -> np.ndarray:
+    """Pad a row batch to its :func:`bucket_size` by repeating row 0 —
+    fixed jit shapes for variable batch sizes.  Callers slice the first
+    ``len(rows)`` outputs back out; the padding rows are real (repeated)
+    work, so results for them are well-defined and discarded."""
+    rows = np.asarray(rows)
+    padded = bucket_size(rows.shape[0], base=base)
+    if padded == rows.shape[0]:
+        return rows
+    return np.concatenate(
+        [rows, np.repeat(rows[:1], padded - rows.shape[0], axis=0)]
+    )
+
+
 def support_patterns(placements) -> tuple[np.ndarray, np.ndarray]:
     """Host-side bucketing of concrete placements by support pattern
     (which nodes hold any thread).  Returns the ``(n_buckets, s)`` 0/1

@@ -1,0 +1,20 @@
+"""Placement advisor as a service.
+
+Online query engine over the offline NUMA placement pipeline: a
+three-tier fast path (LRU answer cache → micro-batched grouped sweep →
+warm-started branch and bound) behind sync and async front ends, fully
+instrumented.  See :mod:`repro.serve.service` for the architecture.
+"""
+
+from repro.serve.cache import LRUCache
+from repro.serve.metrics import TIERS, ServiceMetrics
+from repro.serve.service import Advice, AdvisorService, QuerySignature
+
+__all__ = [
+    "Advice",
+    "AdvisorService",
+    "LRUCache",
+    "QuerySignature",
+    "ServiceMetrics",
+    "TIERS",
+]

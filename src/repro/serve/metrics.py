@@ -1,0 +1,152 @@
+"""Service instrumentation: per-tier counters, batch histogram, latency.
+
+Every query the :class:`~repro.serve.service.AdvisorService` answers is
+accounted here, per tier:
+
+* ``cache`` — tier-1 LRU answer-cache hits;
+* ``batch`` — tier-2 micro-batched ``simulate_grouped_batch`` misses;
+* ``search`` — tier-3 branch-and-bound fallbacks (machines too large to
+  sweep).
+
+Latencies land in preallocated per-tier numpy ring buffers (one float
+store per sample — the hit path never grows a list), and percentiles are
+computed lazily in :meth:`ServiceMetrics.snapshot`.  The *retrace
+counter* is the serving contract made measurable: the service registers
+every jit static key (machine fingerprint, thread classes, padded batch
+bucket, placement-table shape) it evaluates through, and a key seen for
+the first time is a retrace.  Steady-state serving — every bucket warmed
+— must hold this at zero across any query stream; CI and the service
+tests assert exactly that.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import Counter
+
+import numpy as np
+
+TIERS = ("cache", "batch", "search")
+
+
+class _LatencyRing:
+    """Fixed-size ring of the most recent latencies (seconds)."""
+
+    def __init__(self, capacity: int):
+        self._buf = np.zeros(capacity, np.float64)
+        self._n = 0  # total samples ever recorded
+
+    def record(self, seconds: float) -> None:
+        self._buf[self._n % self._buf.shape[0]] = seconds
+        self._n += 1
+
+    def values(self) -> np.ndarray:
+        return self._buf[: min(self._n, self._buf.shape[0])]
+
+    @property
+    def count(self) -> int:
+        return self._n
+
+
+class ServiceMetrics:
+    """Thread-safe counters for one :class:`AdvisorService`.
+
+    All mutation happens under one lock (the operations are a few hundred
+    nanoseconds; the cache-hit fast path stays far under the committed
+    qps floors with the lock in place).  ``snapshot`` returns plain
+    python/numpy values so callers can JSON-serialize it directly.
+    """
+
+    def __init__(self, latency_window: int = 16384):
+        self._lock = threading.Lock()
+        self._latency_window = latency_window
+        self.reset()
+
+    def reset(self, *, keep_traces: bool = False) -> None:
+        """Zero every counter.  ``keep_traces=True`` keeps the registered
+        jit-key set (but zeroes the retrace count): the steady-state idiom
+        — warm up, ``reset(keep_traces=True)``, serve, assert ``retraces
+        == 0`` — only a genuinely new shape counts after the reset."""
+        with getattr(self, "_lock", threading.Lock()):
+            self.tier_counts = {tier: 0 for tier in TIERS}
+            self.batch_sizes: Counter = Counter()
+            self.batch_calls = 0
+            self.retraces = 0
+            if not keep_traces or not hasattr(self, "_trace_keys"):
+                self._trace_keys: set = set()
+            self._latency = {
+                tier: _LatencyRing(self._latency_window) for tier in TIERS
+            }
+
+    # -- recording ---------------------------------------------------------
+
+    def record_query(self, tier: str, seconds: float) -> None:
+        with self._lock:
+            self.tier_counts[tier] += 1
+            self._latency[tier].record(seconds)
+
+    def record_batch(self, size: int) -> None:
+        with self._lock:
+            self.batch_calls += 1
+            self.batch_sizes[size] += 1
+
+    def register_trace(self, key) -> bool:
+        """Register a jit static key; returns True (and counts a retrace)
+        iff the key is new.  Call *before* dispatching the jitted
+        function so the counter reflects what jax is about to compile."""
+        with self._lock:
+            if key in self._trace_keys:
+                return False
+            self._trace_keys.add(key)
+            self.retraces += 1
+            return True
+
+    # -- reading -----------------------------------------------------------
+
+    def latency_percentiles(
+        self, tier: str | None = None, qs=(50.0, 99.0)
+    ) -> dict[str, float]:
+        """``{"p50": ..., "p99": ...}`` in seconds over the recent window
+        of one tier (or all tiers pooled when ``tier`` is None).  NaN when
+        no samples have been recorded."""
+        with self._lock:
+            if tier is None:
+                vals = np.concatenate(
+                    [ring.values() for ring in self._latency.values()]
+                )
+            else:
+                vals = self._latency[tier].values()
+        if vals.size == 0:
+            return {f"p{q:g}": float("nan") for q in qs}
+        return {f"p{q:g}": float(np.percentile(vals, q)) for q in qs}
+
+    def snapshot(self) -> dict:
+        """A JSON-ready view: per-tier counts and p50/p99 latency (ms),
+        batch-size histogram + mean, and the retrace counter."""
+        with self._lock:
+            counts = dict(self.tier_counts)
+            sizes = dict(sorted(self.batch_sizes.items()))
+            calls = self.batch_calls
+            retraces = self.retraces
+            lat = {
+                tier: ring.values().copy()
+                for tier, ring in self._latency.items()
+            }
+        out: dict = {
+            "queries": sum(counts.values()),
+            "tier_counts": counts,
+            "batch_calls": calls,
+            "batch_size_hist": sizes,
+            "retraces": retraces,
+        }
+        total = sum(n * size for size, n in sizes.items())
+        out["mean_batch_size"] = total / calls if calls else 0.0
+        for tier, vals in lat.items():
+            if vals.size:
+                out[f"{tier}_p50_ms"] = float(np.percentile(vals, 50)) * 1e3
+                out[f"{tier}_p99_ms"] = float(np.percentile(vals, 99)) * 1e3
+        pooled = np.concatenate(list(lat.values()))
+        if pooled.size:
+            out["p50_ms"] = float(np.percentile(pooled, 50)) * 1e3
+            out["p99_ms"] = float(np.percentile(pooled, 99)) * 1e3
+        return out

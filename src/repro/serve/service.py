@@ -1,0 +1,519 @@
+"""Placement advisor as a service: the micro-batched online query engine.
+
+The offline pipeline answers "where should these threads run?" by sweeping
+or searching a whole machine per call.  :class:`AdvisorService` turns that
+into an online query engine: callers submit ``(workload signature, machine
+fingerprint, thread budget)`` and get back a placement plus its predicted
+bandwidth and work rate, through a three-tier fast path:
+
+1. **cache** — a thread-safe bounded LRU (:class:`~repro.serve.cache.
+   LRUCache`) keyed on the canonicalized query.  The hit path is a dict
+   probe returning the already-allocated :class:`Advice` — no simulator
+   dispatch, no new answer object.
+2. **batch** — concurrent cache misses for the same ``(machine, thread
+   budget)`` group coalesce in a pending queue; a batcher thread drains a
+   group when it reaches ``max_batch`` or its oldest entry ages past
+   ``max_wait_s``, and answers the whole batch in ONE padded
+   :func:`~repro.core.numa.simulator.simulate_grouped_batch` sweep over
+   the group's cached placement table.  Workload rows are always padded to
+   exactly ``max_batch``, so each ``(machine, budget)`` group owns a
+   single jit trace — steady-state serving never retraces regardless of
+   how the stream batches (and a query's row is independent of its
+   batch-mates, so answers are bit-identical to serial evaluation).
+3. **search** — machines whose composition space exceeds ``sweep_limit``
+   fall back to :func:`~repro.core.numa.search.branch_and_bound`,
+   warm-started from the advisor's signature-only ranking
+   (``advisor_seeds``), off the batcher thread so searches never stall
+   micro-batching.
+
+Every tier is instrumented (:class:`~repro.serve.metrics.ServiceMetrics`):
+per-tier counts and p50/p99 latency, batch-size histogram, and the
+retrace counter the CI gate holds at zero across a warmed mixed stream.
+"""
+
+from __future__ import annotations
+
+import math
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.numa.evaluate import enumerate_placements
+from repro.core.numa.machine import MachineSpec
+from repro.core.numa.search import branch_and_bound
+from repro.core.numa.simulator import (
+    pad_rows,
+    simulate_grouped_batch,
+    support_patterns,
+)
+from repro.core.numa.workload import Workload, mixed_workload
+from repro.serve.cache import LRUCache
+from repro.serve.metrics import ServiceMetrics
+
+
+class QuerySignature(NamedTuple):
+    """The model-representable description of a workload — what the paper's
+    4-class signature carries, phrased as a query.  Uniform across threads
+    by construction (the serving contract: every thread shares the mix),
+    which also pins the jit thread-class refinement to ``(0,)`` for every
+    query, one ingredient of the no-retrace guarantee."""
+
+    read_mix: tuple[float, float, float]  # (static, local, per-thread)
+    write_mix: tuple[float, float, float]
+    read_bpi: float = 0.6
+    write_bpi: float = 0.2
+    static_socket: int = 0
+
+    def canonical(self) -> "QuerySignature":
+        """Round-trip through rounded floats so queries that differ only in
+        float noise (1/3 vs 0.333333) share a cache line."""
+        return QuerySignature(
+            tuple(round(float(v), 6) for v in self.read_mix),
+            tuple(round(float(v), 6) for v in self.write_mix),
+            round(float(self.read_bpi), 6),
+            round(float(self.write_bpi), 6),
+            int(self.static_socket),
+        )
+
+    def workload(self, n_threads: int, name: str = "serve") -> Workload:
+        return mixed_workload(
+            name,
+            n_threads,
+            read_mix=self.read_mix,
+            write_mix=self.write_mix,
+            read_bpi=self.read_bpi,
+            write_bpi=self.write_bpi,
+            static_socket=self.static_socket,
+        )
+
+
+@dataclass(frozen=True)
+class Advice:
+    """One answered query.  ``tier`` names the tier that *computed* the
+    answer; a later cache hit returns this same object (the metrics, not
+    the advice, record the serving path)."""
+
+    placement: tuple[int, ...]  # threads per NUMA node
+    predicted_bandwidth: float  # total bytes/s moved at this placement
+    objective: float  # work rate (instructions/s), the quantity maximized
+    tier: str  # "batch" | "search"
+    optimal: bool  # exhaustive sweep, or B&B certificate within its gap
+
+
+class _PlacementTable(NamedTuple):
+    """Per-``(machine, budget)`` candidate set, padded once at build time
+    so every batch against it reuses one trace."""
+
+    placements: jax.Array  # (P_pad, s) device-resident, power-of-two rows
+    placements_np: np.ndarray  # host copy for answer extraction
+    support: jax.Array  # (n_buckets, s)
+    slab_id: jax.Array  # (P_pad,)
+
+
+class _Pending(NamedTuple):
+    key: tuple  # full answer-cache key
+    sig: QuerySignature  # canonical
+    future: Future
+    t0: float  # enqueue time (monotonic) — anchors the batch deadline
+
+
+@partial(jax.jit, static_argnames=("machine", "thread_classes"))
+def _advise_batch_jit(
+    machine: MachineSpec,
+    wl_arrays: tuple,  # workload fields, each with a leading query axis W
+    placements: jax.Array,  # (P, s)
+    support: jax.Array,
+    slab_id: jax.Array,
+    thread_classes: tuple[int, ...],
+):
+    """One trace answers a whole micro-batch: vmap the shared-slab grouped
+    sweep over the query axis, argmax work rate per query, and read the
+    winner's total flow off the simulated matrices.  Rows are independent
+    (vmap forbids cross-batch interaction), so a query's answer does not
+    depend on its batch-mates — the service's determinism contract."""
+
+    def per_query(arrays):
+        wl = Workload("serve", *arrays)
+        sim = simulate_grouped_batch(
+            machine,
+            wl,
+            placements,
+            thread_classes=thread_classes,
+            support=support,
+            slab_id=slab_id,
+        )
+        obj = sim.instructions.sum(axis=1)  # (P,)
+        best = jnp.argmax(obj)
+        bandwidth = sim.read_flows[best].sum() + sim.write_flows[best].sum()
+        return best, obj[best], bandwidth
+
+    return jax.vmap(per_query)(wl_arrays)
+
+
+class AdvisorService:
+    """Online placement advisor over a registry of machines.
+
+    Thread-safe: any number of caller threads may :meth:`query` /
+    :meth:`submit` concurrently.  Answers are deterministic — bit-identical
+    to evaluating the same query serially — because batch rows never
+    interact and padding always lands on the same traced shape.
+
+    ``sweep_limit`` draws the tier-2/tier-3 line: a ``(machine, budget)``
+    whose full composition count exceeds it is answered by warm-started
+    branch and bound instead of an exhaustive sweep.
+    """
+
+    def __init__(
+        self,
+        *,
+        answer_capacity: int = 4096,
+        table_capacity: int = 16,
+        max_batch: int = 8,
+        max_wait_s: float = 0.002,
+        sweep_limit: int = 20_000,
+        search_gap: float = 0.05,
+        search_max_nodes: int = 50_000,
+        advisor_seeds: int = 8,
+        advisor_max_placements: int = 2048,
+        search_workers: int = 2,
+        metrics: ServiceMetrics | None = None,
+    ):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.max_batch = int(max_batch)
+        self.max_wait_s = float(max_wait_s)
+        self.sweep_limit = int(sweep_limit)
+        self.search_gap = float(search_gap)
+        self.search_max_nodes = int(search_max_nodes)
+        self.advisor_seeds = int(advisor_seeds)
+        self.advisor_max_placements = int(advisor_max_placements)
+        self.metrics = metrics if metrics is not None else ServiceMetrics()
+
+        self._machines: dict[str, MachineSpec] = {}
+        self._answers = LRUCache(answer_capacity)
+        self._tables = LRUCache(table_capacity)
+        self._cond = threading.Condition()
+        # group key (fingerprint, n_threads) -> FIFO of pending misses
+        self._pending: dict[tuple, list[_Pending]] = {}
+        # answer key -> Future, so concurrent identical misses compute once
+        self._inflight: dict[tuple, Future] = {}
+        self._closed = False
+        self._search_pool = ThreadPoolExecutor(
+            max_workers=max(1, int(search_workers)),
+            thread_name_prefix="advisor-search",
+        )
+        self._batcher = threading.Thread(
+            target=self._batch_loop, name="advisor-batcher", daemon=True
+        )
+        self._batcher.start()
+
+    # -- registry ------------------------------------------------------------
+
+    def register(self, machine: MachineSpec) -> str:
+        """Add a machine to the registry; returns its fingerprint (the
+        handle queries may use in place of the spec)."""
+        fp = machine.fingerprint()
+        with self._cond:
+            self._machines[fp] = machine
+        return fp
+
+    def _resolve(self, machine) -> tuple[MachineSpec, str]:
+        if isinstance(machine, str):
+            with self._cond:
+                spec = self._machines.get(machine)
+            if spec is None:
+                raise KeyError(f"unknown machine fingerprint {machine!r}")
+            return spec, machine
+        fp = self.register(machine)
+        return machine, fp
+
+    # -- public front ends ---------------------------------------------------
+
+    def query(self, machine, signature: QuerySignature, n_threads: int,
+              timeout: float | None = None) -> Advice:
+        """Synchronous ask-and-wait.  ``machine`` is a MachineSpec or a
+        registered fingerprint string."""
+        advice, future = self._lookup_or_dispatch(machine, signature, n_threads)
+        if advice is not None:
+            return advice
+        return future.result(timeout)
+
+    def submit(self, machine, signature: QuerySignature,
+               n_threads: int) -> Future:
+        """Async front end: returns a Future resolving to the
+        :class:`Advice` (already resolved on a cache hit)."""
+        advice, future = self._lookup_or_dispatch(machine, signature, n_threads)
+        if advice is not None:
+            future = Future()
+            future.set_result(advice)
+        return future
+
+    def _lookup_or_dispatch(self, machine, signature, n_threads):
+        t0 = time.perf_counter()
+        if self._closed:
+            raise RuntimeError("AdvisorService is closed")
+        spec, fp = self._resolve(machine)
+        sig = signature.canonical()
+        key = (fp, int(n_threads), sig)
+        hit = self._answers.get(key)
+        if hit is not None:
+            self.metrics.record_query("cache", time.perf_counter() - t0)
+            return hit, None
+        with self._cond:
+            # re-check under the dispatch lock: a batch completion inserts
+            # into the answer cache *before* retiring its in-flight future,
+            # so a key absent from both here is genuinely uncomputed
+            hit = self._answers.get(key)
+            if hit is not None:
+                self.metrics.record_query(
+                    "cache", time.perf_counter() - t0
+                )
+                return hit, None
+            future = self._inflight.get(key)
+            if future is None:
+                future = Future()
+                self._inflight[key] = future
+                if self.uses_search(spec, n_threads):
+                    self._search_pool.submit(
+                        self._run_search, spec, fp, int(n_threads), sig, key
+                    )
+                else:
+                    group = (fp, int(n_threads))
+                    self._pending.setdefault(group, []).append(
+                        _Pending(key, sig, future, time.perf_counter())
+                    )
+                    self._cond.notify_all()
+
+        def _record(f, t0=t0):
+            if f.cancelled() or f.exception() is not None:
+                return
+            self.metrics.record_query(
+                f.result().tier, time.perf_counter() - t0
+            )
+
+        future.add_done_callback(_record)
+        return None, future
+
+    # -- tier selection & placement tables ------------------------------------
+
+    def uses_search(self, machine: MachineSpec, n_threads: int) -> bool:
+        """True when the full composition space of ``n_threads`` over the
+        machine's nodes is too large to sweep (tier 3)."""
+        s = machine.n_nodes
+        return math.comb(int(n_threads) + s - 1, s - 1) > self.sweep_limit
+
+    def _table_for(self, machine: MachineSpec, fp: str,
+                   n_threads: int) -> _PlacementTable:
+        key = (fp, n_threads)
+        table = self._tables.get(key)
+        if table is not None:
+            return table
+        placements = np.asarray(
+            enumerate_placements(machine, n_threads), np.int32
+        )
+        padded = pad_rows(placements)
+        support, slab_id = support_patterns(padded)
+        table = _PlacementTable(
+            placements=jnp.asarray(padded),
+            placements_np=padded,
+            support=jnp.asarray(support),
+            slab_id=jnp.asarray(slab_id),
+        )
+        self._tables.put(key, table)
+        return table
+
+    # -- batch tier ------------------------------------------------------------
+
+    def _batch_loop(self) -> None:
+        while True:
+            with self._cond:
+                while not self._pending and not self._closed:
+                    self._cond.wait()
+                if not self._pending and self._closed:
+                    return
+                group = min(
+                    self._pending, key=lambda g: self._pending[g][0].t0
+                )
+                items = self._pending[group]
+                deadline = items[0].t0 + self.max_wait_s
+                now = time.perf_counter()
+                if (
+                    len(items) < self.max_batch
+                    and now < deadline
+                    and not self._closed
+                ):
+                    self._cond.wait(deadline - now)
+                    continue
+                take = items[: self.max_batch]
+                rest = items[self.max_batch:]
+                if rest:
+                    self._pending[group] = rest
+                else:
+                    del self._pending[group]
+            self._run_batch(group, take)
+
+    def _signature_rows(self, sig: QuerySignature, n: int) -> tuple:
+        ones = np.ones((n,), np.float32)
+        return (
+            ones * sig.read_mix[0],
+            ones * sig.read_mix[1],
+            ones * sig.read_mix[2],
+            ones * sig.write_mix[0],
+            ones * sig.write_mix[1],
+            ones * sig.write_mix[2],
+            ones * sig.read_bpi,
+            ones * sig.write_bpi,
+            np.asarray(sig.static_socket, np.int32),
+        )
+
+    def _stacked_arrays(self, sigs: list[QuerySignature], n: int) -> tuple:
+        """Stack per-query uniform workload rows and pad the query axis to
+        exactly ``max_batch`` by repeating the first row — one traced shape
+        per group, whatever the live batch size."""
+        rows = [self._signature_rows(sig, n) for sig in sigs]
+        stacked = tuple(np.stack(parts) for parts in zip(*rows))
+        return tuple(
+            jnp.asarray(pad_rows(arr, base=self.max_batch))
+            for arr in stacked
+        )
+
+    def _finish(self, key: tuple, future: Future, advice: Advice) -> None:
+        # answer cache first, in-flight retirement second: every moment a
+        # key is absent from the in-flight map it is present in the cache
+        self._answers.put(key, advice)
+        with self._cond:
+            self._inflight.pop(key, None)
+        future.set_result(advice)
+
+    def _fail(self, keys_futures, exc: BaseException) -> None:
+        with self._cond:
+            for key, _ in keys_futures:
+                self._inflight.pop(key, None)
+        for _, future in keys_futures:
+            if not future.done():
+                future.set_exception(exc)
+
+    def _run_batch(self, group: tuple, take: list[_Pending]) -> None:
+        fp, n_threads = group
+        try:
+            with self._cond:
+                machine = self._machines[fp]
+            table = self._table_for(machine, fp, n_threads)
+            arrays = self._stacked_arrays([it.sig for it in take], n_threads)
+            self.metrics.register_trace(self._trace_key(fp, n_threads, table))
+            best, obj, bandwidth = _advise_batch_jit(
+                machine, arrays, table.placements, table.support,
+                table.slab_id, (0,),
+            )
+            best = np.asarray(best)
+            obj = np.asarray(obj)
+            bandwidth = np.asarray(bandwidth)
+            self.metrics.record_batch(len(take))
+            for i, item in enumerate(take):
+                advice = Advice(
+                    placement=tuple(
+                        int(v) for v in table.placements_np[int(best[i])]
+                    ),
+                    predicted_bandwidth=float(bandwidth[i]),
+                    objective=float(obj[i]),
+                    tier="batch",
+                    optimal=True,
+                )
+                self._finish(item.key, item.future, advice)
+        except BaseException as exc:  # resolve waiters, keep the loop alive
+            self._fail([(it.key, it.future) for it in take], exc)
+
+    def _trace_key(self, fp: str, n_threads: int,
+                   table: _PlacementTable) -> tuple:
+        return (
+            fp,
+            n_threads,
+            self.max_batch,
+            int(table.placements.shape[0]),
+            int(table.support.shape[0]),
+        )
+
+    # -- search tier -----------------------------------------------------------
+
+    def _run_search(self, machine: MachineSpec, fp: str, n_threads: int,
+                    sig: QuerySignature, key: tuple) -> None:
+        future = self._inflight.get(key)
+        try:
+            wl = sig.workload(n_threads)
+            result = branch_and_bound(
+                machine,
+                wl,
+                gap=self.search_gap,
+                max_nodes=self.search_max_nodes,
+                advisor_seeds=self.advisor_seeds,
+                advisor_max_placements=self.advisor_max_placements,
+            )
+            # score the winner through the same jitted evaluator the batch
+            # tier uses, so objective/bandwidth are tier-independent
+            placement = np.asarray(result.placement, np.int32)[None, :]
+            padded = pad_rows(placement)
+            support, slab_id = support_patterns(padded)
+            table = _PlacementTable(
+                placements=jnp.asarray(padded),
+                placements_np=padded,
+                support=jnp.asarray(support),
+                slab_id=jnp.asarray(slab_id),
+            )
+            arrays = self._stacked_arrays([sig], n_threads)
+            self.metrics.register_trace(self._trace_key(fp, n_threads, table))
+            _, obj, bandwidth = _advise_batch_jit(
+                machine, arrays, table.placements, table.support,
+                table.slab_id, (0,),
+            )
+            advice = Advice(
+                placement=tuple(int(v) for v in result.placement),
+                predicted_bandwidth=float(np.asarray(bandwidth)[0]),
+                objective=float(np.asarray(obj)[0]),
+                tier="search",
+                optimal=result.optimal,
+            )
+            self._finish(key, future, advice)
+        except BaseException as exc:
+            self._fail([(key, future)], exc)
+
+    # -- warmup & lifecycle ------------------------------------------------------
+
+    def warmup(self, machine, n_threads: int,
+               signature: QuerySignature | None = None) -> Advice:
+        """Trace a ``(machine, budget)`` group's single steady-state jit
+        shape (and, on search-tier machines, the search path's caches) by
+        answering one query.  After warmup, the retrace counter stays flat
+        for ANY stream against this group — the shape never varies."""
+        sig = signature if signature is not None else QuerySignature(
+            (0.25, 0.25, 0.25), (0.25, 0.25, 0.25)
+        )
+        return self.query(machine, sig, n_threads)
+
+    def close(self, timeout: float | None = 5.0) -> None:
+        with self._cond:
+            if self._closed:
+                return
+            self._closed = True
+            self._cond.notify_all()
+        self._batcher.join(timeout)
+        self._search_pool.shutdown(wait=True)
+        with self._cond:
+            pending = [it for q in self._pending.values() for it in q]
+            self._pending.clear()
+        self._fail(
+            [(it.key, it.future) for it in pending],
+            RuntimeError("AdvisorService closed"),
+        )
+
+    def __enter__(self) -> "AdvisorService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -152,6 +152,70 @@ def test_directed_incidence_multipath_fractional():
     assert set(np.round(row[row > 0], 6)) == {0.5}
 
 
+def test_bottleneck_weighting_on_thin_link_ring():
+    # ring(4) link order is sorted endpoint pairs: (0,1),(0,3),(1,2),(2,3)
+    # — make (0,3) ten times thinner than the rest.  The 0 -> 2 pair has
+    # two 2-hop routes: {0,2} via node 1 (bottleneck 10) and {1,3} via
+    # node 3 (bottleneck 1).
+    r = G.ring(4, [10e9, 1e9, 10e9, 10e9])
+    assert r.link_ends == ((0, 1), (0, 3), (1, 2), (2, 3))
+    n = r.n_nodes
+    both = r.all_shortest_routes_of(0, 2)
+    assert sorted(frozenset(rt) for rt in both) == [{0, 2}, {1, 3}]
+    # widest-tie equal split drops the thin route entirely...
+    eq = r.route_incidence(multipath=True)[0 * n + 2]
+    assert eq.tolist() == [1.0, 0.0, 1.0, 0.0]
+    # ...bottleneck weighting keeps it at a 1/11 share
+    bn = r.route_incidence(multipath=True, weighting="bottleneck")
+    row = bn[0 * n + 2]
+    assert row == pytest.approx(
+        np.float32([10 / 11, 1 / 11, 10 / 11, 1 / 11])
+    )
+    # adjacent pairs have a single route either way
+    assert bn[0 * n + 1].tolist() == [1.0, 0.0, 0.0, 0.0]
+
+
+def test_bottleneck_weighting_equal_bandwidths_match_equal_split():
+    # all-equal bottlenecks: the shortest-route set == the widest-tie set
+    # and every share is 1/k — bit-for-bit the equal-split table
+    for g in (G.ring(6, 5e9), G.torus2d(3, 3, 5e9)):
+        eq = g.route_incidence(multipath=True)
+        bn = g.route_incidence(multipath=True, weighting="bottleneck")
+        assert np.array_equal(eq, bn)
+
+
+def test_bottleneck_weighting_default_table_unchanged():
+    r = G.ring(4, [10e9, 1e9, 10e9, 10e9])
+    # the single-route default is untouched by the new option: 0/1 rows
+    # following the widest-shortest primary routes
+    single = r.route_incidence()
+    assert set(np.unique(single)) <= {0.0, 1.0}
+    assert single[0 * 4 + 2].tolist() == [1.0, 0.0, 1.0, 0.0]
+    assert r.route_incidence(weighting="equal") is single  # same cache hit
+
+
+def test_bottleneck_weighting_argument_validation():
+    r = G.ring(4, 10e9)
+    with pytest.raises(ValueError, match="requires multipath"):
+        r.route_incidence(weighting="bottleneck")
+    with pytest.raises(ValueError, match="requires multipath"):
+        r.directed_route_incidence(weighting="bottleneck")
+    with pytest.raises(ValueError, match="unknown multipath weighting"):
+        r.route_incidence(multipath=True, weighting="widest")
+    with pytest.raises(ValueError, match="unknown multipath weighting"):
+        r.directed_route_incidence(multipath=True, weighting="widest")
+
+
+def test_directed_bottleneck_weighting_folds_to_undirected():
+    r = G.ring(4, [10e9, 1e9, 10e9, 10e9])
+    R = r.directed_route_incidence(multipath=True, weighting="bottleneck")
+    undirected = R[:, 0::2] + R[:, 1::2]
+    assert np.allclose(
+        undirected,
+        r.route_incidence(multipath=True, weighting="bottleneck"),
+    )
+
+
 # ---------------------------------------------------------------------------
 # NUMA wrapper: bit-for-bit compatibility pins
 # ---------------------------------------------------------------------------

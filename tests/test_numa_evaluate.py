@@ -68,3 +68,83 @@ def test_stability_across_machines():
     r = evaluate_stability(E5_2630_V3, E5_2699_V3, noise_std=0.01)
     assert r.mean_combined_pct < 6.8
     assert r.median_combined_pct < 4.2
+
+
+# ---------------------------------------------------------------------------
+# module caches: bounded, LRU, thread-safe (the advisor service calls this
+# module from many threads — unbounded or torn caches were real failures)
+# ---------------------------------------------------------------------------
+
+
+def test_signature_cache_is_bounded_with_lru_eviction():
+    from repro.core.numa import evaluate as ev
+
+    saved = dict(ev._SIG_CACHE)
+    try:
+        ev._SIG_CACHE.clear()
+        for i in range(ev._SIG_CACHE_MAX + 500):
+            ev._cache_insert(("synthetic", i), i)
+        assert len(ev._SIG_CACHE) == ev._SIG_CACHE_MAX
+        # oldest synthetic keys were evicted, newest survive
+        assert ("synthetic", 0) not in ev._SIG_CACHE
+        assert ("synthetic", ev._SIG_CACHE_MAX + 499) in ev._SIG_CACHE
+        # a hit refreshes recency: touch the current oldest, insert one
+        # more, and the touched entry must survive the sweep
+        oldest = next(iter(ev._SIG_CACHE))
+        assert ev._cache_lookup(oldest) is not None
+        ev._cache_insert(("synthetic", "tail"), 0)
+        assert oldest in ev._SIG_CACHE
+    finally:
+        ev._SIG_CACHE.clear()
+        ev._SIG_CACHE.update(saved)
+
+
+def test_workload_and_support_memos_are_bounded():
+    import jax.numpy as jnp
+
+    from repro.core.numa import evaluate as ev
+
+    for i in range(ev._MEMO_CACHE_MAX + 40):
+        wl = benchmark_workload("CG", 8)
+        ev._stack_workloads([wl])
+        placements = jnp.asarray(np.asarray([[8 - j, j] for j in range(3)]))
+        ev._support_arrays(placements)
+    assert len(ev._STACK_CACHE) <= ev._MEMO_CACHE_MAX
+    assert len(ev._SUPPORT_CACHE) <= ev._MEMO_CACHE_MAX
+    # memo hit returns the identical stacked value (id-keyed)
+    wl = benchmark_workload("CG", 8)
+    first = ev._stack_workloads([wl])
+    assert ev._stack_workloads([wl]) is first
+
+
+def test_memo_caches_survive_concurrent_hammer():
+    import threading
+
+    from repro.core.numa import evaluate as ev
+
+    errors = []
+
+    def worker(seed):
+        try:
+            for i in range(200):
+                ev._memo_put(
+                    ev._STACK_CACHE, ev._MEMO_LOCK, ("hammer", seed, i % 80),
+                    (None, i), ev._MEMO_CACHE_MAX,
+                )
+                ev._memo_get(
+                    ev._STACK_CACHE, ev._MEMO_LOCK,
+                    ("hammer", seed, (i * 13) % 80),
+                )
+                ev._cache_insert(("hammer-sig", seed, i % 80), i)
+                ev._cache_lookup(("hammer-sig", seed, (i * 7) % 80))
+        except Exception as exc:  # pragma: no cover
+            errors.append(exc)
+
+    threads = [threading.Thread(target=worker, args=(s,)) for s in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert len(ev._STACK_CACHE) <= ev._MEMO_CACHE_MAX
+    assert len(ev._SIG_CACHE) <= ev._SIG_CACHE_MAX

@@ -208,6 +208,72 @@ def test_optimizer_always_returns_feasible_placement(n_threads, seed):
 
 
 # ---------------------------------------------------------------------------
+# advisor warm start: seeds only raise the incumbent, never the certificate
+# ---------------------------------------------------------------------------
+
+
+def test_advisor_warm_seeds_are_feasible_rankings():
+    from repro.core.numa import advisor_warm_seeds
+
+    wl = benchmark_workload("CG", 12)
+    seeds = advisor_warm_seeds(E7_4830_V3, wl, top_k=5)
+    assert len(seeds) == 5
+    for p in seeds:
+        _assert_feasible(E7_4830_V3, 12, p)
+    # seeds come ranked: the top seed's exact value is the best of the five
+    vals = np.asarray(exact_objectives(E7_4830_V3, wl, np.stack(seeds)))
+    assert vals[0] >= vals.max() * (1 - 1e-6)
+
+
+def test_advisor_warm_seeds_unavailable_without_symmetric_profiling():
+    from repro.core.numa import advisor_warm_seeds
+
+    # 10 threads over 4 nodes: the 2-run fit needs the symmetric run, so
+    # the ranking degrades to no seeds (and B&B still works off its
+    # heuristics)
+    wl = benchmark_workload("CG", 10)
+    assert advisor_warm_seeds(E7_4830_V3, wl) == []
+    b = branch_and_bound(E7_4830_V3, wl, advisor_seeds=4)
+    _assert_feasible(E7_4830_V3, 10, b.placement)
+
+
+def test_warm_start_never_worsens_certificate_on_easy_preset():
+    wl = benchmark_workload("CG", 24)
+    cold = branch_and_bound(E7_4830_V3, wl)
+    warm = branch_and_bound(E7_4830_V3, wl, advisor_seeds=8)
+    assert warm.optimal == cold.optimal
+    assert warm.objective >= cold.objective * (1 - REL)
+    assert warm.nodes_expanded <= cold.nodes_expanded
+
+
+def test_warm_start_shrinks_sixteen_node_tree():
+    # A bandwidth-starved heterogeneous 16-node SNC machine (fast/slow
+    # node pairs, thin links) sits past the root-certificate regime: the
+    # admissible bound is loose enough that cold B&B burns its whole node
+    # budget without certifying.  The advisor's signature-only ranking
+    # seeds the TRUE optimum, which meets the root bound — the warm run
+    # certifies global optimality with ZERO nodes expanded.  Warm start
+    # must never worsen either receipt (incumbent or tree size).
+    scale = 0.27
+    m16 = make_machine(
+        "snc2-8s-tight", sockets=8, cores_per_socket=8, nodes_per_socket=2,
+        qpi_bw=25.6e9 * scale, core_rate=(2.4e9, 1.6e9) * 8,
+        local_read_bw=(52e9 * scale, 26e9 * scale) * 8,
+        local_write_bw=(28e9 * scale, 14e9 * scale) * 8,
+    )
+    wl = benchmark_workload("CG", 48)
+    cold = branch_and_bound(m16, wl, gap=0.0, max_nodes=4000)
+    warm = branch_and_bound(m16, wl, gap=0.0, max_nodes=4000, advisor_seeds=8)
+    _assert_feasible(m16, 48, warm.placement)
+    assert warm.objective >= cold.objective * (1 - REL)  # never worse
+    assert warm.nodes_expanded <= cold.nodes_expanded
+    # and on this preset the effect is total: budget exhausted vs certified
+    assert not cold.optimal and cold.nodes_expanded == 4000
+    assert warm.optimal and warm.nodes_expanded == 0
+    assert warm.objective > cold.objective * 1.01  # strictly better incumbent
+
+
+# ---------------------------------------------------------------------------
 # multipath (ECMP) option: default off bit-for-bit, effective under ECMP
 # ---------------------------------------------------------------------------
 

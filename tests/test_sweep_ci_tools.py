@@ -178,6 +178,86 @@ def test_gate_mixes_sweep_and_search_records(gate):
     assert len(failures) == 1 and "regret" in failures[0]
 
 
+def _serve_rec(sweep, qps=1000.0, p99=1.0, **extra):
+    return {"sweep": sweep, "queries": 100, "qps": qps, "p99_ms": p99, **extra}
+
+
+def _serve_base(sweep, **extra):
+    return _serve_rec(
+        sweep, min_qps=500.0, max_p99_ms=10.0, **extra
+    )
+
+
+def test_gate_serve_records_pass_within_limits(gate):
+    base = [_serve_base("serve-a", max_retraces=0, min_mean_batch_size=2.0)]
+    new = [_serve_rec("serve-a", qps=600.0, p99=9.0, retraces=0,
+                      mean_batch_size=4.0)]
+    assert gate.check(new, base, error_tolerance=0.25, min_pps_ratio=0.0) == []
+
+
+def test_gate_serve_records_fail_below_qps_floor(gate):
+    base = [_serve_base("serve-a")]
+    new = [_serve_rec("serve-a", qps=100.0)]
+    failures = gate.check(new, base, error_tolerance=0.25, min_pps_ratio=0.0)
+    assert len(failures) == 1 and "qps below the committed floor" in failures[0]
+
+
+def test_gate_serve_records_fail_above_p99_ceiling(gate):
+    base = [_serve_base("serve-a")]
+    new = [_serve_rec("serve-a", p99=25.0)]
+    failures = gate.check(new, base, error_tolerance=0.25, min_pps_ratio=0.0)
+    assert len(failures) == 1 and "p99" in failures[0]
+
+
+def test_gate_serve_records_fail_on_any_retrace(gate):
+    """The committed mixed-stream record pins ``max_retraces: 0`` — a
+    single steady-state jit retrace is a shape leak and must fail CI."""
+    base = [_serve_base("serve-mixed", max_retraces=0)]
+    ok = [_serve_rec("serve-mixed", retraces=0)]
+    assert gate.check(ok, base, error_tolerance=0.25, min_pps_ratio=0.0) == []
+    bad = [_serve_rec("serve-mixed", retraces=1)]
+    failures = gate.check(bad, base, error_tolerance=0.25, min_pps_ratio=0.0)
+    assert len(failures) == 1 and "retraces" in failures[0]
+
+
+def test_gate_serve_records_fail_below_mean_batch_floor(gate):
+    base = [_serve_base("serve-miss", min_mean_batch_size=2.0)]
+    bad = [_serve_rec("serve-miss", mean_batch_size=1.1)]
+    failures = gate.check(bad, base, error_tolerance=0.25, min_pps_ratio=0.0)
+    assert len(failures) == 1 and "coalescing" in failures[0]
+
+
+def test_gate_serve_record_never_trips_other_rules(gate):
+    """A serve record carries neither median_error_pct nor regret_pct —
+    it must be dispatched to the serve branch, not KeyError in another."""
+    base = [
+        dict(_rec("a", 0.05, pps=1000.0), min_placements_per_sec=800),
+        _search_rec("search-a", max_regret_pct=1.0, max_time_to_solution_s=1.0),
+        _serve_base("serve-a"),
+    ]
+    new = [
+        _rec("a", 0.05, pps=900.0),
+        _search_rec("search-a"),
+        _serve_rec("serve-a", qps=600.0),
+    ]
+    assert gate.check(new, base, error_tolerance=0.25, min_pps_ratio=0.0) == []
+
+
+def test_committed_baseline_cache_hit_floor_is_10x_miss_floor():
+    """ISSUE-8 acceptance: the committed cache-hit qps floor must sit at
+    least 10x above the miss-path floor (the answer cache has to be worth
+    an order of magnitude)."""
+    baseline = json.loads(
+        (Path(__file__).resolve().parents[1] / "benchmarks"
+         / "sweep_baseline.json").read_text()
+    )
+    by_sweep = {rec["sweep"]: rec for rec in baseline}
+    hit = by_sweep["advisor-serve cache-hit"]
+    miss = by_sweep["advisor-serve miss-batched"]
+    assert hit["min_qps"] >= 10 * miss["min_qps"]
+    assert by_sweep["advisor-serve mixed"]["max_retraces"] == 0
+
+
 def test_gate_main_missing_baseline_file(gate, tmp_path, monkeypatch):
     new_p = tmp_path / "new.json"
     new_p.write_text(json.dumps([_rec("a", 0.05)]))
@@ -287,3 +367,30 @@ def test_dashboard_trends_search_records(dashboard, tmp_path):
     assert "| search-a | 2 | 0.2000 | 0.2000 | 0.400 |" in md
     # the sweep table must not pick up the search record
     assert "| search-a | 1 |" not in md
+
+
+def test_dashboard_trends_serve_records(dashboard, tmp_path):
+    hist = tmp_path / "hist"
+    d = hist / "2026-01-01__run-a"
+    d.mkdir(parents=True)
+    (d / "advisor_serve.json").write_text(
+        json.dumps([_serve_rec("advisor-serve cache-hit", qps=50000.0, p99=0.1)])
+    )
+    current = tmp_path / "current.json"
+    current.write_text(
+        json.dumps([
+            _rec("a", 0.1),
+            _serve_rec("advisor-serve cache-hit", qps=100000.0, p99=0.05),
+        ])
+    )
+    runs = dashboard.load_history(hist, current)
+    series = dashboard.aggregate(runs)
+    assert series["advisor-serve cache-hit"]["qps"] == [50000.0, 100000.0]
+    assert series["advisor-serve cache-hit"]["p99"] == [0.1, 0.05]
+    assert series["a"]["errors"] == [0.1]
+    md = dashboard.render_markdown(series)
+    assert "Advisor service" in md
+    # fourth table row: qps latest, x2.0 vs first run, p99 latest + worst
+    assert "| advisor-serve cache-hit | 2 | 100,000 | x2.0 | 0.050 | 0.100 |" in md
+    # neither the sweep nor the search table picks up the serve record
+    assert "| advisor-serve cache-hit | 1 |" not in md
