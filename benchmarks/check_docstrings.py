@@ -1,0 +1,102 @@
+"""D1-style docstring gate for the public API (stdlib-only, no pydocstyle).
+
+Walks python packages with ``ast`` and fails when a *public* module,
+class, function, or method has no docstring — the pydocstyle D100-D103
+family, reimplemented on the stdlib because the CI container pins its
+environment (no ruff/pydocstyle to install).
+
+Public means: the module itself, and any ``def``/``class`` whose name
+does not start with ``_``, at module scope or inside a public class.
+Dunder methods and nested (function-local) definitions are exempt, as is
+anything under a private module path (a ``_``-prefixed package segment).
+
+Defaults to the packages whose docstrings the docs tree leans on —
+``src/repro/core/numa`` and ``src/repro/serve`` — and is wired into CI
+next to the test suite, so an undocumented public symbol fails the build.
+
+    PYTHONPATH=src python benchmarks/check_docstrings.py [PATHS ...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import sys
+from pathlib import Path
+
+DEFAULT_PATHS = ("src/repro/core/numa", "src/repro/serve")
+
+
+def _is_public(name: str) -> bool:
+    return not name.startswith("_")
+
+
+def _missing_in(node, path: Path, scope: str = "") -> list[str]:
+    """Recurse over public defs of one class/module body, reporting every
+    public definition whose first statement is not a docstring."""
+    findings = []
+    for child in ast.iter_child_nodes(node):
+        if not isinstance(
+            child, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
+        ):
+            continue
+        if not _is_public(child.name):
+            continue
+        kind = "class" if isinstance(child, ast.ClassDef) else (
+            "method" if scope else "function"
+        )
+        qualname = f"{scope}{child.name}"
+        if ast.get_docstring(child) is None:
+            findings.append(
+                f"{path}:{child.lineno}: public {kind} "
+                f"{qualname!r} has no docstring"
+            )
+        if isinstance(child, ast.ClassDef):
+            findings.extend(_missing_in(child, path, scope=f"{qualname}."))
+    return findings
+
+
+def check_file(path: Path) -> list[str]:
+    """All D1 findings for one file (module docstring + public defs)."""
+    tree = ast.parse(path.read_text(), filename=str(path))
+    findings = []
+    if ast.get_docstring(tree) is None:
+        findings.append(f"{path}:1: public module has no docstring")
+    findings.extend(_missing_in(tree, path))
+    return findings
+
+
+def check_paths(paths) -> list[str]:
+    """All findings across files/packages, skipping private path segments."""
+    findings = []
+    for root in paths:
+        root = Path(root)
+        files = [root] if root.is_file() else sorted(root.rglob("*.py"))
+        for f in files:
+            if any(part.startswith("_") and part != "__init__.py"
+                   for part in f.parts):
+                continue
+            findings.extend(check_file(f))
+    return findings
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "paths", nargs="*", default=list(DEFAULT_PATHS),
+        help="files or package directories to check "
+        f"(default: {' '.join(DEFAULT_PATHS)})",
+    )
+    args = parser.parse_args()
+    findings = check_paths(args.paths)
+    for line in findings:
+        print(line, file=sys.stderr)
+    if findings:
+        print(f"{len(findings)} public symbols missing docstrings",
+              file=sys.stderr)
+        raise SystemExit(1)
+    print(f"docstring check passed ({', '.join(map(str, args.paths))})")
+
+
+if __name__ == "__main__":
+    main()

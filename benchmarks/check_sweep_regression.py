@@ -22,7 +22,14 @@ exits non-zero when, on any sweep,
   service qps falls below ``min_qps``, p99 latency exceeds
   ``max_p99_ms``, the mixed stream's jit retrace counter exceeds
   ``max_retraces`` (committed as 0), or micro-batch coalescing degrades
-  below ``min_mean_batch_size``.
+  below ``min_mean_batch_size``; or
+* on a ``schedule-search`` record (``benchmarks/schedule_search.py``),
+  the scheduler's *gain* over the best static placement falls below the
+  committed ``min_static_gain_pct`` (the time axis must keep paying for
+  itself on phased workloads), exceeds ``max_gain_pct`` where committed
+  (the prohibitive-migration record must degrade to *exactly* the static
+  answer — gain 0), or warm time-to-solution exceeds the committed
+  ``max_time_to_solution_s``.
 
 The looser relative ``--min-pps-ratio`` floor (default 0 = disabled)
 remains for local use.  ``--summary`` appends a one-line
@@ -118,6 +125,46 @@ def check(
                         f"{sweep!r}: mean batch size {mean:.2f} below "
                         f"{floor} (micro-batch coalescing lost?)"
                     )
+            continue
+        if "min_static_gain_pct" in base:
+            # schedule-search record (benchmarks/schedule_search.py): gate
+            # the scheduler's gain over the best static placement against
+            # the committed floor (gains come from the model, not runner
+            # speed, so the floor is tight), the prohibitive-migration
+            # record's gain against its exact-zero ceiling, and warm
+            # time-to-solution against the absolute cap
+            gain, floor = rec["gain_pct"], base["min_static_gain_pct"]
+            status = "OK" if gain >= floor else "FAIL"
+            print(
+                f"{sweep}: gain {gain:.4f}% over static "
+                f"(floor {floor}%) [{status}]"
+            )
+            if gain < floor:
+                failures.append(
+                    f"{sweep!r}: schedule gain {gain:.4f}% below the "
+                    f"committed floor {floor}% (time axis lost?)"
+                )
+            cap = base.get("max_gain_pct")
+            if cap is not None:
+                status = "OK" if gain <= cap else "FAIL"
+                print(f"{sweep}: gain {gain:.4f}% (max {cap}%) [{status}]")
+                if gain > cap:
+                    failures.append(
+                        f"{sweep!r}: gain {gain:.4f}% above {cap}% — the "
+                        f"scheduler moved despite prohibitive migration cost"
+                    )
+            tts = rec["time_to_solution_s"]
+            cap = base.get("max_time_to_solution_s")
+            status = "OK" if cap is None or tts <= cap else "FAIL"
+            print(
+                f"{sweep}: time-to-solution {tts:.3f}s (max {cap}s) "
+                f"[{status}]"
+            )
+            if cap is not None and tts > cap:
+                failures.append(
+                    f"{sweep!r}: time-to-solution {tts:.3f}s above the "
+                    f"committed floor {cap}s"
+                )
             continue
         if "regret_pct" in base:
             # placement-search record: gate optimizer regret against the

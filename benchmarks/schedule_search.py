@@ -1,0 +1,161 @@
+"""Schedule-search benchmark: what the time axis buys, and how fast.
+
+The one-shot advisor answers "where should these threads run?"; the
+scheduler (``repro.core.numa.temporal.optimize_schedule``) answers it
+*per phase*, trading steady-state throughput against migration cost at
+every phase boundary.  This benchmark pins the two numbers that make the
+time axis worth shipping:
+
+* **gain** — on a phased workload whose per-phase optima differ, the
+  scheduler's total work must beat the best *static* placement (the
+  one-shot answer held for the whole horizon) by at least the committed
+  ``min_static_gain_pct`` whenever migration is cheap.  With migration
+  priced out the gain must collapse to exactly the static answer
+  (``gain_pct == 0`` — the DP's feasible set contains the static
+  trajectory, so it can never do worse); and
+* **time-to-solution** — the candidate-pool + DP/beam search must answer
+  inside the committed ``max_time_to_solution_s`` (warm, after one
+  compile pass), so ``advise_schedule`` stays interactive.
+
+Records are gated against ``benchmarks/sweep_baseline.json`` by
+``benchmarks/check_sweep_regression.py`` (a baseline record carrying
+``min_static_gain_pct`` selects the schedule branch of the gate).
+
+Run directly:
+
+    PYTHONPATH=src python benchmarks/schedule_search.py [--json OUT.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+
+def _flip_phases(n_threads: int, sockets: tuple[int, int], bpi: float = 5.0):
+    """Two static-heavy phases whose hot buffer flips between sockets —
+    the canonical workload the time axis exists for."""
+    from repro.core.numa import mixed_workload
+
+    return [
+        (
+            mixed_workload(
+                f"phase-s{s}", n_threads,
+                read_mix=(0.7, 0.1, 0.0), read_bpi=bpi, static_socket=s,
+            ),
+            5.0,
+        )
+        for s in sockets
+    ]
+
+
+def schedule_record(
+    label: str,
+    machine,
+    phases,
+    *,
+    model=None,
+    expect_static: bool = False,
+) -> dict:
+    """One benchmark record: warm schedule-search time plus the gain over
+    the best static placement (and, on ``expect_static`` records, the
+    degrade-to-static sanity number — the gain must be exactly zero)."""
+    from repro.core.numa.temporal import optimize_schedule, phased_workload
+
+    pw = phased_workload(label, phases)
+    optimize_schedule(machine, pw, model=model)  # compile + first solve
+    t0 = time.perf_counter()
+    res = optimize_schedule(machine, pw, model=model)
+    elapsed = time.perf_counter() - t0
+
+    return {
+        "sweep": label,
+        "machine": machine.name,
+        "n_nodes": machine.n_nodes,
+        "n_threads": pw.n_threads,
+        "phases": len(pw.phases),
+        "gain_pct": round(res.gain_pct, 4),
+        "time_to_solution_s": round(elapsed, 4),
+        "candidates": res.candidates,
+        "states_expanded": res.states_expanded,
+        "moved_threads": sum(res.schedule.moved_threads),
+        "moved_pages": sum(res.schedule.moved_pages),
+        "static_matches": res.gain_pct == 0.0 if expect_static else None,
+    }
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--json",
+        type=Path,
+        default=None,
+        help="write results as a JSON artifact (for CI upload/gating)",
+    )
+    args = parser.parse_args()
+
+    from repro.core.numa import E5_2630_V3, E7_4830_V3, mixed_workload
+    from repro.core.numa.temporal import MigrationModel
+
+    cheap = MigrationModel(thread_move_bytes=1e6, page_move_bytes=1e6)
+    prohibitive = MigrationModel(thread_move_bytes=1e13, page_move_bytes=1e13)
+
+    tri_phases = [
+        (
+            mixed_workload(
+                "tri-s0", 24, read_mix=(0.7, 0.1, 0.0), read_bpi=4.0,
+                static_socket=0,
+            ),
+            4.0,
+        ),
+        (
+            mixed_workload(
+                "tri-s2", 24, read_mix=(0.7, 0.1, 0.0), read_bpi=4.0,
+                static_socket=2,
+            ),
+            4.0,
+        ),
+        (
+            mixed_workload("tri-local", 24, read_mix=(0.1, 0.6, 0.1),
+                           read_bpi=4.0),
+            2.0,
+        ),
+    ]
+
+    records = [
+        schedule_record(
+            "schedule-search 2-socket flip (cheap migration)",
+            E5_2630_V3,
+            _flip_phases(8, (0, 1)),
+            model=cheap,
+        ),
+        schedule_record(
+            "schedule-search 2-socket flip (prohibitive migration)",
+            E5_2630_V3,
+            _flip_phases(8, (0, 1)),
+            model=prohibitive,
+            expect_static=True,
+        ),
+        schedule_record(
+            "schedule-search 4-socket 3-phase (cheap migration)",
+            E7_4830_V3,
+            tri_phases,
+            model=cheap,
+        ),
+    ]
+    for rec in records:
+        print(f"{rec['sweep']}:")
+        for k, v in rec.items():
+            if k != "sweep" and v is not None:
+                print(f"  {k}: {v}")
+
+    if args.json is not None:
+        args.json.parent.mkdir(parents=True, exist_ok=True)
+        args.json.write_text(json.dumps(records, indent=2) + "\n")
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

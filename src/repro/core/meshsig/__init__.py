@@ -18,6 +18,7 @@ from repro.core.meshsig.advisor import (
     CHIP_V5P,
     ChipSpec,
     MeshRanking,
+    advise_schedule,
     numa_placement_bounds,
     rank_meshes,
 )
@@ -37,6 +38,7 @@ __all__ = [
     "DeviceTopology",
     "HloAnalysis",
     "MeshRanking",
+    "advise_schedule",
     "analyze_hlo",
     "ici_torus2d",
     "ici_torus3d",

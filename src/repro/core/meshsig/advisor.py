@@ -259,6 +259,42 @@ def rank_numa_placements(
     ]
 
 
+def advise_schedule(
+    machine,
+    phased,
+    *,
+    model=None,
+    candidates_per_phase: int = 8,
+    beam_width: int = 24,
+    allow_page_placement: bool = True,
+):
+    """Schedule a phased workload: the time-axis sibling of
+    :func:`rank_numa_placements`.
+
+    Where the one-shot ranker answers "which placement for this
+    signature?", this answers "which placement *per phase*, and is
+    reconfiguring at each boundary worth its cost?" — delegating to
+    :func:`repro.core.numa.temporal.optimize_schedule` (candidate pool
+    through the grouped solver, DP/beam over phase boundaries, optional
+    page-placement states).  ``phased`` is a
+    :class:`~repro.core.numa.temporal.PhasedWorkload`; ``model`` a
+    :class:`~repro.core.numa.temporal.MigrationModel` (``None`` = default
+    byte costs, machine-derived boundary bandwidth).  Returns the full
+    :class:`~repro.core.numa.temporal.ScheduleSearchResult` — schedule,
+    best-static baseline, and ``gain_pct`` never below zero.
+    """
+    from repro.core.numa.temporal import optimize_schedule
+
+    return optimize_schedule(
+        machine,
+        phased,
+        model=model,
+        candidates_per_phase=candidates_per_phase,
+        beam_width=beam_width,
+        allow_page_placement=allow_page_placement,
+    )
+
+
 def numa_placement_bounds(machine, workload, placements, *, thread_classes=None):
     """Admissible per-placement upper bounds on total work rate
     (instructions/s), suitable for certifying search optimality.

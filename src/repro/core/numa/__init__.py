@@ -30,6 +30,7 @@ from repro.core.numa.topology import (
 )
 from repro.core.numa.machine import (
     MachineSpec,
+    canonical_bank_assignment,
     E5_2630_V3,
     E5_2630_V3_MIXED_DIMM,
     E5_2630_V3_THROTTLED,
@@ -61,6 +62,18 @@ from repro.core.numa.search import (
     placement_upper_bound,
     relaxed_work_rate,
 )
+from repro.core.numa.temporal import (
+    MigrationModel,
+    Phase,
+    PhasedWorkload,
+    Schedule,
+    ScheduleSearchResult,
+    evaluate_schedule,
+    follow_banks,
+    optimize_schedule,
+    phased_workload,
+    transition_cost,
+)
 from repro.core.numa.calibrate import (
     CalibrationParams,
     CalibrationResult,
@@ -88,6 +101,7 @@ __all__ = [
     "ring",
     "snc",
     "MachineSpec",
+    "canonical_bank_assignment",
     "E5_2630_V3",
     "E5_2630_V3_MIXED_DIMM",
     "E5_2630_V3_THROTTLED",
@@ -116,6 +130,16 @@ __all__ = [
     "optimize_placement",
     "placement_upper_bound",
     "relaxed_work_rate",
+    "MigrationModel",
+    "Phase",
+    "PhasedWorkload",
+    "Schedule",
+    "ScheduleSearchResult",
+    "evaluate_schedule",
+    "follow_banks",
+    "optimize_schedule",
+    "phased_workload",
+    "transition_cost",
     "CalibrationParams",
     "CalibrationResult",
     "CalibrationSamples",

@@ -87,6 +87,8 @@ def benchmark_workload(name: str, n_threads: int) -> Workload:
 
 
 def suite_names(include_violators: bool = True) -> list[str]:
+    """Names of the paper's Table 1 benchmarks (23 with the
+    assumption-violating ``"Page rank"`` included, 22 without)."""
     names = list(_SUITE)
     if include_violators:
         names.append("Page rank")
@@ -94,5 +96,6 @@ def suite_names(include_violators: bool = True) -> list[str]:
 
 
 def suite(n_threads: int, include_violators: bool = True) -> Iterable[Workload]:
+    """Yield every Table 1 benchmark as an ``n_threads``-thread workload."""
     for name in suite_names(include_violators):
         yield benchmark_workload(name, n_threads)

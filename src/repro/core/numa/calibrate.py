@@ -101,10 +101,12 @@ class CalibrationSamples(NamedTuple):
 
     @property
     def n_samples(self) -> int:
+        """Number of profiled placements in the sample set."""
         return int(self.placements.shape[0])
 
     @property
     def n_nodes(self) -> int:
+        """NUMA node count of the machine the samples came from."""
         return int(self.placements.shape[1])
 
 
@@ -120,6 +122,9 @@ class CalibrationParams(NamedTuple):
 
 
 class CalibrationResult(NamedTuple):
+    """A fitted machine plus the optimizer's receipts (loss trajectory,
+    seed-vs-final loss, and the raw parameters behind the spec)."""
+
     machine: MachineSpec  # the fitted spec (concrete, validated)
     params: CalibrationParams
     groups: LinkGroups

@@ -43,7 +43,7 @@ from repro.core.bwsig import (
     signature_distance,
 )
 from repro.core.numa.benchmarks import benchmark_workload, suite_names
-from repro.core.numa.machine import MachineSpec
+from repro.core.numa.machine import MachineSpec, canonical_bank_assignment
 from repro.core.numa.simulator import (
     profile_pair,
     simulate,
@@ -188,6 +188,10 @@ def sweep_placements(
 
 
 class AccuracyResult(NamedTuple):
+    """Fit-and-predict accuracy of the model on one workload: per-counter
+    prediction errors over a placement sweep, as fractions of run
+    bandwidth (the paper's §6.2 evaluation protocol)."""
+
     placements: Array  # (P, s)
     errors_read: Array  # (P, 2s) |pred-meas| as fraction of run bandwidth
     errors_write: Array  # (P, 2s)
@@ -384,7 +388,8 @@ def _fit_one(machine, arrays, prof_key, noise_std, background_bw, thread_classes
 @partial(
     jax.jit,
     static_argnames=(
-        "machine", "noise_std", "background_bw", "thread_classes", "multipath"
+        "machine", "noise_std", "background_bw", "thread_classes", "multipath",
+        "bank_assignment",
     ),
 )
 def _evaluate_batch_jit(
@@ -398,6 +403,7 @@ def _evaluate_batch_jit(
     background_bw: float,
     thread_classes: tuple[int, ...],
     multipath: bool = False,
+    bank_assignment: tuple[int, ...] | None = None,
 ):
     """One trace: vmap over benchmarks of (fit, then the shared-slab
     batched solver + batched noise/error tails).  ``thread_classes`` is
@@ -429,6 +435,7 @@ def _evaluate_batch_jit(
             support=support,
             slab_id=slab_id,
             multipath=multipath,
+            bank_assignment=bank_assignment,
         )
         read_flows, write_flows = sim.read_flows, sim.write_flows
         if noise_std > 0.0 or background_bw > 0.0:
@@ -485,6 +492,7 @@ def evaluate_batch(
     background_bw: float = 0.0,
     keys: Array | None = None,
     multipath: bool = False,
+    bank_assignment=None,
 ) -> BatchAccuracy:
     """Fit + predict every workload over every placement in ONE jitted,
     doubly-vmapped trace, bucketing the placements by support pattern so
@@ -495,6 +503,13 @@ def evaluate_batch(
     exactly like :func:`evaluate_accuracy` does); defaults to
     ``PRNGKey(0)`` per workload.  Output rows stay in the caller's
     placement order — bucketing is an internal gather, not a reorder.
+
+    ``bank_assignment`` applies one page placement to every simulated
+    placement (``None`` = node-local; see
+    :func:`repro.core.numa.machine.canonical_bank_assignment`).  The
+    2-run profiling fit is *not* re-pointed — signatures describe the
+    workload, not the placement — so cached signatures stay shared
+    across bank assignments.
     """
     wl_list = _as_workload_list(workloads)
     keys = _normalize_keys(keys, len(wl_list))
@@ -513,6 +528,7 @@ def evaluate_batch(
         float(background_bw),
         thread_class_starts(wl_list),
         multipath,
+        canonical_bank_assignment(machine, bank_assignment),
     )
     result = BatchAccuracy(
         placements=placements,
@@ -721,6 +737,9 @@ def evaluate_accuracy(
     key: Array | None = None,
     max_placements: int | None = None,
 ) -> AccuracyResult:
+    """Profile two placements, fit the bandwidth signature, and score its
+    counter predictions against simulated measurements over the full
+    placement sweep (§6.2: fit on 2 runs, predict the rest)."""
     if key is None:
         key = jax.random.PRNGKey(0)
     placements = sweep_placements(
@@ -747,6 +766,9 @@ def _default_suite_threads(machine: MachineSpec) -> int:
 
 
 class SuiteAccuracy(NamedTuple):
+    """Suite-level accuracy rollup: per-benchmark results plus the pooled
+    error distribution and its headline percentiles."""
+
     names: list[str]
     per_benchmark: dict[str, AccuracyResult]
     all_errors: np.ndarray  # every counter measurement's % error
@@ -790,6 +812,9 @@ def evaluate_suite(
 
 
 class StabilityResult(NamedTuple):
+    """Signature stability across machines: how much each benchmark's
+    fitted signature moves when refit on a different machine (§6.3)."""
+
     names: list[str]
     read_change: dict[str, float]
     write_change: dict[str, float]

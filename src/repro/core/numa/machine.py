@@ -91,6 +91,7 @@ class MachineSpec(NamedTuple):
 
     @property
     def total_cores(self) -> int:
+        """Cores machine-wide — the hard cap on thread count."""
         return self.sockets * self.cores_per_socket
 
     @property
@@ -100,10 +101,12 @@ class MachineSpec(NamedTuple):
 
     @property
     def cores_per_node(self) -> int:
+        """Placement slots per NUMA node (SNC splits a socket's cores)."""
         return self.cores_per_socket // self.nodes_per_socket
 
     @property
     def n_links(self) -> int:
+        """Physical interconnect links in the routed topology."""
         return self.topology.n_links
 
     def node_rates(self) -> Array:
@@ -114,6 +117,9 @@ class MachineSpec(NamedTuple):
         return jnp.full((self.n_nodes,), self.core_rate, jnp.float32)
 
     def validate(self) -> None:
+        """Raise ``ValueError`` on an inconsistent spec (SNC split that
+        does not divide the cores, per-node tuples of the wrong length,
+        topology/node-count mismatch)."""
         if self.nodes_per_socket < 1:
             raise ValueError("nodes_per_socket must be >= 1")
         if self.cores_per_socket % self.nodes_per_socket:
@@ -167,9 +173,12 @@ class MachineSpec(NamedTuple):
         return jnp.full((self.n_nodes,), bw)
 
     def bank_read_caps(self) -> Array:
+        """``(n_nodes,)`` per-bank read capacity (alias of
+        ``node_local_bw("read")`` in resource-slab vocabulary)."""
         return self.node_local_bw("read")
 
     def bank_write_caps(self) -> Array:
+        """``(n_nodes,)`` per-bank write capacity."""
         return self.node_local_bw("write")
 
     def link_caps(self) -> Array:
@@ -190,6 +199,8 @@ class MachineSpec(NamedTuple):
         return self._remote_caps(self.remote_read_bw)
 
     def remote_write_caps(self) -> Array:
+        """``(n_nodes, n_nodes)`` remote write twin of
+        :meth:`remote_read_caps`."""
         return self._remote_caps(self.remote_write_bw)
 
     def fingerprint(self) -> str:
@@ -222,6 +233,37 @@ def _fingerprint(machine: MachineSpec) -> str:
         digest.update(repr(part).encode())
         digest.update(b"\x1f")  # field separator: '325.0' != '32','5.0'
     return digest.hexdigest()
+
+
+def canonical_bank_assignment(
+    machine: MachineSpec, bank_assignment
+) -> tuple[int, ...] | None:
+    """Validate and canonicalize a page/bank placement.
+
+    ``bank_assignment[k] = j`` declares that the *Local*-class buffers of
+    threads placed on node ``k`` are backed by node ``j``'s DIMMs (their
+    pages were first-touched there, or migrated there).  ``None`` and the
+    identity mapping both mean today's node-local behavior and normalize
+    to ``None`` so every default code path — and every jit/signature cache
+    key — stays bit-for-bit identical to the assignment-free model.
+
+    Only the Local class has a free home: Static already carries its own
+    placement knob (``static_socket``), and the Per-thread / Interleaved
+    classes are defined by their allocation policy, not by a home node.
+    """
+    if bank_assignment is None:
+        return None
+    s = machine.n_nodes
+    ba = tuple(int(b) for b in bank_assignment)
+    if len(ba) != s:
+        raise ValueError(
+            f"bank_assignment {ba} has {len(ba)} entries for {s} nodes"
+        )
+    if any(not 0 <= b < s for b in ba):
+        raise ValueError(f"bank_assignment {ba} names a node outside 0..{s - 1}")
+    if ba == tuple(range(s)):
+        return None  # identity == node-local default
+    return ba
 
 
 # Xeon E5-2630 v3: 8 cores, 2.4 GHz, DDR4-1866.  The cheap machine whose

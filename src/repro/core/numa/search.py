@@ -55,7 +55,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import Array
 
-from repro.core.numa.machine import MachineSpec
+from repro.core.numa.machine import MachineSpec, canonical_bank_assignment
 from repro.core.numa.simulator import (
     _group_multiplicities,
     _progressive_fill_structured,
@@ -92,8 +92,12 @@ def _classes_for(workload: Workload, thread_classes) -> tuple[int, ...]:
 # ---------------------------------------------------------------------------
 
 
-@partial(jax.jit, static_argnames=("machine", "thread_classes"))
-def _objective_batch_jit(machine, wl_arrays, placements, thread_classes):
+@partial(
+    jax.jit, static_argnames=("machine", "thread_classes", "bank_assignment")
+)
+def _objective_batch_jit(
+    machine, wl_arrays, placements, thread_classes, bank_assignment=None
+):
     # one bucket per placement: fixed shapes for any placement batch, so
     # the search loop reuses a single trace per padded batch size
     wl = Workload("search", *wl_arrays)
@@ -104,6 +108,7 @@ def _objective_batch_jit(machine, wl_arrays, placements, thread_classes):
         thread_classes=thread_classes,
         support=(placements > 0).astype(jnp.int32),
         slab_id=jnp.arange(placements.shape[0], dtype=jnp.int32),
+        bank_assignment=bank_assignment,
     )
     return sim.instructions.sum(axis=1)
 
@@ -114,17 +119,26 @@ def exact_objectives(
     placements,
     *,
     thread_classes: tuple[int, ...] | None = None,
+    bank_assignment=None,
 ) -> np.ndarray:
     """Simulated work rate (instructions/s) of each placement — the ground
     truth both search modes optimize, batched through one jitted trace per
-    padded batch size (rows padded by repetition, so no retrace churn)."""
+    padded batch size (rows padded by repetition, so no retrace churn).
+
+    ``bank_assignment`` prices one page placement for the whole batch
+    (``None`` = node-local): the scheduler's "threads moved, pages
+    stayed" candidates are scored through this hook."""
     classes = _classes_for(workload, thread_classes)
     p = np.asarray(placements, np.int32)
     if p.ndim == 1:
         p = p[None, :]
     n_rows = p.shape[0]
     out = _objective_batch_jit(
-        machine, tuple(workload[1:]), jnp.asarray(pad_rows(p)), classes
+        machine,
+        tuple(workload[1:]),
+        jnp.asarray(pad_rows(p)),
+        classes,
+        canonical_bank_assignment(machine, bank_assignment),
     )
     return np.asarray(out)[:n_rows]
 

@@ -63,13 +63,17 @@ import numpy as np
 from jax import Array
 
 from repro.core.bwsig.counters import CounterSample, counters_from_flows
-from repro.core.numa.machine import MachineSpec
+from repro.core.numa.machine import MachineSpec, canonical_bank_assignment
 from repro.core.numa.workload import Workload
 
 _EPS = 1e-12
 
 
 class SimulationResult(NamedTuple):
+    """One simulated run: per-thread rates, per-node-pair flow matrices,
+    the counter sample the model is allowed to observe, and the scalar
+    throughput the sweep/search layers maximize."""
+
     rates: Array  # (n,) per-thread execution-rate multiplier in (0, 1]
     read_flows: Array  # (n_nodes, n_nodes) bytes/s from node i CPUs to bank j
     write_flows: Array  # (n_nodes, n_nodes)
@@ -94,10 +98,14 @@ def _mix_rows(
     static_socket: Array,
     node_of: Array,
     n_per_node: Array,
+    bank_assignment: tuple[int, ...] | None = None,
 ) -> Array:
     """Ground-truth per-thread traffic mix over banks — the per-thread
     version of the paper's §4 class matrices.  One bank per NUMA node;
-    ``static_socket`` names the *node* holding the Static allocation."""
+    ``static_socket`` names the *node* holding the Static allocation.
+    ``bank_assignment`` redirects the Local class: a thread on node ``k``
+    reads its "local" buffers from bank ``bank_assignment[k]`` (pages left
+    behind by a migration, or deliberately placed on another node)."""
     s = n_per_node.shape[0]
     n = node_of.shape[0]
     nf = n_per_node.astype(jnp.float32)
@@ -105,7 +113,11 @@ def _mix_rows(
     s_used = jnp.maximum(used.sum(), 1.0)
 
     static_row = (jnp.arange(s) == static_socket).astype(jnp.float32)  # (s,)
-    local_rows = jax.nn.one_hot(node_of, s)  # (n, s)
+    if bank_assignment is None:
+        local_rows = jax.nn.one_hot(node_of, s)  # (n, s)
+    else:
+        bank_of = jnp.asarray(bank_assignment, jnp.int32)[node_of]
+        local_rows = jax.nn.one_hot(bank_of, s)  # (n, s)
     pt_row = nf / jnp.maximum(nf.sum(), 1.0)  # (s,)
     il_row = used / s_used  # (s,)
 
@@ -262,6 +274,7 @@ def simulate_reference(
     key: Array | None = None,
     caps: Array | None = None,
     multipath: bool = False,
+    bank_assignment: tuple[int, ...] | None = None,
 ) -> SimulationResult:
     """The per-thread reference solver: one resource-slab row per thread.
 
@@ -270,6 +283,7 @@ def simulate_reference(
     against, and the fallback when the class structure of a traced
     workload is unknown.  Prefer :func:`simulate` everywhere else: it is
     exact to ~1 ulp and its cost scales with nodes, not threads."""
+    bank_assignment = canonical_bank_assignment(machine, bank_assignment)
     s = machine.n_nodes
     n = workload.n_threads
     n_per_node = jnp.asarray(n_per_node)
@@ -283,6 +297,7 @@ def simulate_reference(
         workload.static_socket,
         node_of,
         n_per_node,
+        bank_assignment,
     )
     write_mix = _mix_rows(
         workload.write_static,
@@ -291,6 +306,7 @@ def simulate_reference(
         workload.static_socket,
         node_of,
         n_per_node,
+        bank_assignment,
     )
     read_unit = rate_of[:, None] * workload.read_bpi[:, None] * read_mix
     write_unit = rate_of[:, None] * workload.write_bpi[:, None] * write_mix
@@ -429,17 +445,23 @@ def _group_mix_rows(
     per_thread_frac: Array,
     static_socket: Array,
     n_per_node: Array,
+    bank_assignment: tuple[int, ...] | None = None,
 ) -> Array:
     """``(C, s, s)`` traffic mix over banks for a class-``c`` thread
     placed on node ``k`` — :func:`_mix_rows` with the thread axis replaced
-    by the (class, node) grid."""
+    by the (class, node) grid.  ``bank_assignment`` redirects row ``k``'s
+    Local column to bank ``bank_assignment[k]`` (see
+    :func:`repro.core.numa.machine.canonical_bank_assignment`)."""
     s = n_per_node.shape[0]
     nf = n_per_node.astype(jnp.float32)
     used = (nf > 0).astype(jnp.float32)
     s_used = jnp.maximum(used.sum(), 1.0)
 
     static_row = (jnp.arange(s) == static_socket).astype(jnp.float32)  # (s,)
-    local_rows = jnp.eye(s)  # node k's local row
+    if bank_assignment is None:
+        local_rows = jnp.eye(s)  # node k's local row
+    else:
+        local_rows = jax.nn.one_hot(jnp.asarray(bank_assignment, jnp.int32), s)
     pt_row = nf / jnp.maximum(nf.sum(), 1.0)
     il_row = used / s_used
 
@@ -597,13 +619,24 @@ def group_slab_components(
     machine: MachineSpec,
     workload: Workload,
     thread_classes: tuple[int, ...],
+    bank_assignment: tuple[int, ...] | None = None,
 ) -> GroupSlabs:
     """Build the placement-independent unit-demand components for every
     (class, node) group — one call per benchmark, shared by every
-    placement bucket."""
+    placement bucket.  ``bank_assignment`` (canonicalized: ``None`` means
+    node-local) lands in the Local term of the base slab, so the whole
+    batched path — including :func:`_group_resource_tensor`-style route
+    charging of now-remote Local flows — prices page placement with zero
+    extra per-placement work."""
     s = machine.n_nodes
     rep = np.asarray(thread_classes, np.int64)  # class representatives
     node_rates = machine.node_rates()  # (s,)
+    if bank_assignment is None:
+        local_mat = jnp.eye(s, dtype=node_rates.dtype)
+    else:
+        local_mat = jax.nn.one_hot(
+            jnp.asarray(bank_assignment, jnp.int32), s, dtype=node_rates.dtype
+        )
 
     def direction(static_frac, local_frac, pt_frac, bpi):
         sf = static_frac[rep]
@@ -616,7 +649,7 @@ def group_slab_components(
         ).astype(node_rates.dtype)
         base = unit * (
             sf[:, None, None] * static_row[None, None, :]
-            + lf[:, None, None] * jnp.eye(s, dtype=node_rates.dtype)[None, :, :]
+            + lf[:, None, None] * local_mat[None, :, :]
         )
         coeff = unit[:, :, 0]  # (C, s)
         return base, coeff * pf[:, None], coeff * inter[:, None]
@@ -780,6 +813,7 @@ def simulate_grouped_batch(
     multipath: bool = False,
     elapsed: float = 1.0,
     early_exit: bool = True,
+    bank_assignment: tuple[int, ...] | None = None,
 ) -> GroupedBatchResult:
     """Ground truth for a whole placement batch in one pass: bucket the
     placements by support pattern, build the base+interleave slab once per
@@ -788,7 +822,13 @@ def simulate_grouped_batch(
 
     ``support`` / ``slab_id`` (from :func:`support_patterns`) may be
     passed in when the caller already bucketed on the host — mandatory
-    when ``placements`` is traced; computed here otherwise."""
+    when ``placements`` is traced; computed here otherwise.
+
+    ``bank_assignment`` applies one page placement (Local-class backing
+    node per placement node; ``None`` = node-local) to the whole batch —
+    the scheduler evaluates "threads moved, pages stayed" placements
+    through this hook."""
+    bank_assignment = canonical_bank_assignment(machine, bank_assignment)
     s = machine.n_nodes
     n = workload.n_threads
     topo = machine.topology
@@ -798,7 +838,9 @@ def simulate_grouped_batch(
     support = jnp.asarray(support)
     slab_id = jnp.asarray(slab_id)
 
-    comps = group_slab_components(machine, workload, thread_classes)
+    comps = group_slab_components(
+        machine, workload, thread_classes, bank_assignment
+    )
     C = comps.base_read.shape[0]
     G = C * s
     dtype = comps.base_read.dtype
@@ -885,10 +927,17 @@ def simulate(
     caps: Array | None = None,
     thread_classes: tuple[int, ...] | None = None,
     multipath: bool = False,
+    bank_assignment: tuple[int, ...] | None = None,
 ) -> SimulationResult:
     """Run the workload on the machine under the given placement (threads
     per NUMA node) and emit ground truth + the paper-visible performance
     counters.
+
+    ``bank_assignment`` places the Local class's pages: entry ``k`` names
+    the node whose DIMMs back the local buffers of threads on node ``k``
+    (``None`` = node-local, bit-for-bit today's behavior).  Redirected
+    Local flows are charged like any other remote traffic: the remote
+    path ``(k, bank)`` and every link on its route.
 
     ``caps`` substitutes the machine's capacity vector (slab order of
     :func:`machine_caps`) with traced values — the differentiable-forward
@@ -901,6 +950,7 @@ def simulate(
     hot path when the workload arrays are traced (inside jit/vmap their
     values cannot be inspected).  With concrete arrays it is inferred;
     otherwise the per-thread :func:`simulate_reference` path runs."""
+    bank_assignment = canonical_bank_assignment(machine, bank_assignment)
     if thread_classes is None:
         thread_classes = _infer_thread_classes(workload)
     if thread_classes is None:
@@ -908,6 +958,7 @@ def simulate(
             machine, workload, n_per_node,
             elapsed=elapsed, noise_std=noise_std, background_bw=background_bw,
             key=key, caps=caps, multipath=multipath,
+            bank_assignment=bank_assignment,
         )
 
     s = machine.n_nodes
@@ -928,6 +979,7 @@ def simulate(
         workload.read_per_thread[rep],
         workload.static_socket,
         n_per_node,
+        bank_assignment,
     )
     write_mix = _group_mix_rows(
         workload.write_static[rep],
@@ -935,6 +987,7 @@ def simulate(
         workload.write_per_thread[rep],
         workload.static_socket,
         n_per_node,
+        bank_assignment,
     )
     # (C, s, s): one class-c thread's unit demand on node k toward bank j
     read_unit = node_rates[None, :, None] * workload.read_bpi[rep][:, None, None] * read_mix
@@ -970,6 +1023,8 @@ def simulate_counters(
     n_per_node: Array,
     **kwargs,
 ) -> CounterSample:
+    """Just the performance counters of a simulated run — what a real
+    profiling pass would hand the fitting pipeline."""
     return simulate(machine, workload, n_per_node, **kwargs).sample
 
 

@@ -39,12 +39,15 @@ class Workload(NamedTuple):
 
     @property
     def n_threads(self) -> int:
+        """Thread count (the leading axis of every per-thread field)."""
         return self.read_static.shape[0]
 
     def read_interleaved(self) -> Array:
+        """Per-thread interleaved read fraction — the residual class."""
         return 1.0 - self.read_static - self.read_local - self.read_per_thread
 
     def write_interleaved(self) -> Array:
+        """Per-thread interleaved write fraction — the residual class."""
         return 1.0 - self.write_static - self.write_local - self.write_per_thread
 
 

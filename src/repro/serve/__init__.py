@@ -3,18 +3,26 @@
 Online query engine over the offline NUMA placement pipeline: a
 three-tier fast path (LRU answer cache → micro-batched grouped sweep →
 warm-started branch and bound) behind sync and async front ends, fully
-instrumented.  See :mod:`repro.serve.service` for the architecture.
+instrumented, plus a phased-query path (``query_schedule``: a tuple of
+per-phase signatures answered by the migration-aware scheduler).  See
+:mod:`repro.serve.service` for the architecture.
 """
 
 from repro.serve.cache import LRUCache
 from repro.serve.metrics import TIERS, ServiceMetrics
-from repro.serve.service import Advice, AdvisorService, QuerySignature
+from repro.serve.service import (
+    Advice,
+    AdvisorService,
+    QuerySignature,
+    ScheduleAdvice,
+)
 
 __all__ = [
     "Advice",
     "AdvisorService",
     "LRUCache",
     "QuerySignature",
+    "ScheduleAdvice",
     "ServiceMetrics",
     "TIERS",
 ]

@@ -37,6 +37,7 @@ class LRUCache:
         self._data: OrderedDict[Hashable, Any] = OrderedDict()
 
     def get(self, key: Hashable, default: Any = None) -> Any:
+        """Return the cached value (refreshing its recency) or ``default``."""
         with self._lock:
             try:
                 value = self._data[key]
@@ -46,6 +47,7 @@ class LRUCache:
             return value
 
     def put(self, key: Hashable, value: Any) -> None:
+        """Insert/refresh a key, evicting least-recent entries over capacity."""
         with self._lock:
             self._data[key] = value
             self._data.move_to_end(key)
@@ -61,6 +63,7 @@ class LRUCache:
             return key in self._data
 
     def clear(self) -> None:
+        """Drop every entry (capacity is unchanged)."""
         with self._lock:
             self._data.clear()
 

@@ -6,7 +6,9 @@ accounted here, per tier:
 * ``cache`` — tier-1 LRU answer-cache hits;
 * ``batch`` — tier-2 micro-batched ``simulate_grouped_batch`` misses;
 * ``search`` — tier-3 branch-and-bound fallbacks (machines too large to
-  sweep).
+  sweep);
+* ``schedule`` — phased-workload schedule queries (the DP/beam scheduler
+  over phase boundaries; see ``AdvisorService.query_schedule``).
 
 Latencies land in preallocated per-tier numpy ring buffers (one float
 store per sample — the hit path never grows a list), and percentiles are
@@ -26,7 +28,7 @@ from collections import Counter
 
 import numpy as np
 
-TIERS = ("cache", "batch", "search")
+TIERS = ("cache", "batch", "search", "schedule")
 
 
 class _LatencyRing:
@@ -81,11 +83,13 @@ class ServiceMetrics:
     # -- recording ---------------------------------------------------------
 
     def record_query(self, tier: str, seconds: float) -> None:
+        """Count one answered query and its latency against ``tier``."""
         with self._lock:
             self.tier_counts[tier] += 1
             self._latency[tier].record(seconds)
 
     def record_batch(self, size: int) -> None:
+        """Record one micro-batch flush of ``size`` coalesced queries."""
         with self._lock:
             self.batch_calls += 1
             self.batch_sizes[size] += 1

@@ -53,6 +53,11 @@ from repro.core.numa.simulator import (
     simulate_grouped_batch,
     support_patterns,
 )
+from repro.core.numa.temporal import (
+    MigrationModel,
+    optimize_schedule,
+    phased_workload,
+)
 from repro.core.numa.workload import Workload, mixed_workload
 from repro.serve.cache import LRUCache
 from repro.serve.metrics import ServiceMetrics
@@ -83,6 +88,7 @@ class QuerySignature(NamedTuple):
         )
 
     def workload(self, n_threads: int, name: str = "serve") -> Workload:
+        """Materialize the signature as an ``n_threads`` uniform workload."""
         return mixed_workload(
             name,
             n_threads,
@@ -105,6 +111,22 @@ class Advice:
     objective: float  # work rate (instructions/s), the quantity maximized
     tier: str  # "batch" | "search"
     optimal: bool  # exhaustive sweep, or B&B certificate within its gap
+
+
+@dataclass(frozen=True)
+class ScheduleAdvice:
+    """One answered *phased* query: a placement (and page placement) per
+    phase plus the scheduler's receipts.  ``gain_pct`` is the improvement
+    over holding the best static placement for the whole horizon — never
+    negative (the static trajectory is in the scheduler's feasible set)."""
+
+    placements: tuple[tuple[int, ...], ...]  # per-phase threads per node
+    bank_assignments: tuple  # per-phase bank maps (None = node-local)
+    total_work: float  # instructions over the horizon
+    static_work: float  # best static placement's instructions
+    gain_pct: float
+    transition_times: tuple[float, ...]  # boundary stalls (seconds)
+    tier: str = "schedule"
 
 
 class _PlacementTable(NamedTuple):
@@ -300,6 +322,112 @@ class AdvisorService:
 
         future.add_done_callback(_record)
         return None, future
+
+    # -- phased queries --------------------------------------------------------
+
+    @staticmethod
+    def _canonical_phases(phases) -> tuple:
+        """Canonicalize a phased query: ``(signature, duration)`` pairs
+        with rounded signatures/durations, so float-noise variants of the
+        same schedule share one cache line (the phased twin of
+        :meth:`QuerySignature.canonical`)."""
+        canon = tuple(
+            (sig.canonical(), round(float(dur), 6)) for sig, dur in phases
+        )
+        if not canon:
+            raise ValueError("phased query needs at least one phase")
+        return canon
+
+    def query_schedule(self, machine, phases, n_threads: int, *,
+                       model: MigrationModel | None = None,
+                       timeout: float | None = None) -> ScheduleAdvice:
+        """Synchronous phased query: ``phases`` is a sequence of
+        ``(QuerySignature, duration_s)`` pairs — the signature of each
+        stationary segment plus how long it runs.  Answers with one
+        placement (and bank assignment) per phase via the migration-aware
+        scheduler; cached/deduplicated exactly like one-shot queries,
+        computed on the search pool so schedules never stall the
+        micro-batcher."""
+        advice, future = self._dispatch_schedule(
+            machine, phases, n_threads, model
+        )
+        if advice is not None:
+            return advice
+        return future.result(timeout)
+
+    def submit_schedule(self, machine, phases, n_threads: int, *,
+                        model: MigrationModel | None = None) -> Future:
+        """Async twin of :meth:`query_schedule`: returns a Future
+        resolving to the :class:`ScheduleAdvice`."""
+        advice, future = self._dispatch_schedule(
+            machine, phases, n_threads, model
+        )
+        if advice is not None:
+            future = Future()
+            future.set_result(advice)
+        return future
+
+    def _dispatch_schedule(self, machine, phases, n_threads, model):
+        t0 = time.perf_counter()
+        if self._closed:
+            raise RuntimeError("AdvisorService is closed")
+        spec, fp = self._resolve(machine)
+        model = model if model is not None else MigrationModel()
+        canon = self._canonical_phases(phases)
+        key = (fp, int(n_threads), "schedule", canon, model)
+        hit = self._answers.get(key)
+        if hit is not None:
+            self.metrics.record_query("cache", time.perf_counter() - t0)
+            return hit, None
+        with self._cond:
+            hit = self._answers.get(key)
+            if hit is not None:
+                self.metrics.record_query("cache", time.perf_counter() - t0)
+                return hit, None
+            future = self._inflight.get(key)
+            if future is None:
+                future = Future()
+                self._inflight[key] = future
+                self._search_pool.submit(
+                    self._run_schedule, spec, int(n_threads), canon, model, key
+                )
+
+        def _record(f, t0=t0):
+            if f.cancelled() or f.exception() is not None:
+                return
+            self.metrics.record_query(
+                f.result().tier, time.perf_counter() - t0
+            )
+
+        future.add_done_callback(_record)
+        return None, future
+
+    def _run_schedule(self, machine: MachineSpec, n_threads: int,
+                      canon: tuple, model: MigrationModel,
+                      key: tuple) -> None:
+        future = self._inflight.get(key)
+        try:
+            pw = phased_workload(
+                "serve-schedule",
+                [
+                    (sig.workload(n_threads, name=f"phase{i}"), dur)
+                    for i, (sig, dur) in enumerate(canon)
+                ],
+            )
+            result = optimize_schedule(
+                machine, pw, model=model, sweep_limit=self.sweep_limit
+            )
+            advice = ScheduleAdvice(
+                placements=result.schedule.placements,
+                bank_assignments=result.schedule.bank_assignments,
+                total_work=result.schedule.total_work,
+                static_work=result.static.total_work,
+                gain_pct=result.gain_pct,
+                transition_times=result.schedule.transition_times,
+            )
+            self._finish(key, future, advice)
+        except BaseException as exc:
+            self._fail([(key, future)], exc)
 
     # -- tier selection & placement tables ------------------------------------
 
@@ -497,6 +625,9 @@ class AdvisorService:
         return self.query(machine, sig, n_threads)
 
     def close(self, timeout: float | None = 5.0) -> None:
+        """Stop the batcher and search pool, failing any still-pending
+        queries with ``RuntimeError``.  Idempotent; the service rejects
+        new queries afterwards."""
         with self._cond:
             if self._closed:
                 return

@@ -107,7 +107,9 @@ def test_metrics_snapshot_and_reset():
     assert m.register_trace(("k", 1)) is False  # already registered
     snap = m.snapshot()
     assert snap["queries"] == 2
-    assert snap["tier_counts"] == {"cache": 1, "batch": 1, "search": 0}
+    assert snap["tier_counts"] == {
+        "cache": 1, "batch": 1, "search": 0, "schedule": 0
+    }
     assert snap["batch_size_hist"] == {4: 1}
     assert snap["mean_batch_size"] == 4.0
     assert snap["retraces"] == 1
@@ -335,4 +337,116 @@ def test_answer_cache_is_bounded():
     for sig in _sigs(20, seed=88):
         svc.query(E7_4830_V3, sig, 24)
     assert len(svc._answers) <= 8
+    svc.close()
+
+
+# ---------------------------------------------------------------------------
+# Metrics under churn
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_reset_during_inflight_batch():
+    """reset(keep_traces=True) racing an in-flight batch must neither
+    crash the batcher nor corrupt counters: completions landing after the
+    reset are counted from zero, the trace-key set survives, and a warmed
+    group still registers no retrace."""
+    svc = AdvisorService(max_batch=4, max_wait_s=0.05)
+    svc.warmup(E7_4830_V3, 24)
+    sigs = _sigs(8, seed=101)
+    futures = [svc.submit(E7_4830_V3, s, 24) for s in sigs]
+    # the batcher is holding the queue open for max_wait_s; reset now
+    svc.metrics.reset(keep_traces=True)
+    answers = [f.result(timeout=60) for f in futures]
+    snap = svc.metrics.snapshot()
+    assert all(isinstance(a, Advice) for a in answers)
+    # every completion recorded after the reset is counted exactly once,
+    # and none of them retraced the warmed group
+    assert snap["tier_counts"]["batch"] == len(sigs)
+    assert snap["retraces"] == 0
+    # the service keeps serving normally afterwards
+    hit = svc.query(E7_4830_V3, sigs[0], 24)
+    assert hit is answers[0]
+    assert svc.metrics.snapshot()["tier_counts"]["cache"] == 1
+    svc.close()
+
+
+def test_metrics_full_reset_forgets_traces_under_serving():
+    svc = AdvisorService(max_wait_s=0.0)
+    svc.warmup(E7_4830_V3, 24)
+    svc.metrics.reset()  # full reset: the warmed shape is forgotten...
+    svc.query(E7_4830_V3, _sigs(1, seed=102)[0], 24)
+    snap = svc.metrics.snapshot()
+    svc.close()
+    assert snap["retraces"] == 1  # ...so the next batch re-registers it
+
+
+# ---------------------------------------------------------------------------
+# Phased queries (tier: schedule)
+# ---------------------------------------------------------------------------
+
+
+def _flip_phases():
+    a = QuerySignature((0.7, 0.1, 0.0), (0.0, 0.0, 0.0), read_bpi=5.0,
+                       static_socket=0)
+    b = QuerySignature((0.7, 0.1, 0.0), (0.0, 0.0, 0.0), read_bpi=5.0,
+                       static_socket=1)
+    return [(a, 5.0), (b, 5.0)]
+
+
+def test_query_schedule_end_to_end():
+    from repro.core.numa.temporal import MigrationModel
+    from repro.serve import ScheduleAdvice
+
+    svc = AdvisorService()
+    model = MigrationModel(thread_move_bytes=1e6, page_move_bytes=1e6)
+    adv = svc.query_schedule(
+        E5_2630_V3, _flip_phases(), 8, model=model, timeout=300
+    )
+    snap = svc.metrics.snapshot()
+    assert isinstance(adv, ScheduleAdvice)
+    assert adv.tier == "schedule"
+    assert len(adv.placements) == 2
+    assert all(sum(p) == 8 for p in adv.placements)
+    assert adv.gain_pct > 0.0  # the flip is worth migrating for
+    assert adv.placements[0] != adv.placements[1]
+    assert adv.total_work > adv.static_work
+    assert snap["tier_counts"]["schedule"] == 1
+
+    # second ask is a cache hit returning the same object
+    again = svc.query_schedule(E5_2630_V3, _flip_phases(), 8, model=model)
+    assert again is adv
+    assert svc.metrics.snapshot()["tier_counts"]["cache"] >= 1
+    svc.close()
+
+
+def test_submit_schedule_dedupes_inflight():
+    from repro.core.numa.temporal import MigrationModel
+
+    svc = AdvisorService()
+    model = MigrationModel(thread_move_bytes=1e6, page_move_bytes=1e6)
+    futures = [
+        svc.submit_schedule(E5_2630_V3, _flip_phases(), 8, model=model)
+        for _ in range(4)
+    ]
+    answers = [f.result(timeout=300) for f in futures]
+    snap = svc.metrics.snapshot()
+    svc.close()
+    assert all(a is answers[0] for a in answers)  # computed once
+    assert snap["tier_counts"]["schedule"] + snap["tier_counts"]["cache"] >= 1
+
+
+def test_schedule_canonicalization_merges_float_noise():
+    svc = AdvisorService()
+    a = QuerySignature((1 / 3, 1 / 3, 0.1), (0.2, 0.2, 0.2))
+    b = QuerySignature((0.33333333333, 0.333333333401, 0.1), (0.2, 0.2, 0.2))
+    first = svc.query_schedule(E5_2630_V3, [(a, 1.0)], 8, timeout=300)
+    second = svc.query_schedule(E5_2630_V3, [(b, 1.0000000004)], 8)
+    svc.close()
+    assert second is first
+
+
+def test_query_schedule_rejects_empty_phases():
+    svc = AdvisorService()
+    with pytest.raises(ValueError):
+        svc.query_schedule(E5_2630_V3, [], 8)
     svc.close()

@@ -148,3 +148,29 @@ def test_memo_caches_survive_concurrent_hammer():
     assert not errors
     assert len(ev._STACK_CACHE) <= ev._MEMO_CACHE_MAX
     assert len(ev._SIG_CACHE) <= ev._SIG_CACHE_MAX
+
+
+def test_enumerate_placements_budget_edges():
+    """Core-cap feasibility: the boundary budget yields exactly the full
+    machine, zero threads yields the empty placement, and anything beyond
+    ``s * cores_per_node`` (or negative) is rejected up front."""
+    from repro.core.numa.evaluate import count_placements, enumerate_placements
+
+    m = E5_2630_V3  # 2 nodes x 8 cores
+    full = m.n_nodes * m.cores_per_node
+    at_cap = np.asarray(enumerate_placements(m, full))
+    assert at_cap.shape == (1, m.n_nodes)
+    assert at_cap.tolist() == [[m.cores_per_node] * m.n_nodes]
+    assert count_placements(m, full) == 1
+
+    empty = np.asarray(enumerate_placements(m, 0))
+    assert empty.tolist() == [[0] * m.n_nodes]
+
+    with pytest.raises(ValueError):
+        enumerate_placements(m, full + 1)
+    with pytest.raises(ValueError):
+        enumerate_placements(m, -1)
+    # per-node caps hold on a feasible-but-tight budget
+    tight = np.asarray(enumerate_placements(m, full - 1))
+    assert (tight <= m.cores_per_node).all()
+    assert len(tight) == count_placements(m, full - 1) == m.n_nodes

@@ -394,3 +394,92 @@ def test_dashboard_trends_serve_records(dashboard, tmp_path):
     assert "| advisor-serve cache-hit | 2 | 100,000 | x2.0 | 0.050 | 0.100 |" in md
     # neither the sweep nor the search table picks up the serve record
     assert "| advisor-serve cache-hit | 1 |" not in md
+
+
+def _schedule_rec(sweep, *, gain=1.0, tts=0.1, **extra):
+    return dict(
+        sweep=sweep, machine="m", n_nodes=2, n_threads=8, phases=2,
+        gain_pct=gain, time_to_solution_s=tts, **extra,
+    )
+
+
+def test_gate_schedule_records_pass_and_fail_on_gain_floor(gate):
+    base = [_schedule_rec("sched-a", min_static_gain_pct=0.5,
+                          max_time_to_solution_s=2.0)]
+    ok = [_schedule_rec("sched-a", gain=0.9)]
+    assert gate.check(ok, base, error_tolerance=0.25, min_pps_ratio=0.0) == []
+    bad = [_schedule_rec("sched-a", gain=0.1)]
+    failures = gate.check(bad, base, error_tolerance=0.25, min_pps_ratio=0.0)
+    assert len(failures) == 1 and "time axis lost" in failures[0]
+
+
+def test_gate_schedule_records_fail_when_static_ceiling_broken(gate):
+    """The prohibitive-migration record commits max_gain_pct: 0 — the
+    scheduler choosing to move despite priced-out migration is a cost
+    model bug and must fail CI."""
+    base = [_schedule_rec("sched-static", min_static_gain_pct=0.0,
+                          max_gain_pct=0.0, max_time_to_solution_s=2.0)]
+    ok = [_schedule_rec("sched-static", gain=0.0)]
+    assert gate.check(ok, base, error_tolerance=0.25, min_pps_ratio=0.0) == []
+    bad = [_schedule_rec("sched-static", gain=0.2)]
+    failures = gate.check(bad, base, error_tolerance=0.25, min_pps_ratio=0.0)
+    assert len(failures) == 1 and "prohibitive" in failures[0]
+
+
+def test_gate_schedule_records_fail_above_time_cap(gate):
+    base = [_schedule_rec("sched-a", min_static_gain_pct=0.5,
+                          max_time_to_solution_s=2.0)]
+    bad = [_schedule_rec("sched-a", tts=10.0)]
+    failures = gate.check(bad, base, error_tolerance=0.25, min_pps_ratio=0.0)
+    assert len(failures) == 1 and "time-to-solution" in failures[0]
+
+
+@pytest.fixture()
+def docgate():
+    import importlib.util
+
+    spec = importlib.util.spec_from_file_location(
+        "check_docstrings",
+        Path(__file__).resolve().parents[1]
+        / "benchmarks" / "check_docstrings.py",
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_docstring_gate_flags_public_only(docgate, tmp_path):
+    src = tmp_path / "mod.py"
+    src.write_text(
+        '"""Module doc."""\n'
+        "def documented():\n"
+        '    """Has one."""\n'
+        "def naked(): pass\n"
+        "def _private(): pass\n"
+        "class Thing:\n"
+        '    """Doc."""\n'
+        "    def method(self): pass\n"
+        "    def __dunder__(self): pass\n"
+        "    def ok(self):\n"
+        '        """Doc."""\n'
+    )
+    findings = docgate.check_file(src)
+    assert len(findings) == 2
+    assert any("'naked'" in f for f in findings)
+    assert any("'Thing.method'" in f for f in findings)
+
+
+def test_docstring_gate_flags_missing_module_doc(docgate, tmp_path):
+    src = tmp_path / "bare.py"
+    src.write_text("x = 1\n")
+    findings = docgate.check_file(src)
+    assert findings == [f"{src}:1: public module has no docstring"]
+
+
+def test_docstring_gate_passes_on_shipped_packages(docgate):
+    """The committed public API stays fully documented — the same
+    invocation CI runs."""
+    root = Path(__file__).resolve().parents[1]
+    assert docgate.check_paths(
+        [root / "src/repro/core/numa", root / "src/repro/serve"]
+    ) == []

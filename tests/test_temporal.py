@@ -1,0 +1,332 @@
+"""Time-axis tests: the page/bank placement axis, phased workloads, the
+migration cost model, and the schedule search.
+
+The two pinned guarantees this file carries:
+
+* **Default path bit-for-bit** — ``bank_assignment=None`` and the
+  identity assignment reproduce today's ``simulate`` outputs exactly,
+  and a single-phase schedule reproduces the steady-state argmax.
+* **Migration crossover** — on a two-phase workload whose per-phase
+  optima differ, ``optimize_schedule`` strictly beats the best static
+  placement whenever migration cost sits below the phase-gain
+  crossover, and degrades exactly to the static answer (gain == 0)
+  when it sits above.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.numa.machine import (
+    E5_2630_V3,
+    E5_2630_V3_MIXED_DIMM,
+    E7_4830_V3,
+    canonical_bank_assignment,
+)
+from repro.core.numa.evaluate import enumerate_placements, evaluate_batch
+from repro.core.numa.search import exact_objectives
+from repro.core.numa.simulator import simulate, simulate_reference
+from repro.core.numa.temporal import (
+    MigrationModel,
+    PhasedWorkload,
+    evaluate_schedule,
+    follow_banks,
+    optimize_schedule,
+    phased_workload,
+    thread_banks,
+    thread_nodes,
+    transition_cost,
+)
+from repro.core.numa.workload import mixed_workload
+
+
+def _flip_phases(n=8, bpi=5.0):
+    """Two phases whose optima sit on opposite nodes: static-heavy
+    traffic with the static buffer flipping from node 0 to node 1."""
+    wa = mixed_workload(
+        "a", n, read_mix=(0.7, 0.1, 0.0), read_bpi=bpi, static_socket=0
+    )
+    wb = mixed_workload(
+        "b", n, read_mix=(0.7, 0.1, 0.0), read_bpi=bpi, static_socket=1
+    )
+    return wa, wb
+
+
+# ---------------------------------------------------------------------------
+# bank_assignment axis
+# ---------------------------------------------------------------------------
+
+
+def test_canonical_bank_assignment():
+    m = E5_2630_V3
+    assert canonical_bank_assignment(m, None) is None
+    assert canonical_bank_assignment(m, (0, 1)) is None  # identity
+    assert canonical_bank_assignment(m, [1, 0]) == (1, 0)
+    with pytest.raises(ValueError):
+        canonical_bank_assignment(m, (0,))
+    with pytest.raises(ValueError):
+        canonical_bank_assignment(m, (0, 2))
+
+
+def test_identity_bank_assignment_bit_for_bit():
+    m = E5_2630_V3
+    wl = mixed_workload("t", 8, read_mix=(0.1, 0.6, 0.1), read_bpi=4.0)
+    p = jnp.asarray([5, 3])
+    r0 = simulate(m, wl, p)
+    r1 = simulate(m, wl, p, bank_assignment=(0, 1))
+    assert np.array_equal(np.asarray(r0.rates), np.asarray(r1.rates))
+    assert np.array_equal(np.asarray(r0.read_flows), np.asarray(r1.read_flows))
+    assert np.array_equal(
+        np.asarray(r0.write_flows), np.asarray(r1.write_flows)
+    )
+
+
+@pytest.mark.parametrize("ba", [(1, 0), (0, 0), (1, 1)])
+def test_bank_assignment_grouped_matches_reference(ba):
+    m = E5_2630_V3
+    wl = mixed_workload("t", 8, read_mix=(0.1, 0.6, 0.1), read_bpi=4.0)
+    p = jnp.asarray([5, 3])
+    g = simulate(m, wl, p, bank_assignment=ba)
+    ref = simulate_reference(m, wl, p, bank_assignment=ba)
+    scale = float(np.max(np.abs(np.asarray(ref.read_flows)))) or 1.0
+    assert np.max(
+        np.abs(np.asarray(g.read_flows) - np.asarray(ref.read_flows))
+    ) / scale < 1e-6
+    assert np.max(np.abs(np.asarray(g.rates) - np.asarray(ref.rates))) < 1e-6
+
+
+def test_remote_banks_cost_throughput():
+    """A local-heavy workload with swapped banks pays remote-path prices."""
+    m = E5_2630_V3
+    wl = mixed_workload("t", 8, read_mix=(0.1, 0.6, 0.1), read_bpi=4.0)
+    p = jnp.asarray([5, 3])
+    t_local = float(simulate(m, wl, p).throughput)
+    t_swapped = float(simulate(m, wl, p, bank_assignment=(1, 0)).throughput)
+    assert t_swapped < t_local
+
+
+def test_exact_objectives_bank_assignment():
+    m = E7_4830_V3
+    wl = mixed_workload("t4", 24, read_mix=(0.1, 0.5, 0.1), read_bpi=3.0)
+    pl = np.asarray([[6, 6, 6, 6], [12, 12, 0, 0]], np.int32)
+    base = exact_objectives(m, wl, pl)
+    ident = exact_objectives(m, wl, pl, bank_assignment=(0, 1, 2, 3))
+    moved = exact_objectives(m, wl, pl, bank_assignment=(1, 0, 3, 2))
+    assert np.array_equal(base, ident)
+    assert (moved <= base + 1e-6).all() and (moved < base - 1e-6).any()
+
+
+def test_evaluate_batch_bank_assignment_default_unchanged():
+    m = E5_2630_V3
+    wl = mixed_workload("t", 8, read_mix=(0.2, 0.3, 0.2), read_bpi=2.0)
+    pl = np.asarray(enumerate_placements(m, 8))
+    a = evaluate_batch(m, wl, pl)
+    b = evaluate_batch(m, wl, pl, bank_assignment=(0, 1))
+    assert np.array_equal(np.asarray(a.total_bw), np.asarray(b.total_bw))
+    c = evaluate_batch(m, wl, pl, bank_assignment=(1, 0))
+    assert not np.array_equal(np.asarray(a.total_bw), np.asarray(c.total_bw))
+
+
+# ---------------------------------------------------------------------------
+# PhasedWorkload + migration accounting
+# ---------------------------------------------------------------------------
+
+
+def test_phased_workload_validation():
+    wa, wb = _flip_phases()
+    pw = phased_workload("ok", [(wa, 1.0), (wb, 2.0)])
+    assert pw.n_threads == 8 and len(pw.phases) == 2
+    with pytest.raises(ValueError):
+        phased_workload("neg", [(wa, 0.0)])
+    with pytest.raises(ValueError):
+        phased_workload(
+            "mismatch", [(wa, 1.0), (mixed_workload("c", 4), 1.0)]
+        )
+    with pytest.raises(ValueError):
+        PhasedWorkload("empty", ()).validate()
+
+
+def test_thread_and_bank_maps():
+    assert thread_nodes((5, 3), 8).tolist() == [0] * 5 + [1] * 3
+    assert thread_banks((5, 3), None, 8).tolist() == [0] * 5 + [1] * 3
+    assert thread_banks((5, 3), (1, 0), 8).tolist() == [1] * 5 + [0] * 3
+    with pytest.raises(ValueError):
+        thread_nodes((5, 3), 9)
+
+
+def test_transition_cost_counts_and_time():
+    m = E5_2630_V3
+    model = MigrationModel(
+        thread_move_bytes=1e6, page_move_bytes=1e8, bandwidth=1e9
+    )
+    # (5,3) -> (3,5): threads 3,4 move node AND (identity banks) re-bank
+    t, mt, mp = transition_cost(m, model, 8, (5, 3), None, (3, 5), None)
+    assert mt == 2 and mp == 2
+    assert t == pytest.approx((2 * 1e6 + 2 * 1e8) / 1e9)
+    # same move, pages stay behind via follow_banks: no page traffic
+    fb = follow_banks(m, 8, (5, 3), None, (3, 5))
+    t2, mt2, mp2 = transition_cost(m, model, 8, (5, 3), None, (3, 5), fb)
+    assert mt2 == 2
+    assert mp2 <= mp
+    # no move, no cost
+    t3, mt3, mp3 = transition_cost(m, model, 8, (5, 3), None, (5, 3), None)
+    assert (t3, mt3, mp3) == (0.0, 0, 0)
+
+
+def test_follow_banks_plurality():
+    m = E7_4830_V3
+    # (12,6,6,0) -> (6,6,6,6): node 1's arrivals (threads 6-11) held bank
+    # 0, node 2's held bank 1, node 3's held bank 2 -- pages stay put.
+    fb = follow_banks(m, 24, (12, 6, 6, 0), None, (6, 6, 6, 6))
+    assert fb == (0, 0, 1, 2)
+    # nothing moved -> identity -> canonicalized to None
+    assert follow_banks(m, 24, (6, 6, 6, 6), None, (6, 6, 6, 6)) is None
+
+
+def test_evaluate_schedule_accounting():
+    m = E5_2630_V3
+    wa, wb = _flip_phases()
+    pw = phased_workload("flip", [(wa, 5.0), (wb, 5.0)])
+    model = MigrationModel(
+        thread_move_bytes=1e6, page_move_bytes=1e6, bandwidth=52e9
+    )
+    sched = evaluate_schedule(
+        m, pw, [(5, 3), (3, 5)], model=model
+    )
+    r0 = float(exact_objectives(m, wa, np.asarray([[5, 3]], np.int32))[0])
+    r1 = float(exact_objectives(m, wb, np.asarray([[3, 5]], np.int32))[0])
+    stall = sched.transition_times[0]
+    assert sched.phase_rates == (r0, r1)
+    assert sched.total_work == pytest.approx(
+        r0 * 5.0 + r1 * (5.0 - stall), rel=1e-12
+    )
+    # a stall longer than the phase forfeits the phase, never negative
+    slow = MigrationModel(
+        thread_move_bytes=1e15, page_move_bytes=0.0, bandwidth=1e9
+    )
+    sched2 = evaluate_schedule(m, pw, [(5, 3), (3, 5)], model=slow)
+    assert sched2.total_work == pytest.approx(r0 * 5.0)
+
+
+# ---------------------------------------------------------------------------
+# optimize_schedule: the pinned crossover + structure guarantees
+# ---------------------------------------------------------------------------
+
+
+def test_single_phase_matches_steady_state_argmax():
+    """A 1-phase schedule is exactly today's one-shot answer: the best
+    placement by the grouped solver, total work = duration * its rate."""
+    m = E5_2630_V3
+    wa, _ = _flip_phases()
+    scores = exact_objectives(m, wa, np.asarray(enumerate_placements(m, 8)))
+    res = optimize_schedule(m, phased_workload("one", [(wa, 3.0)]))
+    assert len(res.schedule.placements) == 1
+    assert res.schedule.bank_assignments == (None,)
+    chosen = exact_objectives(
+        m, wa, np.asarray([res.schedule.placements[0]], np.int32)
+    )[0]
+    # batch shapes differ between the full sweep and the single row, so
+    # compare at solver precision rather than bitwise
+    assert float(chosen) == pytest.approx(float(scores.max()), rel=1e-6)
+    assert res.schedule.total_work == pytest.approx(
+        3.0 * float(scores.max()), rel=1e-6
+    )
+    assert res.gain_pct == 0.0
+
+
+def test_migration_crossover_pinned():
+    """Below the phase-gain crossover the scheduler strictly beats the
+    best static placement; above it, it degrades exactly to static."""
+    m = E5_2630_V3
+    wa, wb = _flip_phases()
+    pw = phased_workload("flip", [(wa, 5.0), (wb, 5.0)])
+
+    cheap = MigrationModel(thread_move_bytes=1e6, page_move_bytes=1e6)
+    res = optimize_schedule(m, pw, model=cheap)
+    assert res.gain_pct > 0.0
+    assert res.schedule.placements[0] != res.schedule.placements[1]
+    assert res.schedule.moved_threads[0] > 0
+    assert res.schedule.total_work > res.static.total_work
+
+    prohibitive = MigrationModel(
+        thread_move_bytes=1e13, page_move_bytes=1e13
+    )
+    res2 = optimize_schedule(m, pw, model=prohibitive)
+    assert res2.gain_pct == 0.0
+    assert res2.schedule.placements[0] == res2.schedule.placements[1]
+    assert res2.schedule.total_work == res2.static.total_work
+
+
+def test_schedule_never_below_static():
+    """The static trajectory is in the DP's feasible set, so gain_pct is
+    never negative — across a migration-cost ladder."""
+    m = E5_2630_V3
+    wa, wb = _flip_phases()
+    pw = phased_workload("flip", [(wa, 2.0), (wb, 8.0)])
+    for scale in (1e4, 1e7, 1e9, 1e11, 1e13):
+        res = optimize_schedule(
+            m, pw,
+            model=MigrationModel(
+                thread_move_bytes=scale, page_move_bytes=10 * scale
+            ),
+        )
+        assert res.gain_pct >= 0.0, scale
+
+
+def test_page_placement_option_never_hurts():
+    """With page moves priced out, leaving pages behind (the bank axis)
+    can only help: the page-placement DP dominates the thread-only DP."""
+    m = E5_2630_V3_MIXED_DIMM
+    wl_local = mixed_workload(
+        "loc", 8, read_mix=(0.05, 0.8, 0.05), read_bpi=4.0
+    )
+    wl_static = mixed_workload(
+        "stat", 8, read_mix=(0.8, 0.1, 0.0), read_bpi=4.0, static_socket=1
+    )
+    pw = phased_workload("mix", [(wl_local, 4.0), (wl_static, 4.0)])
+    model = MigrationModel(thread_move_bytes=1e5, page_move_bytes=1e12)
+    # unpruned beam: with the page option the DP's feasible set is a
+    # strict superset, so its optimum dominates
+    with_pages = optimize_schedule(m, pw, model=model, beam_width=256)
+    without = optimize_schedule(
+        m, pw, model=model, allow_page_placement=False, beam_width=256
+    )
+    assert with_pages.schedule.total_work >= without.schedule.total_work - 1e-6
+
+
+def test_evaluate_schedule_agrees_with_search():
+    m = E5_2630_V3
+    wa, wb = _flip_phases()
+    pw = phased_workload("flip", [(wa, 5.0), (wb, 5.0)])
+    model = MigrationModel(thread_move_bytes=1e6, page_move_bytes=1e6)
+    res = optimize_schedule(m, pw, model=model)
+    ev = evaluate_schedule(
+        m, pw, res.schedule.placements,
+        bank_assignments=res.schedule.bank_assignments, model=model,
+    )
+    assert ev.total_work == pytest.approx(
+        res.schedule.total_work, rel=1e-9
+    )
+
+
+def test_three_phase_four_socket_schedule():
+    """A bigger instance: 3 phases on the 4-socket preset; the scheduler
+    returns a consistent trajectory and beats static with cheap moves."""
+    m = E7_4830_V3
+    phases = [
+        (mixed_workload("p0", 24, read_mix=(0.7, 0.1, 0.0), read_bpi=4.0,
+                        static_socket=0), 4.0),
+        (mixed_workload("p1", 24, read_mix=(0.7, 0.1, 0.0), read_bpi=4.0,
+                        static_socket=2), 4.0),
+        (mixed_workload("p2", 24, read_mix=(0.1, 0.6, 0.1), read_bpi=4.0),
+         2.0),
+    ]
+    pw = phased_workload("tri", phases)
+    res = optimize_schedule(
+        m, pw, model=MigrationModel(thread_move_bytes=1e6,
+                                    page_move_bytes=1e6)
+    )
+    assert len(res.schedule.placements) == 3
+    assert all(sum(p) == 24 for p in res.schedule.placements)
+    assert res.gain_pct > 0.0
+    assert len(res.schedule.transition_times) == 2
