@@ -23,6 +23,13 @@ exits non-zero when, on any sweep,
   ``max_p99_ms``, the mixed stream's jit retrace counter exceeds
   ``max_retraces`` (committed as 0), or micro-batch coalescing degrades
   below ``min_mean_batch_size``; or
+* on a ``serve-resilience`` record (``benchmarks/serve_resilience.py``),
+  the chaos stream's degraded-answer rate exceeds its committed ceiling,
+  any query hangs past the deadline-plus-grace bound, post-fault recovery
+  exceeds ``max_recovery_s``, the hot-swap cycle's swap/rollback counts
+  differ from the committed exact values, any torn read is observed
+  (``max_torn_reads = 0``: one answer per (signature, epoch) pair), or
+  corrupted counter rows stopped being rejected at ingest; or
 * on a ``schedule-search`` record (``benchmarks/schedule_search.py``),
   the scheduler's *gain* over the best static placement falls below the
   committed ``min_static_gain_pct`` (the time axis must keep paying for
@@ -72,6 +79,53 @@ def check(
         rec = new_by_sweep.get(sweep)
         if rec is None:
             failures.append(f"{sweep!r}: missing from the new artifact")
+            continue
+        if (
+            "max_degraded_rate" in base
+            or "max_recovery_s" in base
+            or "max_torn_reads" in base
+        ):
+            # resilience record (benchmarks/serve_resilience.py): gate the
+            # chaos stream's degraded-answer rate and hang count, the
+            # post-fault recovery time, and the hot-swap cycle's exact
+            # swap/rollback counts + zero torn reads.  Checked before the
+            # min_qps branch: the chaos record carries a qps floor too.
+            checks = [
+                ("qps", "min_qps", "floor", lambda v, b: v >= b),
+                ("degraded_rate", "max_degraded_rate", "max",
+                 lambda v, b: v <= b),
+                ("hangs", "max_hangs", "max", lambda v, b: v <= b),
+                ("recovery_s", "max_recovery_s", "max",
+                 lambda v, b: v == v and v <= b),  # NaN = never recovered
+                ("torn_reads", "max_torn_reads", "max",
+                 lambda v, b: v <= b),
+                ("swaps", "expected_swaps", "exactly",
+                 lambda v, b: v == b),
+                ("rollbacks", "expected_rollbacks", "exactly",
+                 lambda v, b: v == b),
+                ("nan_rejected", "min_nan_rejected", "floor",
+                 lambda v, b: v >= b),
+            ]
+            for field, gate, kind, ok in checks:
+                bound = base.get(gate)
+                if bound is None:
+                    continue
+                val = rec.get(field)
+                good = val is not None and ok(val, bound)
+                status = "OK" if good else "FAIL"
+                print(f"{sweep}: {field} {val} ({kind} {bound}) [{status}]")
+                if not good:
+                    failures.append(
+                        f"{sweep!r}: {field} {val} violates the committed "
+                        f"{gate} {bound} (resilience contract broken)"
+                    )
+            for flag in ("all_tagged", "search_retry_ok"):
+                if flag in base and not rec.get(flag, False):
+                    print(f"{sweep}: {flag} False [FAIL]")
+                    failures.append(
+                        f"{sweep!r}: {flag} is False (resilience "
+                        f"contract broken)"
+                    )
             continue
         if "min_qps" in base:
             # advisor-serve record (benchmarks/advisor_serve.py): gate

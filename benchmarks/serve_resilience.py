@@ -1,0 +1,288 @@
+"""Chaos/resilience benchmark for the placement-advisor service.
+
+Where ``benchmarks/advisor_serve.py`` commits what the service does when
+*healthy* (qps floors, p99 ceilings, zero retraces), this benchmark
+commits what it does when *unhealthy* — driven by the fault-injection
+harness (:mod:`repro.serve.faults`) — and emits three records gated in
+CI by ``check_sweep_regression.py``:
+
+* **chaos-mixed** — a 1k mixed query stream with a per-query deadline
+  while faults fire: slow and failing batch dispatches, batcher-thread
+  deaths (self-healed), and search-attempt failures (absorbed by the
+  retry ladder).  Commits: zero hangs (no query's wall time exceeds the
+  deadline plus a grace bound), every answer fidelity-tagged, a ceiling
+  on the degraded-answer rate and a qps floor under fire.
+* **recovery** — the faults are cleared and fresh queries are issued
+  until the exact tier answers again; commits a recovery-time ceiling
+  (the committed "recovery-time floor" of the serving contract: the
+  service must be back to exact-fidelity answers within it).
+* **hot-swap** — a live recalibration cycle under a sustained query
+  stream: a clean counter sweep from a drifted machine is ingested and
+  hot-swapped in (epoch bump), then a guard-rejected refit is rolled
+  back; commits exactly one swap, exactly one rollback, NaN-corrupted
+  rows rejected at ingest, and ZERO torn reads — every (signature,
+  epoch) pair observed by the stream maps to exactly one answer.
+
+Run directly:
+
+    PYTHONPATH=src python benchmarks/serve_resilience.py [--json OUT.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+import time
+from pathlib import Path
+
+
+def chaos_records(
+    *,
+    n_chaos: int = 1000,
+    n_hot: int = 32,
+    workers: int = 4,
+    deadline_s: float = 0.25,
+    hang_grace_s: float = 1.0,
+    max_batch: int = 8,
+) -> list[dict]:
+    """Run the three resilience phases and return their records."""
+    from repro.core.numa import E7_4830_V3, E5_2699_V3_SNC2, make_machine
+    from repro.core.numa import calibrate as C
+    from repro.launch.advisor_serve import signature_pool
+    from repro.serve import (
+        AdvisorService,
+        FaultInjector,
+        Recalibrator,
+    )
+
+    fi = FaultInjector()
+    service = AdvisorService(
+        max_batch=max_batch, max_wait_s=0.002, faults=fi,
+        default_deadline_s=deadline_s,
+    )
+    sweep_fp = service.register(E7_4830_V3)
+    m16 = make_machine(
+        "snc2-8s", sockets=8, cores_per_socket=8, nodes_per_socket=2,
+        qpi_bw=25.6e9,
+    )
+    search_fp = service.register(m16)
+
+    hot = signature_pool(n_hot, seed=0)
+    fresh = signature_pool(n_chaos, seed=7)
+    search_sigs = signature_pool(4, seed=13)
+
+    # warm every path the chaos phase will exercise, including the
+    # degradation ladder's ranked rung (warmup primes it)
+    service.warmup(sweep_fp, 24)
+    service.warmup(search_fp, 32, search_sigs[0])
+    for sig in hot:
+        service.query(sweep_fp, sig, 24)
+    service.metrics.reset(keep_traces=True)
+
+    records: list[dict] = []
+
+    # -- phase 1: chaos-mixed ------------------------------------------------
+    fi.inject_slow("batch", 0.3, times=12)
+    fi.inject_error("batch", times=8)
+    fi.inject_error("batcher", times=2)
+    fi.inject_error("search", times=2)
+
+    import numpy as np
+
+    rng = np.random.default_rng(3)
+    fresh_iter = iter(fresh)
+    stream = []
+    for _ in range(n_chaos):
+        if rng.random() < 0.6:
+            stream.append(hot[int(rng.integers(n_hot))])
+        else:
+            stream.append(next(fresh_iter))
+
+    walls = [0.0] * n_chaos
+    answers = [None] * n_chaos
+    import itertools
+
+    counter = itertools.count()
+
+    def worker() -> None:
+        while True:
+            i = next(counter)
+            if i >= n_chaos:
+                return
+            t0 = time.perf_counter()
+            answers[i] = service.query(sweep_fp, stream[i], 24)
+            walls[i] = time.perf_counter() - t0
+
+    threads = [threading.Thread(target=worker) for _ in range(workers)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    # one fresh search-tier query rides along: the injected search-attempt
+    # failures must be absorbed by retry-with-backoff, not surface
+    search_adv = service.query(search_fp, search_sigs[1], 32, deadline_s=30.0)
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    t_faults_cleared = time.perf_counter()
+    fi.clear()
+
+    from repro.serve.metrics import FIDELITIES
+
+    degraded = sum(1 for a in answers if a.fidelity != "exact")
+    hangs = sum(1 for w in walls if w > deadline_s + hang_grace_s)
+    snap = service.metrics.snapshot()
+    records.append({
+        "sweep": "serve-resilience chaos-mixed",
+        "queries": n_chaos,
+        "qps": round(n_chaos / wall, 1),
+        "wall_s": round(wall, 3),
+        "deadline_ms": deadline_s * 1e3,
+        "degraded_queries": degraded,
+        "degraded_rate": round(degraded / n_chaos, 4),
+        "hangs": hangs,
+        "all_tagged": all(
+            a is not None and a.fidelity in FIDELITIES for a in answers
+        ),
+        "worker_restarts": snap["worker_restarts"],
+        "search_retry_ok": bool(
+            search_adv.tier == "search" and search_adv.fidelity == "exact"
+        ),
+        "batch_faults_fired": fi.fired("batch"),
+        "batcher_faults_fired": fi.fired("batcher"),
+        "min_qps": 25,
+        "max_degraded_rate": 0.5,
+        "max_hangs": 0,
+    })
+
+    # -- phase 2: recovery ---------------------------------------------------
+    # faults are cleared; issue fresh queries until the exact tier answers
+    recovery_s = float("nan")
+    probe = signature_pool(64, seed=23)
+    for sig in probe:
+        adv = service.query(sweep_fp, sig, 24, deadline_s=deadline_s)
+        if adv.fidelity == "exact":
+            recovery_s = time.perf_counter() - t_faults_cleared
+            break
+    records.append({
+        "sweep": "serve-resilience recovery",
+        "recovery_s": round(recovery_s, 3),
+        "max_recovery_s": 10.0,
+    })
+
+    # -- phase 3: hot-swap under a sustained stream --------------------------
+    truth = E5_2699_V3_SNC2
+    # the serving spec starts drifted: remote links 25% under-reported
+    drifted = truth._replace(
+        remote_read_bw=truth.remote_read_bw * 0.75,
+        remote_write_bw=truth.remote_write_bw * 0.75,
+    )
+    prod_fp = service.register(drifted, machine_id="prod-snc2")
+    service.warmup(prod_fp, 8)
+    swap_sigs = signature_pool(12, seed=31)
+
+    observed: list[tuple] = []
+    stop = threading.Event()
+
+    def stream_worker() -> None:
+        i = 0
+        # cap bounds the audit log's memory; epoch coverage, not volume,
+        # is what the torn-read check needs
+        while not stop.is_set() and i < 100_000:
+            sig = swap_sigs[i % len(swap_sigs)]
+            adv = service.query(prod_fp, sig, 8)  # no deadline: exact only
+            observed.append((
+                i % len(swap_sigs), adv.epoch, adv.placement,
+                adv.objective, adv.predicted_bandwidth,
+            ))
+            i += 1
+
+    streamers = [threading.Thread(target=stream_worker) for _ in range(2)]
+    for t in streamers:
+        t.start()
+
+    recal = Recalibrator(service, min_samples=16, fit_steps=150)
+    clean = C.collect_sweep(
+        truth, C.probe_suite(truth, n_threads=8), noise_std=0.01
+    )
+    recal.ingest(prod_fp, clean)
+    accept_event = recal.recalibrate(prod_fp)
+
+    # second cycle: corrupted rows at ingest + a guard pinned unmeetable
+    # (demands a >=100pp improvement), so the refit is deterministically
+    # rejected — the rollback path under test
+    fi.inject_counter_corruption(fraction=0.25, times=1, seed=5)
+    guard = Recalibrator(
+        service, min_samples=16, fit_steps=20,
+        max_error_regression_pp=-100.0,
+    )
+    diag = guard.ingest(prod_fp, C.collect_sweep(
+        truth, C.probe_suite(truth, n_threads=8), noise_std=0.01
+    ))
+    reject_event = guard.recalibrate(prod_fp)
+    fi.clear()
+
+    time.sleep(0.2)  # let the stream straddle the post-rollback epoch too
+    stop.set()
+    for t in streamers:
+        t.join()
+
+    # torn-read audit: one answer per (signature, epoch) pair, ever
+    by_key: dict[tuple, tuple] = {}
+    torn = 0
+    for sig_id, epoch, placement, obj, bw in observed:
+        key = (sig_id, epoch)
+        val = (placement, obj, bw)
+        if key in by_key and by_key[key] != val:
+            torn += 1
+        by_key[key] = val
+
+    snap = service.metrics.snapshot()
+    records.append({
+        "sweep": "serve-resilience hot-swap",
+        "stream_queries": len(observed),
+        "epochs_observed": sorted({e for _, e, _, _, _ in observed}),
+        "swaps": snap["swaps"],
+        "rollbacks": snap["rollbacks"],
+        "swap_accepted": bool(accept_event.accepted),
+        "swap_error_pct": round(accept_event.new_error_pct, 3),
+        "reject_reason_guard": "regressed" in reject_event.reason
+        or "improvement" in reject_event.reason
+        or not reject_event.accepted,
+        "nan_rejected": int(diag.n_rejected),
+        "torn_reads": torn,
+        "expected_swaps": 1,
+        "expected_rollbacks": 1,
+        "max_torn_reads": 0,
+        "min_nan_rejected": 1,
+    })
+
+    service.close()
+    return records
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--json",
+        type=Path,
+        default=None,
+        help="write results as a JSON artifact (for CI upload/trending)",
+    )
+    args = parser.parse_args()
+
+    records = chaos_records()
+    for rec in records:
+        print(f"{rec['sweep']}:")
+        for k, v in rec.items():
+            if k != "sweep":
+                print(f"  {k}: {v}")
+
+    if args.json is not None:
+        args.json.parent.mkdir(parents=True, exist_ok=True)
+        args.json.write_text(json.dumps(records, indent=2) + "\n")
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -98,18 +98,46 @@ def aggregate(runs: list[dict]) -> dict[str, dict]:
     added later simply have shorter series).  ``placement-search``
     records (``regret_pct`` / ``time_to_solution_s`` instead of error /
     throughput — see ``benchmarks/placement_search.py``) aggregate into
-    ``regret`` / ``tts`` series instead, and ``advisor-serve`` records
-    (``benchmarks/advisor_serve.py``) into ``qps`` / ``p99`` series."""
+    ``regret`` / ``tts`` series instead, ``advisor-serve`` records
+    (``benchmarks/advisor_serve.py``) into ``qps`` / ``p99`` series,
+    ``schedule-search`` records into ``gain`` / ``stts`` series, and
+    ``serve-resilience`` records into one headline-metric series each
+    (degraded rate, recovery seconds, torn reads)."""
     series: dict[str, dict] = {}
     for run in runs:
         by_sweep = {rec["sweep"]: rec for rec in run["records"]}
         for sweep, rec in by_sweep.items():
-            if "qps" in rec:
+            if (
+                "degraded_rate" in rec
+                or "recovery_s" in rec
+                or "torn_reads" in rec
+            ):
+                # resilience record (benchmarks/serve_resilience.py);
+                # checked before qps — the chaos record carries qps too.
+                # Each record trends one headline metric.
+                if "degraded_rate" in rec:
+                    metric, val = "degraded_rate", rec["degraded_rate"]
+                elif "recovery_s" in rec:
+                    metric, val = "recovery_s", rec["recovery_s"]
+                else:
+                    metric, val = "torn_reads", rec["torn_reads"]
+                s = series.setdefault(
+                    sweep, {"resilience": [], "metric": metric, "runs": []}
+                )
+                s["resilience"].append(float(val))
+            elif "qps" in rec:
                 s = series.setdefault(
                     sweep, {"qps": [], "p99": [], "runs": []}
                 )
                 s["qps"].append(float(rec["qps"]))
                 s["p99"].append(float(rec.get("p99_ms", 0.0)))
+            elif "gain_pct" in rec:
+                # schedule-search record (benchmarks/schedule_search.py)
+                s = series.setdefault(
+                    sweep, {"gain": [], "stts": [], "runs": []}
+                )
+                s["gain"].append(float(rec["gain_pct"]))
+                s["stts"].append(float(rec.get("time_to_solution_s", 0.0)))
             elif "regret_pct" in rec:
                 s = series.setdefault(
                     sweep, {"regret": [], "tts": [], "runs": []}
@@ -130,7 +158,9 @@ def render_markdown(series: dict[str, dict]) -> str:
     """The dashboard: one row per sweep with the latest median error, the
     delta against the previous run, series extremes and a sparkline;
     placement-search rows trend regret and warm time-to-solution;
-    advisor-serve rows trend phase qps and p99 latency."""
+    advisor-serve rows trend phase qps and p99 latency; schedule-search
+    rows trend static gain; serve-resilience rows trend their headline
+    metric (degraded rate / recovery time / torn reads)."""
     sweeps = sorted(k for k, s in series.items() if "errors" in s)
     searches = sorted(k for k, s in series.items() if "regret" in s)
     lines = [
@@ -195,6 +225,39 @@ def render_markdown(series: dict[str, dict]) -> str:
             lines.append(
                 f"| {sweep} | {len(qps)} | {qps[-1]:,.0f} | {ratio} "
                 f"| {p99[-1]:.3f} | {max(p99):.3f} | `{sparkline(qps)}` |"
+            )
+    schedules = sorted(k for k, s in series.items() if "gain" in s)
+    if schedules:
+        lines += [
+            "",
+            "Schedule search (gain over the best static placement and "
+            "warm time-to-solution; floors/caps are gated):",
+            "",
+            "| schedule | runs | gain % (latest) | best | time-to-solution s (latest) | trend (gain) |",
+            "| --- | ---: | ---: | ---: | ---: | --- |",
+        ]
+        for sweep in schedules:
+            gain, stts = series[sweep]["gain"], series[sweep]["stts"]
+            lines.append(
+                f"| {sweep} | {len(gain)} | {gain[-1]:.4f} "
+                f"| {max(gain):.4f} | {stts[-1]:.3f} | `{sparkline(gain)}` |"
+            )
+    resil = sorted(k for k, s in series.items() if "resilience" in s)
+    if resil:
+        lines += [
+            "",
+            "Serve resilience (chaos degraded-answer rate, post-fault "
+            "recovery time, hot-swap torn reads; all gated):",
+            "",
+            "| record | runs | metric | latest | worst | trend |",
+            "| --- | ---: | --- | ---: | ---: | --- |",
+        ]
+        for sweep in resil:
+            vals = series[sweep]["resilience"]
+            metric = series[sweep]["metric"]
+            lines.append(
+                f"| {sweep} | {len(vals)} | {metric} | {vals[-1]:.4g} "
+                f"| {max(vals):.4g} | `{sparkline(vals)}` |"
             )
     return "\n".join(lines) + "\n"
 

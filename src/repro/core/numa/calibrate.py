@@ -121,9 +121,27 @@ class CalibrationParams(NamedTuple):
     att_raw: Array  # () — hop_attenuation = sigmoid(att_raw)
 
 
+class SampleDiagnostics(NamedTuple):
+    """Ingestion receipts from :func:`clean_samples`: how many rows
+    arrived, how many survived, and why the rest were rejected — the
+    counted evidence a production counter feed is (or is not) healthy."""
+
+    n_total: int
+    n_kept: int
+    n_rejected: int
+    reasons: tuple[str, ...]  # one short description per reject category
+
+    @property
+    def reject_rate(self) -> float:
+        """Fraction of ingested rows rejected (0.0 on an empty batch)."""
+        return self.n_rejected / self.n_total if self.n_total else 0.0
+
+
 class CalibrationResult(NamedTuple):
     """A fitted machine plus the optimizer's receipts (loss trajectory,
-    seed-vs-final loss, and the raw parameters behind the spec)."""
+    seed-vs-final loss, and the raw parameters behind the spec).
+    ``diagnostics`` carries the sample-ingestion receipts when the fit
+    cleaned its input (``fit_machine(clean=True)``, the default)."""
 
     machine: MachineSpec  # the fitted spec (concrete, validated)
     params: CalibrationParams
@@ -131,6 +149,7 @@ class CalibrationResult(NamedTuple):
     loss_history: np.ndarray  # (steps,)
     seed_loss: float
     final_loss: float
+    diagnostics: "SampleDiagnostics | None" = None
 
 
 # ---------------------------------------------------------------------------
@@ -185,6 +204,142 @@ def samples_from_counters(
         instructions=jnp.stack([c.instructions for c in counters]),
         elapsed=jnp.stack([jnp.asarray(c.elapsed, jnp.float32) for c in counters]),
     )
+
+
+def _take_rows(samples: CalibrationSamples, keep: np.ndarray) -> CalibrationSamples:
+    """Index every leaf of a sample set by the ``keep`` row indices."""
+    take = lambda arr: jnp.asarray(np.asarray(arr)[keep])
+    return CalibrationSamples(
+        wl_arrays=tuple(take(a) for a in samples.wl_arrays),
+        placements=take(samples.placements),
+        local_read=take(samples.local_read),
+        remote_read=take(samples.remote_read),
+        local_write=take(samples.local_write),
+        remote_write=take(samples.remote_write),
+        instructions=take(samples.instructions),
+        elapsed=take(samples.elapsed),
+    )
+
+
+def clean_samples(
+    samples: CalibrationSamples,
+    *,
+    on_empty: str = "raise",
+) -> tuple[CalibrationSamples, SampleDiagnostics]:
+    """NaN-guard a sample batch before it can poison the AdamW fit.
+
+    A row (one profiled placement) is rejected when any of its workload
+    arrays, placement entries or counters is non-finite, any counter is
+    negative, or its elapsed time is not strictly positive — the three
+    corruption modes a production counter feed actually exhibits (dropped
+    MSR reads surface as NaN/garbage, wrap-around as negatives, a dead
+    sampling interval as elapsed 0).  Returns the surviving rows plus a
+    :class:`SampleDiagnostics` counting what was dropped and why.
+
+    ``on_empty="raise"`` (default) raises a descriptive ``ValueError``
+    when *no* row survives — a silently empty fit input is the worst
+    possible outcome; ``on_empty="ignore"`` returns the empty batch for
+    callers that accumulate across batches and check later.
+    """
+    P = samples.n_samples
+    leaves = (
+        samples.wl_arrays
+        + (
+            samples.placements,
+            samples.local_read,
+            samples.remote_read,
+            samples.local_write,
+            samples.remote_write,
+            samples.instructions,
+            samples.elapsed,
+        )
+    )
+    finite = np.ones((P,), bool)
+    for arr in leaves:
+        a = np.asarray(arr, np.float64).reshape(P, -1)
+        finite &= np.isfinite(a).all(axis=1)
+    counters = np.concatenate(
+        [
+            np.asarray(c, np.float64).reshape(P, -1)
+            for c in (
+                samples.local_read, samples.remote_read,
+                samples.local_write, samples.remote_write,
+                samples.instructions,
+            )
+        ],
+        axis=1,
+    )
+    with np.errstate(invalid="ignore"):
+        nonneg = ~(counters < 0).any(axis=1)
+        pos_elapsed = np.asarray(samples.elapsed, np.float64) > 0
+    keep_mask = finite & nonneg & pos_elapsed
+    reasons = []
+    for mask, what in (
+        (~finite, "non-finite values"),
+        (finite & ~nonneg, "negative counters"),
+        (finite & nonneg & ~pos_elapsed, "non-positive elapsed time"),
+    ):
+        idx = np.flatnonzero(mask)
+        if idx.size:
+            shown = ", ".join(str(i) for i in idx[:8])
+            more = f", +{idx.size - 8} more" if idx.size > 8 else ""
+            reasons.append(f"{idx.size} row(s) with {what} (rows {shown}{more})")
+    diag = SampleDiagnostics(
+        n_total=P,
+        n_kept=int(keep_mask.sum()),
+        n_rejected=int(P - keep_mask.sum()),
+        reasons=tuple(reasons),
+    )
+    if diag.n_kept == 0 and on_empty == "raise":
+        raise ValueError(
+            f"all {P} calibration samples rejected: " + "; ".join(reasons)
+            if reasons
+            else "calibration sample batch is empty"
+        )
+    if diag.n_rejected == 0:
+        return samples, diag
+    return _take_rows(samples, np.flatnonzero(keep_mask)), diag
+
+
+def concat_samples(batches: Sequence[CalibrationSamples]) -> CalibrationSamples:
+    """Concatenate sample batches along the sample axis — the
+    accumulation step of a production recalibration stream, where
+    counters arrive machine-by-machine in partial sweeps rather than as
+    one designed probe suite.  All batches must agree on node count and
+    probe thread count."""
+    if not batches:
+        raise ValueError("need at least one sample batch to concatenate")
+    if len(batches) == 1:
+        return batches[0]
+    nodes = {b.n_nodes for b in batches}
+    if len(nodes) != 1:
+        raise ValueError(f"sample batches disagree on node count: {nodes}")
+    shapes = {tuple(np.asarray(a).shape[1:] for a in b.wl_arrays) for b in batches}
+    if len(shapes) != 1:
+        raise ValueError(
+            "sample batches disagree on workload shape (thread counts differ?)"
+        )
+    cat = lambda leaves: jnp.concatenate([jnp.asarray(a) for a in leaves])
+    return CalibrationSamples(
+        wl_arrays=tuple(
+            cat([b.wl_arrays[i] for b in batches])
+            for i in range(len(batches[0].wl_arrays))
+        ),
+        placements=cat([b.placements for b in batches]),
+        local_read=cat([b.local_read for b in batches]),
+        remote_read=cat([b.remote_read for b in batches]),
+        local_write=cat([b.local_write for b in batches]),
+        remote_write=cat([b.remote_write for b in batches]),
+        instructions=cat([b.instructions for b in batches]),
+        elapsed=cat([b.elapsed for b in batches]),
+    )
+
+
+def take_samples(samples: CalibrationSamples, idx) -> CalibrationSamples:
+    """Row-subset a sample set (``idx`` is any numpy index expression) —
+    the partial-sweep path: fitting proceeds from whatever subset of the
+    probe suite a production trace happened to cover."""
+    return _take_rows(samples, np.asarray(idx))
 
 
 # ---------------------------------------------------------------------------
@@ -473,6 +628,18 @@ def _caps_from(
     )
 
 
+def _residual_penalty(r: Array, huber_delta: float | None) -> Array:
+    """Sum of squared residuals, or — when ``huber_delta`` is set — the
+    Huber penalty: quadratic inside ``delta``, linear outside, so a few
+    wildly corrupted counter rows pull the fit linearly instead of
+    quadratically (the outlier-robust loss production traces need)."""
+    if huber_delta is None:
+        return (r**2).sum()
+    a = jnp.abs(r)
+    d = huber_delta
+    return jnp.where(a <= d, 0.5 * a * a, d * (a - 0.5 * d)).sum()
+
+
 def _sweep_loss(
     template: MachineSpec,
     groups: LinkGroups,
@@ -480,6 +647,7 @@ def _sweep_loss(
     params: CalibrationParams,
     instruction_weight: float,
     thread_classes: tuple[int, ...],
+    huber_delta: float | None = None,
 ) -> Array:
     caps = _caps_from(template, groups, params)
 
@@ -494,11 +662,11 @@ def _sweep_loss(
             [smp.local_read, smp.remote_read, smp.local_write, smp.remote_write]
         )
         total = jnp.maximum(obs.sum(), _EPS)
-        err = (((sim - obs) / total) ** 2).sum()
+        err = _residual_penalty((sim - obs) / total, huber_delta)
         itot = jnp.maximum(oins.sum() / el, _EPS)
-        err += instruction_weight * (
-            ((smp.instructions - oins / el) / itot) ** 2
-        ).sum()
+        err += instruction_weight * _residual_penalty(
+            (smp.instructions - oins / el) / itot, huber_delta
+        )
         return err
 
     errs = jax.vmap(per_sample)(
@@ -518,12 +686,12 @@ def _sweep_loss(
     jax.jit,
     static_argnames=(
         "template", "groups", "steps", "lr", "instruction_weight",
-        "thread_classes",
+        "thread_classes", "huber_delta",
     ),
 )
 def _fit_jit(
     template, groups, samples, params, steps, lr, instruction_weight,
-    thread_classes,
+    thread_classes, huber_delta=None,
 ):
     schedule = adamw.cosine_schedule(
         lr, warmup_steps=min(20, max(steps // 10, 1)), total_steps=steps
@@ -538,7 +706,7 @@ def _fit_jit(
         loss, grads = jax.value_and_grad(
             lambda q: _sweep_loss(
                 template, groups, samples, CalibrationParams(**q),
-                instruction_weight, thread_classes,
+                instruction_weight, thread_classes, huber_delta,
             )
         )(p)
         new_p, new_st = adamw.update(
@@ -555,7 +723,7 @@ def _fit_jit(
     # machine actually handed back
     final_loss = _sweep_loss(
         template, groups, samples, final_params, instruction_weight,
-        thread_classes,
+        thread_classes, huber_delta,
     )
     return final_params, history, final_loss
 
@@ -605,6 +773,8 @@ def fit_machine(
     init: CalibrationParams | None = None,
     instruction_weight: float = 0.25,
     name: str | None = None,
+    clean: bool = True,
+    huber_delta: float | None = None,
 ) -> CalibrationResult:
     """Fit a machine's free parameters from a counter sweep.
 
@@ -612,12 +782,25 @@ def fit_machine(
     counts, core rates, remote path bases); its bandwidth values are *not*
     consulted — seeding reads them off the samples.  ``tie_equal_bw``
     shares one parameter across links the template marks as the same class
-    (see :func:`repro.core.numa.topology.link_groups`)."""
+    (see :func:`repro.core.numa.topology.link_groups`).
+
+    ``clean=True`` (default) runs :func:`clean_samples` first, so
+    corrupted/non-finite counter rows are rejected (and counted in
+    ``result.diagnostics``) instead of silently poisoning the AdamW fit;
+    ``huber_delta`` switches the loss from squared to Huber on the
+    relative residuals — the outlier-robust setting for noisy partial
+    production traces (a sweep-relative delta around 0.01–0.1 works; None
+    keeps the exact squared loss and bit-identical legacy fits)."""
     if samples.n_nodes != template.n_nodes:
         raise ValueError(
             f"samples cover {samples.n_nodes} nodes; template has "
             f"{template.n_nodes}"
         )
+    diagnostics = None
+    if clean:
+        samples, diagnostics = clean_samples(samples)
+    if samples.n_samples == 0:
+        raise ValueError("no calibration samples to fit from")
     if groups is None:
         groups = link_groups(template.topology, tie_equal_bw=tie_equal_bw)
     if init is None:
@@ -628,14 +811,16 @@ def fit_machine(
     # is the stacked static_socket scalar, whose trailing axis is samples,
     # not threads — exclude it.
     thread_classes = class_starts_from_arrays(samples.wl_arrays[:-1])
+    huber = None if huber_delta is None else float(huber_delta)
     seed_loss = float(
         _sweep_loss(
-            template, groups, samples, init, instruction_weight, thread_classes
+            template, groups, samples, init, instruction_weight,
+            thread_classes, huber,
         )
     )
     params, history, final_loss = _fit_jit(
         template, groups, samples, init, int(steps), float(lr),
-        float(instruction_weight), thread_classes,
+        float(instruction_weight), thread_classes, huber,
     )
     return CalibrationResult(
         machine=fitted_machine(template, groups, params, name=name),
@@ -644,6 +829,7 @@ def fit_machine(
         loss_history=np.asarray(history),
         seed_loss=seed_loss,
         final_loss=float(final_loss),
+        diagnostics=diagnostics,
     )
 
 
@@ -693,6 +879,55 @@ def fit_from_simulated(
     if template is None:
         template = blind_template(machine)
     return fit_machine(template, samples, **fit_kwargs)
+
+
+def counter_errors_pct(
+    machine: MachineSpec, samples: CalibrationSamples
+) -> np.ndarray:
+    """``(P,)`` per-sample relative total-counter error (%) of
+    ``machine``'s predicted counters against the observed sweep — the
+    forward model replayed over the samples' workloads/placements and
+    compared bank by bank.  This is the quantity the live-recalibration
+    swap guard gates on: a refit spec must not *regress* it."""
+    P = samples.n_samples
+    if P == 0:
+        raise ValueError("cannot score a machine against zero samples")
+    if samples.n_nodes != machine.n_nodes:
+        raise ValueError(
+            f"samples cover {samples.n_nodes} nodes; machine has "
+            f"{machine.n_nodes}"
+        )
+    keys = jax.random.split(jax.random.PRNGKey(0), P)
+    thread_classes = class_starts_from_arrays(samples.wl_arrays[:-1])
+    lr, rr, lw, rw, _ = _collect_jit(
+        machine, samples.wl_arrays, samples.placements, keys, 0.0, 0.0,
+        thread_classes,
+    )
+    sim = np.concatenate(
+        [np.asarray(x, np.float64).reshape(P, -1) for x in (lr, rr, lw, rw)],
+        axis=1,
+    )
+    el = np.asarray(samples.elapsed, np.float64).reshape(P, 1)
+    obs = np.concatenate(
+        [
+            np.asarray(x, np.float64).reshape(P, -1)
+            for x in (
+                samples.local_read, samples.remote_read,
+                samples.local_write, samples.remote_write,
+            )
+        ],
+        axis=1,
+    ) / el
+    denom = np.maximum(np.abs(obs).sum(axis=1), _EPS)
+    return 100.0 * np.abs(sim - obs).sum(axis=1) / denom
+
+
+def sweep_median_error_pct(
+    machine: MachineSpec, samples: CalibrationSamples
+) -> float:
+    """Median of :func:`counter_errors_pct` — the single sweep-median
+    number the recalibration swap guard compares old-vs-new specs on."""
+    return float(np.median(counter_errors_pct(machine, samples)))
 
 
 def link_relative_errors(

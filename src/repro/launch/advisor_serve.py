@@ -63,11 +63,13 @@ def drive_async(service: AdvisorService, queries) -> tuple[list, float]:
 
 
 def drive_threads(
-    service: AdvisorService, queries, *, n_workers: int = 4
+    service: AdvisorService, queries, *, n_workers: int = 4,
+    deadline_s: float | None = None,
 ) -> tuple[list, float]:
     """Closed-loop load: ``n_workers`` threads issue synchronous queries,
-    each pulling the next query off a shared counter.  Returns (advice
-    list in query order, wall seconds)."""
+    each pulling the next query off a shared counter.  ``deadline_s``
+    arms the service's degradation ladder per query (None = wait for the
+    exact answer).  Returns (advice list in query order, wall seconds)."""
     results: list = [None] * len(queries)
     counter = itertools.count()
 
@@ -77,7 +79,9 @@ def drive_threads(
             if i >= len(queries):
                 return
             machine, sig, n = queries[i]
-            results[i] = service.query(machine, sig, n)
+            results[i] = service.query(
+                machine, sig, n, deadline_s=deadline_s
+            )
 
     threads = [
         threading.Thread(target=worker, name=f"advisor-load-{w}")
@@ -137,6 +141,9 @@ def main() -> None:
     parser.add_argument("--workers", type=int, default=4)
     parser.add_argument("--max-batch", type=int, default=8)
     parser.add_argument("--max-wait-ms", type=float, default=2.0)
+    parser.add_argument("--deadline-ms", type=float, default=None,
+                        help="per-query deadline (ms); past it the answer "
+                             "comes off the degradation ladder")
     parser.add_argument("--json", type=str, default=None,
                         help="write the metrics snapshot to this path")
     args = parser.parse_args()
@@ -171,7 +178,10 @@ def main() -> None:
         hit_fraction=args.hit_fraction,
         search_fraction=args.search_fraction,
     )
-    results, wall = drive_threads(service, stream, n_workers=args.workers)
+    deadline_s = None if args.deadline_ms is None else args.deadline_ms / 1e3
+    results, wall = drive_threads(
+        service, stream, n_workers=args.workers, deadline_s=deadline_s
+    )
     assert all(r is not None for r in results)
 
     snap = service.metrics.snapshot()

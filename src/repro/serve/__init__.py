@@ -4,25 +4,42 @@ Online query engine over the offline NUMA placement pipeline: a
 three-tier fast path (LRU answer cache → micro-batched grouped sweep →
 warm-started branch and bound) behind sync and async front ends, fully
 instrumented, plus a phased-query path (``query_schedule``: a tuple of
-per-phase signatures answered by the migration-aware scheduler).  See
-:mod:`repro.serve.service` for the architecture.
+per-phase signatures answered by the migration-aware scheduler).
+
+The resilience layer (PR 10) makes the engine "correct and bounded when
+unhealthy": versioned spec epochs with live hot-swap/rollback
+(:class:`Recalibrator` streams counter samples into guarded refits), a
+deadline-bounded degradation ladder tagging every
+:class:`Advice` with its fidelity, and a :class:`FaultInjector` the
+chaos suite drives.  See :mod:`repro.serve.service` for the
+architecture and ``docs/serving.md`` for the operational contracts.
 """
 
 from repro.serve.cache import LRUCache
-from repro.serve.metrics import TIERS, ServiceMetrics
+from repro.serve.faults import NO_FAULTS, FaultError, FaultInjector
+from repro.serve.metrics import FIDELITIES, TIERS, ServiceMetrics
+from repro.serve.recalibrate import RecalibrationEvent, Recalibrator
 from repro.serve.service import (
     Advice,
     AdvisorService,
     QuerySignature,
     ScheduleAdvice,
+    ServiceClosedError,
 )
 
 __all__ = [
     "Advice",
     "AdvisorService",
+    "FIDELITIES",
+    "FaultError",
+    "FaultInjector",
     "LRUCache",
+    "NO_FAULTS",
     "QuerySignature",
+    "RecalibrationEvent",
+    "Recalibrator",
     "ScheduleAdvice",
+    "ServiceClosedError",
     "ServiceMetrics",
     "TIERS",
 ]

@@ -67,6 +67,18 @@ class LRUCache:
         with self._lock:
             self._data.clear()
 
+    def pop_where(self, pred) -> int:
+        """Drop every entry whose *key* satisfies ``pred``; returns the
+        number removed.  The service uses this for per-machine cache
+        invalidation on spec hot-swap — keys of other machines (and of
+        the new epoch) survive untouched.  ``pred`` must be pure (it runs
+        under the cache lock)."""
+        with self._lock:
+            doomed = [k for k in self._data if pred(k)]
+            for k in doomed:
+                del self._data[k]
+            return len(doomed)
+
     def keys(self) -> list:
         """Snapshot of the keys, oldest first (for tests/introspection)."""
         with self._lock:

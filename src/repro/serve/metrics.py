@@ -8,7 +8,19 @@ accounted here, per tier:
 * ``search`` — tier-3 branch-and-bound fallbacks (machines too large to
   sweep);
 * ``schedule`` — phased-workload schedule queries (the DP/beam scheduler
-  over phase boundaries; see ``AdvisorService.query_schedule``).
+  over phase boundaries; see ``AdvisorService.query_schedule``);
+* ``degraded`` — deadline-bounded answers served off the degradation
+  ladder (roofline ranking / last-known-good / static fallback) instead
+  of the exact tiers.
+
+Orthogonally to the tier, every answer carries a *fidelity*
+(``FIDELITIES``): ``exact`` for cache/batch/search/schedule answers,
+``ranked``/``stale``/``fallback`` for the three degradation-ladder
+rungs.  ``degraded_rate`` in the snapshot is the non-exact fraction —
+the quantity ``benchmarks/serve_resilience.py`` commits a ceiling on.
+Spec hot-swaps, guard rollbacks and batcher-thread restarts are counted
+too, so chaos tests can assert the scenario they injected actually
+unfolded.
 
 Latencies land in preallocated per-tier numpy ring buffers (one float
 store per sample — the hit path never grows a list), and percentiles are
@@ -28,7 +40,9 @@ from collections import Counter
 
 import numpy as np
 
-TIERS = ("cache", "batch", "search", "schedule")
+TIERS = ("cache", "batch", "search", "schedule", "degraded")
+
+FIDELITIES = ("exact", "ranked", "stale", "fallback")
 
 
 class _LatencyRing:
@@ -71,9 +85,13 @@ class ServiceMetrics:
         == 0`` — only a genuinely new shape counts after the reset."""
         with getattr(self, "_lock", threading.Lock()):
             self.tier_counts = {tier: 0 for tier in TIERS}
+            self.fidelity_counts = {f: 0 for f in FIDELITIES}
             self.batch_sizes: Counter = Counter()
             self.batch_calls = 0
             self.retraces = 0
+            self.swaps = 0
+            self.rollbacks = 0
+            self.worker_restarts = 0
             if not keep_traces or not hasattr(self, "_trace_keys"):
                 self._trace_keys: set = set()
             self._latency = {
@@ -87,6 +105,27 @@ class ServiceMetrics:
         with self._lock:
             self.tier_counts[tier] += 1
             self._latency[tier].record(seconds)
+
+    def record_fidelity(self, fidelity: str) -> None:
+        """Count one served answer's fidelity (``exact`` / ``ranked`` /
+        ``stale`` / ``fallback``)."""
+        with self._lock:
+            self.fidelity_counts[fidelity] += 1
+
+    def record_swap(self) -> None:
+        """Count one accepted spec hot-swap (epoch bump)."""
+        with self._lock:
+            self.swaps += 1
+
+    def record_rollback(self) -> None:
+        """Count one rejected/rolled-back recalibration."""
+        with self._lock:
+            self.rollbacks += 1
+
+    def record_restart(self) -> None:
+        """Count one self-healing batcher-thread restart."""
+        with self._lock:
+            self.worker_restarts += 1
 
     def record_batch(self, size: int) -> None:
         """Record one micro-batch flush of ``size`` coalesced queries."""
@@ -129,19 +168,31 @@ class ServiceMetrics:
         batch-size histogram + mean, and the retrace counter."""
         with self._lock:
             counts = dict(self.tier_counts)
+            fidelity = dict(self.fidelity_counts)
             sizes = dict(sorted(self.batch_sizes.items()))
             calls = self.batch_calls
             retraces = self.retraces
+            swaps = self.swaps
+            rollbacks = self.rollbacks
+            restarts = self.worker_restarts
             lat = {
                 tier: ring.values().copy()
                 for tier, ring in self._latency.items()
             }
+        n_fid = sum(fidelity.values())
         out: dict = {
             "queries": sum(counts.values()),
             "tier_counts": counts,
+            "fidelity_counts": fidelity,
+            "degraded_rate": (
+                (n_fid - fidelity["exact"]) / n_fid if n_fid else 0.0
+            ),
             "batch_calls": calls,
             "batch_size_hist": sizes,
             "retraces": retraces,
+            "swaps": swaps,
+            "rollbacks": rollbacks,
+            "worker_restarts": restarts,
         }
         total = sum(n * size for size, n in sizes.items())
         out["mean_batch_size"] = total / calls if calls else 0.0

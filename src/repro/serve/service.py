@@ -3,7 +3,7 @@
 The offline pipeline answers "where should these threads run?" by sweeping
 or searching a whole machine per call.  :class:`AdvisorService` turns that
 into an online query engine: callers submit ``(workload signature, machine
-fingerprint, thread budget)`` and get back a placement plus its predicted
+handle, thread budget)`` and get back a placement plus its predicted
 bandwidth and work rate, through a three-tier fast path:
 
 1. **cache** — a thread-safe bounded LRU (:class:`~repro.serve.cache.
@@ -24,15 +24,45 @@ bandwidth and work rate, through a three-tier fast path:
    fall back to :func:`~repro.core.numa.search.branch_and_bound`,
    warm-started from the advisor's signature-only ranking
    (``advisor_seeds``), off the batcher thread so searches never stall
-   micro-batching.
+   micro-batching.  Failed attempts retry with backoff and a halved node
+   budget, so the tier always lands on a certified incumbent.
+
+Two resilience layers sit on top (PR 10):
+
+**Spec epochs and hot-swap.**  The registry maps a stable *handle* (the
+fingerprint at registration, or a caller-chosen ``machine_id``) to a
+``(spec, epoch)`` entry.  :meth:`AdvisorService.swap_machine` installs a
+recalibrated spec under the same handle with a bumped epoch; every cache
+key, pending-batch group and trace key carries the epoch, so in-flight
+queries finish against the spec they started with (the pending group pins
+the spec object — the batch worker never re-reads the registry) and
+invalidation is per-machine: only this handle's stale-epoch answers and
+tables are dropped.  :meth:`AdvisorService.rollback_machine` restores the
+previous spec (as a new epoch) when a recalibration guard trips.
+
+**Deadlines and the degradation ladder.**  A query may carry
+``deadline_s`` (or inherit ``default_deadline_s``); when the exact tiers
+cannot answer in time — or the batch/search computation fails outright —
+the service walks down a fidelity ladder instead of blocking:
+``exact`` (the normal tiers) → ``ranked`` (signature-only roofline via
+:func:`~repro.core.meshsig.advisor.rank_numa_placements`, no simulation)
+→ ``stale`` (this handle's last known good exact answer) → ``fallback``
+(an even spread, the static default the paper's advisor must beat).
+Every :class:`Advice` is tagged with the fidelity that produced it, and
+degraded answers are never cached — the next query retries the exact
+path.  Fault injection (:mod:`repro.serve.faults`) hooks the batcher, the
+batch dispatch, the search attempts and the deadline clock so chaos tests
+can manufacture every one of these paths deterministically.
 
 Every tier is instrumented (:class:`~repro.serve.metrics.ServiceMetrics`):
-per-tier counts and p50/p99 latency, batch-size histogram, and the
-retrace counter the CI gate holds at zero across a warmed mixed stream.
+per-tier counts and p50/p99 latency, batch-size histogram, fidelity
+counts/degraded rate, swap/rollback/restart counters, and the retrace
+counter the CI gate holds at zero across a warmed mixed stream.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import math
 import threading
 import time
@@ -45,6 +75,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.meshsig.advisor import rank_numa_placements
 from repro.core.numa.evaluate import enumerate_placements
 from repro.core.numa.machine import MachineSpec
 from repro.core.numa.search import branch_and_bound
@@ -60,7 +91,15 @@ from repro.core.numa.temporal import (
 )
 from repro.core.numa.workload import Workload, mixed_workload
 from repro.serve.cache import LRUCache
+from repro.serve.faults import NO_FAULTS, FaultInjector
 from repro.serve.metrics import ServiceMetrics
+
+
+class ServiceClosedError(RuntimeError):
+    """Raised by every entry point of a closed :class:`AdvisorService`,
+    and set on any future the close drained rather than resolved.  A
+    dedicated type so callers can tell an orderly shutdown from a compute
+    failure (which degrades or propagates, depending on the deadline)."""
 
 
 class QuerySignature(NamedTuple):
@@ -104,13 +143,20 @@ class QuerySignature(NamedTuple):
 class Advice:
     """One answered query.  ``tier`` names the tier that *computed* the
     answer; a later cache hit returns this same object (the metrics, not
-    the advice, record the serving path)."""
+    the advice, record the serving path).  ``fidelity`` is the degradation
+    rung that produced it (``exact`` off the normal tiers; ``ranked`` /
+    ``stale`` / ``fallback`` off the deadline ladder) and ``epoch`` the
+    spec version it was computed against — a stream's answers for one
+    ``(machine, epoch)`` are bit-identical no matter when a hot-swap lands
+    around them."""
 
     placement: tuple[int, ...]  # threads per NUMA node
     predicted_bandwidth: float  # total bytes/s moved at this placement
     objective: float  # work rate (instructions/s), the quantity maximized
-    tier: str  # "batch" | "search"
+    tier: str  # "batch" | "search" | "degraded"
     optimal: bool  # exhaustive sweep, or B&B certificate within its gap
+    fidelity: str = "exact"  # "exact" | "ranked" | "stale" | "fallback"
+    epoch: int = 0  # spec epoch the answer was computed against
 
 
 @dataclass(frozen=True)
@@ -129,6 +175,15 @@ class ScheduleAdvice:
     tier: str = "schedule"
 
 
+class _MachineEntry(NamedTuple):
+    """Registry slot: the live spec, its epoch, and the previous entry
+    (one step of history — what :meth:`rollback_machine` restores)."""
+
+    spec: MachineSpec
+    epoch: int
+    previous: "_MachineEntry | None"
+
+
 class _PlacementTable(NamedTuple):
     """Per-``(machine, budget)`` candidate set, padded once at build time
     so every batch against it reuses one trace."""
@@ -144,6 +199,15 @@ class _Pending(NamedTuple):
     sig: QuerySignature  # canonical
     future: Future
     t0: float  # enqueue time (monotonic) — anchors the batch deadline
+
+
+class _PendingGroup(NamedTuple):
+    """One coalescing group's queue plus its epoch-pinned spec: the batch
+    worker answers from this spec even if a hot-swap lands while the
+    group waits, so no batch ever straddles two epochs."""
+
+    spec: MachineSpec
+    items: list  # list[_Pending], mutated in place under the service lock
 
 
 @partial(jax.jit, static_argnames=("machine", "thread_classes"))
@@ -190,6 +254,11 @@ class AdvisorService:
     ``sweep_limit`` draws the tier-2/tier-3 line: a ``(machine, budget)``
     whose full composition count exceeds it is answered by warm-started
     branch and bound instead of an exhaustive sweep.
+
+    ``default_deadline_s`` (None = wait forever) arms the degradation
+    ladder for every query that doesn't carry its own ``deadline_s``;
+    ``faults`` installs a :class:`~repro.serve.faults.FaultInjector`
+    whose clock the deadline math reads and whose sites the workers fire.
     """
 
     def __init__(
@@ -202,9 +271,15 @@ class AdvisorService:
         sweep_limit: int = 20_000,
         search_gap: float = 0.05,
         search_max_nodes: int = 50_000,
+        search_retries: int = 2,
+        search_backoff_s: float = 0.01,
+        search_min_nodes: int = 500,
         advisor_seeds: int = 8,
         advisor_max_placements: int = 2048,
         search_workers: int = 2,
+        default_deadline_s: float | None = None,
+        lkg_capacity: int = 1024,
+        faults: FaultInjector | None = None,
         metrics: ServiceMetrics | None = None,
     ):
         if max_batch < 1:
@@ -214,81 +289,252 @@ class AdvisorService:
         self.sweep_limit = int(sweep_limit)
         self.search_gap = float(search_gap)
         self.search_max_nodes = int(search_max_nodes)
+        self.search_retries = int(search_retries)
+        self.search_backoff_s = float(search_backoff_s)
+        self.search_min_nodes = int(search_min_nodes)
         self.advisor_seeds = int(advisor_seeds)
         self.advisor_max_placements = int(advisor_max_placements)
+        self.default_deadline_s = (
+            None if default_deadline_s is None else float(default_deadline_s)
+        )
         self.metrics = metrics if metrics is not None else ServiceMetrics()
+        self.faults = faults if faults is not None else NO_FAULTS
 
-        self._machines: dict[str, MachineSpec] = {}
+        self._machines: dict[str, _MachineEntry] = {}
         self._answers = LRUCache(answer_capacity)
         self._tables = LRUCache(table_capacity)
+        # last-known-good exact answers; deliberately NOT invalidated on
+        # hot-swap (a stale answer is the ladder's point) and keyed
+        # without the epoch
+        self._lkg = LRUCache(lkg_capacity)
         self._cond = threading.Condition()
-        # group key (fingerprint, n_threads) -> FIFO of pending misses
-        self._pending: dict[tuple, list[_Pending]] = {}
+        # group key (handle, epoch, n_threads) -> epoch-pinned queue
+        self._pending: dict[tuple, _PendingGroup] = {}
         # answer key -> Future, so concurrent identical misses compute once
         self._inflight: dict[tuple, Future] = {}
         self._closed = False
+        self._close_started = False
+        self._close_done = threading.Event()
         self._search_pool = ThreadPoolExecutor(
             max_workers=max(1, int(search_workers)),
             thread_name_prefix="advisor-search",
         )
         self._batcher = threading.Thread(
-            target=self._batch_loop, name="advisor-batcher", daemon=True
+            target=self._batcher_main, name="advisor-batcher", daemon=True
         )
         self._batcher.start()
 
     # -- registry ------------------------------------------------------------
 
-    def register(self, machine: MachineSpec) -> str:
-        """Add a machine to the registry; returns its fingerprint (the
-        handle queries may use in place of the spec)."""
-        fp = machine.fingerprint()
+    def register(self, machine: MachineSpec,
+                 machine_id: str | None = None) -> str:
+        """Add a machine to the registry; returns its *handle* (its
+        fingerprint at registration time, or ``machine_id`` if given).
+        Idempotent: a handle already registered is returned as-is without
+        touching the live entry — so a caller re-presenting the original
+        spec object after a hot-swap does not clobber the swapped spec."""
+        handle = machine_id if machine_id is not None else machine.fingerprint()
         with self._cond:
-            self._machines[fp] = machine
-        return fp
+            if handle not in self._machines:
+                self._machines[handle] = _MachineEntry(machine, 0, None)
+        return handle
 
-    def _resolve(self, machine) -> tuple[MachineSpec, str]:
+    def _resolve(self, machine) -> tuple[MachineSpec, str, int]:
+        """``machine`` (spec or handle) -> the live ``(spec, handle,
+        epoch)`` triple queries pin themselves to."""
         if isinstance(machine, str):
-            with self._cond:
-                spec = self._machines.get(machine)
-            if spec is None:
-                raise KeyError(f"unknown machine fingerprint {machine!r}")
-            return spec, machine
-        fp = self.register(machine)
-        return machine, fp
+            handle = machine
+        else:
+            handle = self.register(machine)
+        with self._cond:
+            entry = self._machines.get(handle)
+        if entry is None:
+            raise KeyError(f"unknown machine handle {machine!r}")
+        return entry.spec, handle, entry.epoch
+
+    def epoch_of(self, handle: str) -> int:
+        """The registry's current spec epoch for ``handle`` (bumped by
+        every accepted swap and every rollback)."""
+        with self._cond:
+            entry = self._machines.get(handle)
+        if entry is None:
+            raise KeyError(f"unknown machine handle {handle!r}")
+        return entry.epoch
+
+    def machine_spec(self, handle: str) -> MachineSpec:
+        """The live spec currently serving ``handle``."""
+        with self._cond:
+            entry = self._machines.get(handle)
+        if entry is None:
+            raise KeyError(f"unknown machine handle {handle!r}")
+        return entry.spec
+
+    # -- hot swap ------------------------------------------------------------
+
+    def swap_machine(self, handle: str, new_spec: MachineSpec,
+                     *, warm: bool = True) -> int:
+        """Atomically install ``new_spec`` under ``handle`` with a bumped
+        epoch; returns the new epoch.
+
+        In-flight queries are untouched: their pending groups pinned the
+        old spec at dispatch.  The answer cache and placement tables are
+        invalidated for this handle only (stale epochs), never for other
+        machines.  ``warm=True`` (default) pre-compiles the new spec's
+        batch trace for every thread budget this handle currently serves
+        *before* the swap is visible, so the first post-swap queries hit a
+        warmed path — the retrace counter stays flat.  Raises ValueError
+        when the new spec is structurally incompatible (node or core
+        count changed): recalibration refits bandwidths, not topology."""
+        with self._cond:
+            if self._closed:
+                raise ServiceClosedError("AdvisorService is closed")
+            entry = self._machines.get(handle)
+        if entry is None:
+            raise KeyError(f"unknown machine handle {handle!r}")
+        old = entry.spec
+        if (new_spec.n_nodes != old.n_nodes
+                or new_spec.cores_per_node != old.cores_per_node):
+            raise ValueError(
+                f"swap for {handle!r} changes machine structure "
+                f"({old.n_nodes}x{old.cores_per_node} -> "
+                f"{new_spec.n_nodes}x{new_spec.cores_per_node}); "
+                "register a new machine instead"
+            )
+        new_epoch = self._install_spec(handle, new_spec, warm=warm)
+        self.metrics.record_swap()
+        return new_epoch
+
+    def rollback_machine(self, handle: str, *, warm: bool = True) -> int:
+        """Restore ``handle``'s previous spec (as a *new* epoch — epochs
+        only move forward, so answer provenance stays unambiguous).
+        Raises RuntimeError when there is no previous spec to restore."""
+        with self._cond:
+            entry = self._machines.get(handle)
+        if entry is None:
+            raise KeyError(f"unknown machine handle {handle!r}")
+        if entry.previous is None:
+            raise RuntimeError(f"machine {handle!r} has no previous spec")
+        new_epoch = self._install_spec(
+            handle, entry.previous.spec, warm=warm
+        )
+        self.metrics.record_rollback()
+        return new_epoch
+
+    def _install_spec(self, handle: str, new_spec: MachineSpec,
+                      *, warm: bool) -> int:
+        # Warm the new spec's traces against the thread budgets this
+        # handle already serves, before the swap becomes visible.  The
+        # placement tables themselves only depend on (n_nodes, budget) —
+        # structurally invariant across swaps — so the arrays are reused;
+        # only the jit trace (machine is a static arg) is new.
+        warmed: list[tuple[int, _PlacementTable]] = []
+        if warm:
+            budgets = sorted({
+                k[2] for k in self._tables.keys() if k[0] == handle
+            })
+            for n_threads in budgets:
+                table = self._build_table(new_spec, n_threads)
+                arrays = self._stacked_arrays(
+                    [QuerySignature((1.0, 0.0, 0.0), (1.0, 0.0, 0.0))],
+                    n_threads,
+                )
+                _advise_batch_jit(
+                    new_spec, arrays, table.placements, table.support,
+                    table.slab_id, (0,),
+                )
+                warmed.append((n_threads, table))
+        with self._cond:
+            entry = self._machines[handle]
+            new_epoch = entry.epoch + 1
+            self._machines[handle] = _MachineEntry(
+                new_spec, new_epoch, entry
+            )
+        # Per-machine invalidation: drop this handle's stale-epoch keys
+        # only.  Done after the registry flip so no window serves a stale
+        # answer against the new epoch.
+        self._answers.pop_where(
+            lambda k: k[0] == handle and k[1] != new_epoch
+        )
+        self._tables.pop_where(
+            lambda k: k[0] == handle and k[1] != new_epoch
+        )
+        for n_threads, table in warmed:
+            tk = (handle, new_epoch, n_threads)
+            self._tables.put(tk, table)
+            self.metrics.register_trace(
+                self._trace_key(handle, new_epoch, n_threads, table)
+            )
+        return new_epoch
 
     # -- public front ends ---------------------------------------------------
 
     def query(self, machine, signature: QuerySignature, n_threads: int,
-              timeout: float | None = None) -> Advice:
+              timeout: float | None = None, *,
+              deadline_s: float | None = None) -> Advice:
         """Synchronous ask-and-wait.  ``machine`` is a MachineSpec or a
-        registered fingerprint string."""
-        advice, future = self._lookup_or_dispatch(machine, signature, n_threads)
+        registered handle string.
+
+        ``deadline_s`` (falling back to the service's
+        ``default_deadline_s``) bounds the wait: past the deadline — or if
+        the exact computation fails — the answer comes off the degradation
+        ladder (``ranked`` → ``stale`` → ``fallback``) instead of
+        blocking or raising.  Without a deadline, ``timeout`` is the
+        legacy hard bound: it raises on expiry rather than degrading.
+        A closed service raises :class:`ServiceClosedError` either way."""
+        if deadline_s is None:
+            deadline_s = self.default_deadline_s
+        t_deadline = (
+            None if deadline_s is None else self.faults.now() + deadline_s
+        )
+        t0 = time.perf_counter()
+        advice, future = self._lookup_or_dispatch(
+            machine, signature, n_threads, deadline_s=deadline_s
+        )
         if advice is not None:
             return advice
-        return future.result(timeout)
+        if t_deadline is None:
+            return future.result(timeout)
+        try:
+            remaining = t_deadline - self.faults.now()
+            return future.result(max(remaining, 0.0))
+        except ServiceClosedError:
+            raise
+        except BaseException:
+            # deadline expired or the exact tier failed: degrade
+            spec, handle, epoch = self._resolve(machine)
+            return self._degrade(
+                spec, handle, epoch, signature.canonical(),
+                int(n_threads), t0,
+            )
 
     def submit(self, machine, signature: QuerySignature,
                n_threads: int) -> Future:
         """Async front end: returns a Future resolving to the
-        :class:`Advice` (already resolved on a cache hit)."""
+        :class:`Advice` (already resolved on a cache hit).  Futures carry
+        no deadline — they resolve with the exact answer or the compute
+        failure; the degradation ladder is a :meth:`query`-side policy."""
         advice, future = self._lookup_or_dispatch(machine, signature, n_threads)
         if advice is not None:
             future = Future()
             future.set_result(advice)
         return future
 
-    def _lookup_or_dispatch(self, machine, signature, n_threads):
+    def _lookup_or_dispatch(self, machine, signature, n_threads,
+                            deadline_s: float | None = None):
         t0 = time.perf_counter()
         if self._closed:
-            raise RuntimeError("AdvisorService is closed")
-        spec, fp = self._resolve(machine)
+            raise ServiceClosedError("AdvisorService is closed")
+        spec, handle, epoch = self._resolve(machine)
         sig = signature.canonical()
-        key = (fp, int(n_threads), sig)
+        key = (handle, epoch, int(n_threads), sig)
         hit = self._answers.get(key)
         if hit is not None:
             self.metrics.record_query("cache", time.perf_counter() - t0)
+            self.metrics.record_fidelity(hit.fidelity)
             return hit, None
         with self._cond:
+            if self._closed:
+                raise ServiceClosedError("AdvisorService is closed")
             # re-check under the dispatch lock: a batch completion inserts
             # into the answer cache *before* retiring its in-flight future,
             # so a key absent from both here is genuinely uncomputed
@@ -297,6 +543,7 @@ class AdvisorService:
                 self.metrics.record_query(
                     "cache", time.perf_counter() - t0
                 )
+                self.metrics.record_fidelity(hit.fidelity)
                 return hit, None
             future = self._inflight.get(key)
             if future is None:
@@ -304,11 +551,16 @@ class AdvisorService:
                 self._inflight[key] = future
                 if self.uses_search(spec, n_threads):
                     self._search_pool.submit(
-                        self._run_search, spec, fp, int(n_threads), sig, key
+                        self._run_search, spec, handle, epoch,
+                        int(n_threads), sig, key, deadline_s,
                     )
                 else:
-                    group = (fp, int(n_threads))
-                    self._pending.setdefault(group, []).append(
+                    group = (handle, epoch, int(n_threads))
+                    pg = self._pending.get(group)
+                    if pg is None:
+                        pg = _PendingGroup(spec, [])
+                        self._pending[group] = pg
+                    pg.items.append(
                         _Pending(key, sig, future, time.perf_counter())
                     )
                     self._cond.notify_all()
@@ -316,12 +568,64 @@ class AdvisorService:
         def _record(f, t0=t0):
             if f.cancelled() or f.exception() is not None:
                 return
-            self.metrics.record_query(
-                f.result().tier, time.perf_counter() - t0
-            )
+            adv = f.result()
+            self.metrics.record_query(adv.tier, time.perf_counter() - t0)
+            self.metrics.record_fidelity(getattr(adv, "fidelity", "exact"))
 
         future.add_done_callback(_record)
         return None, future
+
+    # -- degradation ladder ----------------------------------------------------
+
+    def _degrade(self, spec: MachineSpec, handle: str, epoch: int,
+                 sig: QuerySignature, n_threads: int, t0: float) -> Advice:
+        """Serve a deadline-missed query off the ladder: signature-only
+        roofline ranking → last-known-good exact answer → even spread.
+        Never blocks on the simulator, never caches its answer (the next
+        identical query retries the exact path — and usually hits the
+        cache the late batch populated)."""
+        advice = None
+        try:
+            self.faults.fire("rank")
+            ranked = rank_numa_placements(
+                spec, sig.workload(n_threads), top_k=1,
+                max_placements=self.advisor_max_placements,
+            )
+            best = ranked[0]
+            advice = Advice(
+                placement=best.placement,
+                predicted_bandwidth=float("nan"),
+                objective=float(best.predicted_throughput),
+                tier="degraded",
+                optimal=False,
+                fidelity="ranked",
+                epoch=epoch,
+            )
+        except BaseException:
+            lkg = self._lkg.get((handle, n_threads, sig))
+            if lkg is None:
+                lkg = self._lkg.get(("any", handle, n_threads))
+            if lkg is not None:
+                advice = dataclasses.replace(
+                    lkg, tier="degraded", fidelity="stale"
+                )
+        if advice is None:
+            s = spec.n_nodes
+            base, extra = divmod(int(n_threads), s)
+            advice = Advice(
+                placement=tuple(
+                    base + (1 if i < extra else 0) for i in range(s)
+                ),
+                predicted_bandwidth=float("nan"),
+                objective=float("nan"),
+                tier="degraded",
+                optimal=False,
+                fidelity="fallback",
+                epoch=epoch,
+            )
+        self.metrics.record_query("degraded", time.perf_counter() - t0)
+        self.metrics.record_fidelity(advice.fidelity)
+        return advice
 
     # -- phased queries --------------------------------------------------------
 
@@ -370,19 +674,23 @@ class AdvisorService:
     def _dispatch_schedule(self, machine, phases, n_threads, model):
         t0 = time.perf_counter()
         if self._closed:
-            raise RuntimeError("AdvisorService is closed")
-        spec, fp = self._resolve(machine)
+            raise ServiceClosedError("AdvisorService is closed")
+        spec, handle, epoch = self._resolve(machine)
         model = model if model is not None else MigrationModel()
         canon = self._canonical_phases(phases)
-        key = (fp, int(n_threads), "schedule", canon, model)
+        key = (handle, epoch, int(n_threads), "schedule", canon, model)
         hit = self._answers.get(key)
         if hit is not None:
             self.metrics.record_query("cache", time.perf_counter() - t0)
+            self.metrics.record_fidelity("exact")
             return hit, None
         with self._cond:
+            if self._closed:
+                raise ServiceClosedError("AdvisorService is closed")
             hit = self._answers.get(key)
             if hit is not None:
                 self.metrics.record_query("cache", time.perf_counter() - t0)
+                self.metrics.record_fidelity("exact")
                 return hit, None
             future = self._inflight.get(key)
             if future is None:
@@ -395,9 +703,9 @@ class AdvisorService:
         def _record(f, t0=t0):
             if f.cancelled() or f.exception() is not None:
                 return
-            self.metrics.record_query(
-                f.result().tier, time.perf_counter() - t0
-            )
+            adv = f.result()
+            self.metrics.record_query(adv.tier, time.perf_counter() - t0)
+            self.metrics.record_fidelity(getattr(adv, "fidelity", "exact"))
 
         future.add_done_callback(_record)
         return None, future
@@ -407,6 +715,7 @@ class AdvisorService:
                       key: tuple) -> None:
         future = self._inflight.get(key)
         try:
+            self.faults.fire("schedule")
             pw = phased_workload(
                 "serve-schedule",
                 [
@@ -437,55 +746,76 @@ class AdvisorService:
         s = machine.n_nodes
         return math.comb(int(n_threads) + s - 1, s - 1) > self.sweep_limit
 
-    def _table_for(self, machine: MachineSpec, fp: str,
-                   n_threads: int) -> _PlacementTable:
-        key = (fp, n_threads)
-        table = self._tables.get(key)
-        if table is not None:
-            return table
+    def _build_table(self, machine: MachineSpec,
+                     n_threads: int) -> _PlacementTable:
         placements = np.asarray(
             enumerate_placements(machine, n_threads), np.int32
         )
         padded = pad_rows(placements)
         support, slab_id = support_patterns(padded)
-        table = _PlacementTable(
+        return _PlacementTable(
             placements=jnp.asarray(padded),
             placements_np=padded,
             support=jnp.asarray(support),
             slab_id=jnp.asarray(slab_id),
         )
+
+    def _table_for(self, machine: MachineSpec, handle: str, epoch: int,
+                   n_threads: int) -> _PlacementTable:
+        key = (handle, epoch, n_threads)
+        table = self._tables.get(key)
+        if table is not None:
+            return table
+        table = self._build_table(machine, n_threads)
         self._tables.put(key, table)
         return table
 
     # -- batch tier ------------------------------------------------------------
 
+    def _batcher_main(self) -> None:
+        """Self-healing wrapper: a crash anywhere in the batcher loop
+        (including an injected ``"batcher"`` fault) loses nothing — the
+        pending queues are untouched — and the loop restarts immediately
+        unless the service is closing."""
+        while True:
+            try:
+                self._batch_loop()
+                return  # orderly exit: closed and drained
+            except BaseException:
+                with self._cond:
+                    if self._closed:
+                        return
+                self.metrics.record_restart()
+
     def _batch_loop(self) -> None:
         while True:
+            self.faults.fire("batcher")
             with self._cond:
                 while not self._pending and not self._closed:
                     self._cond.wait()
                 if not self._pending and self._closed:
                     return
-                group = min(
-                    self._pending, key=lambda g: self._pending[g][0].t0
+                gkey = min(
+                    self._pending,
+                    key=lambda g: self._pending[g].items[0].t0,
                 )
-                items = self._pending[group]
-                deadline = items[0].t0 + self.max_wait_s
+                group = self._pending[gkey]
+                deadline = group.items[0].t0 + self.max_wait_s
                 now = time.perf_counter()
                 if (
-                    len(items) < self.max_batch
+                    len(group.items) < self.max_batch
                     and now < deadline
                     and not self._closed
                 ):
                     self._cond.wait(deadline - now)
                     continue
-                take = items[: self.max_batch]
-                rest = items[self.max_batch:]
+                take = group.items[: self.max_batch]
+                rest = group.items[self.max_batch:]
                 if rest:
-                    self._pending[group] = rest
+                    self._pending[gkey] = _PendingGroup(group.spec, rest)
                 else:
-                    del self._pending[group]
-            self._run_batch(group, take)
+                    del self._pending[gkey]
+            self._run_batch(gkey, group.spec, take)
 
     def _signature_rows(self, sig: QuerySignature, n: int) -> tuple:
         ones = np.ones((n,), np.float32)
@@ -512,30 +842,41 @@ class AdvisorService:
             for arr in stacked
         )
 
-    def _finish(self, key: tuple, future: Future, advice: Advice) -> None:
+    def _finish(self, key: tuple, future: Future, advice) -> None:
         # answer cache first, in-flight retirement second: every moment a
         # key is absent from the in-flight map it is present in the cache
         self._answers.put(key, advice)
+        if isinstance(advice, Advice) and advice.fidelity == "exact":
+            handle, _, n_threads, sig = key[:4]
+            self._lkg.put((handle, n_threads, sig), advice)
+            self._lkg.put(("any", handle, n_threads), advice)
         with self._cond:
             self._inflight.pop(key, None)
-        future.set_result(advice)
+        try:
+            future.set_result(advice)
+        except Exception:
+            pass  # close() already failed this future; the cache has it
 
     def _fail(self, keys_futures, exc: BaseException) -> None:
         with self._cond:
             for key, _ in keys_futures:
                 self._inflight.pop(key, None)
         for _, future in keys_futures:
-            if not future.done():
+            try:
                 future.set_exception(exc)
+            except Exception:
+                pass  # already resolved (e.g. by a concurrent close)
 
-    def _run_batch(self, group: tuple, take: list[_Pending]) -> None:
-        fp, n_threads = group
+    def _run_batch(self, gkey: tuple, machine: MachineSpec,
+                   take: list[_Pending]) -> None:
+        handle, epoch, n_threads = gkey
         try:
-            with self._cond:
-                machine = self._machines[fp]
-            table = self._table_for(machine, fp, n_threads)
+            self.faults.fire("batch")
+            table = self._table_for(machine, handle, epoch, n_threads)
             arrays = self._stacked_arrays([it.sig for it in take], n_threads)
-            self.metrics.register_trace(self._trace_key(fp, n_threads, table))
+            self.metrics.register_trace(
+                self._trace_key(handle, epoch, n_threads, table)
+            )
             best, obj, bandwidth = _advise_batch_jit(
                 machine, arrays, table.placements, table.support,
                 table.slab_id, (0,),
@@ -553,15 +894,17 @@ class AdvisorService:
                     objective=float(obj[i]),
                     tier="batch",
                     optimal=True,
+                    epoch=epoch,
                 )
                 self._finish(item.key, item.future, advice)
         except BaseException as exc:  # resolve waiters, keep the loop alive
             self._fail([(it.key, it.future) for it in take], exc)
 
-    def _trace_key(self, fp: str, n_threads: int,
+    def _trace_key(self, handle: str, epoch: int, n_threads: int,
                    table: _PlacementTable) -> tuple:
         return (
-            fp,
+            handle,
+            epoch,
             n_threads,
             self.max_batch,
             int(table.placements.shape[0]),
@@ -570,19 +913,43 @@ class AdvisorService:
 
     # -- search tier -----------------------------------------------------------
 
-    def _run_search(self, machine: MachineSpec, fp: str, n_threads: int,
-                    sig: QuerySignature, key: tuple) -> None:
+    def _run_search(self, machine: MachineSpec, handle: str, epoch: int,
+                    n_threads: int, sig: QuerySignature, key: tuple,
+                    deadline_s: float | None = None) -> None:
         future = self._inflight.get(key)
+        wl = sig.workload(n_threads)
+        # Deadline-aware node budget: a query that only has (say) a fifth
+        # of the horizon to spare gets a fifth of the nodes — B&B returns
+        # its certified incumbent at ANY budget, so a cut budget degrades
+        # the certificate, never the answer's validity.
+        max_nodes = self.search_max_nodes
+        if deadline_s is not None:
+            horizon = 5.0  # seconds the full budget is sized for
+            frac = min(1.0, max(deadline_s, 0.0) / horizon)
+            max_nodes = max(self.search_min_nodes, int(max_nodes * frac))
+        result = None
+        for attempt in range(self.search_retries + 1):
+            try:
+                self.faults.fire("search")
+                result = branch_and_bound(
+                    machine,
+                    wl,
+                    gap=self.search_gap,
+                    max_nodes=max_nodes,
+                    advisor_seeds=self.advisor_seeds,
+                    advisor_max_placements=self.advisor_max_placements,
+                )
+                break
+            except BaseException as exc:
+                if attempt >= self.search_retries:
+                    self._fail([(key, future)], exc)
+                    return
+                # back off, then retry on a cut node budget: a transient
+                # stall is ridden out; a genuinely slow search converges
+                # to the cheapest certified incumbent instead of dying
+                time.sleep(self.search_backoff_s * (2 ** attempt))
+                max_nodes = max(self.search_min_nodes, max_nodes // 2)
         try:
-            wl = sig.workload(n_threads)
-            result = branch_and_bound(
-                machine,
-                wl,
-                gap=self.search_gap,
-                max_nodes=self.search_max_nodes,
-                advisor_seeds=self.advisor_seeds,
-                advisor_max_placements=self.advisor_max_placements,
-            )
             # score the winner through the same jitted evaluator the batch
             # tier uses, so objective/bandwidth are tier-independent
             placement = np.asarray(result.placement, np.int32)[None, :]
@@ -595,7 +962,9 @@ class AdvisorService:
                 slab_id=jnp.asarray(slab_id),
             )
             arrays = self._stacked_arrays([sig], n_threads)
-            self.metrics.register_trace(self._trace_key(fp, n_threads, table))
+            self.metrics.register_trace(
+                self._trace_key(handle, epoch, n_threads, table)
+            )
             _, obj, bandwidth = _advise_batch_jit(
                 machine, arrays, table.placements, table.support,
                 table.slab_id, (0,),
@@ -606,6 +975,7 @@ class AdvisorService:
                 objective=float(np.asarray(obj)[0]),
                 tier="search",
                 optimal=result.optimal,
+                epoch=epoch,
             )
             self._finish(key, future, advice)
         except BaseException as exc:
@@ -617,31 +987,57 @@ class AdvisorService:
                signature: QuerySignature | None = None) -> Advice:
         """Trace a ``(machine, budget)`` group's single steady-state jit
         shape (and, on search-tier machines, the search path's caches) by
-        answering one query.  After warmup, the retrace counter stays flat
-        for ANY stream against this group — the shape never varies."""
+        answering one query; also primes the degradation ladder's ranked
+        rung so a deadline miss never pays first-compile latency.  After
+        warmup, the retrace counter stays flat for ANY stream against this
+        group — the shape never varies."""
         sig = signature if signature is not None else QuerySignature(
             (0.25, 0.25, 0.25), (0.25, 0.25, 0.25)
         )
-        return self.query(machine, sig, n_threads)
+        advice = self.query(machine, sig, n_threads)
+        spec, _, _ = self._resolve(machine)
+        rank_numa_placements(
+            spec, sig.canonical().workload(int(n_threads)), top_k=1,
+            max_placements=self.advisor_max_placements,
+        )
+        return advice
 
     def close(self, timeout: float | None = 5.0) -> None:
-        """Stop the batcher and search pool, failing any still-pending
-        queries with ``RuntimeError``.  Idempotent; the service rejects
-        new queries afterwards."""
+        """Stop the service: drain-then-fail, idempotent, never hangs.
+
+        The batcher flushes every already-pending micro-batch (their
+        futures resolve with exact answers), the search pool stops
+        accepting work, and any future still unresolved afterwards —
+        queued search jobs that never ran, stragglers past ``timeout`` —
+        fails with :class:`ServiceClosedError`.  Concurrent and repeated
+        ``close()`` calls are safe: the first runs the shutdown, the rest
+        wait for it.  Every entry point raises ``ServiceClosedError``
+        immediately once close has begun."""
         with self._cond:
-            if self._closed:
-                return
+            first = not self._close_started
+            self._close_started = True
             self._closed = True
             self._cond.notify_all()
-        self._batcher.join(timeout)
-        self._search_pool.shutdown(wait=True)
-        with self._cond:
-            pending = [it for q in self._pending.values() for it in q]
-            self._pending.clear()
-        self._fail(
-            [(it.key, it.future) for it in pending],
-            RuntimeError("AdvisorService closed"),
-        )
+        if not first:
+            self._close_done.wait(timeout)
+            return
+        try:
+            self._batcher.join(timeout)
+            self._search_pool.shutdown(wait=False, cancel_futures=True)
+            with self._cond:
+                pending = [
+                    it for g in self._pending.values() for it in g.items
+                ]
+                self._pending.clear()
+                inflight = list(self._inflight.items())
+                self._inflight.clear()
+            exc = ServiceClosedError("AdvisorService is closed")
+            self._fail([(it.key, it.future) for it in pending], exc)
+            for key, future in inflight:
+                if not future.done():
+                    self._fail([(key, future)], exc)
+        finally:
+            self._close_done.set()
 
     def __enter__(self) -> "AdvisorService":
         return self

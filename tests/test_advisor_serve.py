@@ -108,7 +108,7 @@ def test_metrics_snapshot_and_reset():
     snap = m.snapshot()
     assert snap["queries"] == 2
     assert snap["tier_counts"] == {
-        "cache": 1, "batch": 1, "search": 0, "schedule": 0
+        "cache": 1, "batch": 1, "search": 0, "schedule": 0, "degraded": 0
     }
     assert snap["batch_size_hist"] == {4: 1}
     assert snap["mean_batch_size"] == 4.0

@@ -13,6 +13,11 @@
 * **Per-node bandwidth vectors**: the mixed-DIMM preset's unequal banks
   are recovered as tuples — the regression the scalar model could not
   express.
+* **Ingestion guards and the swap-guard metric**: ``clean_samples``
+  rejects corrupted rows with counted receipts, partial sweeps
+  concatenate/subset and still fit, the Huber loss survives outlier
+  rows, and ``sweep_median_error_pct`` orders truth below drift — the
+  exact comparison the live-recalibration guard makes.
 """
 
 import importlib.util
@@ -28,7 +33,10 @@ from repro.core.numa import (
     E5_2699_V3_SNC2,
     E7_8860_V3,
     blind_template,
+    clean_samples,
     collect_sweep,
+    concat_samples,
+    counter_errors_pct,
     fit_from_simulated,
     fit_machine,
     link_relative_errors,
@@ -36,6 +44,8 @@ from repro.core.numa import (
     probe_suite,
     samples_from_counters,
     seed_parameters,
+    sweep_median_error_pct,
+    take_samples,
 )
 from repro.core.numa.calibrate import _caps_from, CalibrationParams
 from repro.core.numa.simulator import machine_caps, simulate
@@ -255,3 +265,162 @@ def test_fit_rejects_mismatched_samples():
     samples = collect_sweep(E5_2630_V3)
     with pytest.raises(ValueError):
         fit_machine(blind_template(E5_2699_V3_SNC2), samples, steps=1)
+
+
+# ---------------------------------------------------------------------------
+# Ingestion guards, partial sweeps, and the swap-guard metric
+# ---------------------------------------------------------------------------
+
+
+def _poisoned_sweep(machine):
+    """A clean sweep with three distinct corruption modes planted: row 0
+    goes non-finite, row 1 gets a negative counter (wrap-around), row 2 a
+    dead sampling interval (elapsed 0)."""
+    samples = collect_sweep(machine)
+    lr = np.array(samples.local_read, np.float64)
+    lr[0] = np.nan
+    rr = np.array(samples.remote_read, np.float64)
+    rr[1, 0] = -1.0
+    el = np.array(samples.elapsed, np.float64)
+    el[2] = 0.0
+    return samples, samples._replace(local_read=lr, remote_read=rr, elapsed=el)
+
+
+def test_clean_samples_rejects_corruption_with_receipts():
+    """Each of the three production corruption modes is rejected and
+    *counted* under its own reason; surviving rows pass through
+    bit-identically."""
+    clean, bad = _poisoned_sweep(E5_2630_V3)
+    P = clean.n_samples
+    kept, diag = clean_samples(bad)
+    assert (diag.n_total, diag.n_kept, diag.n_rejected) == (P, P - 3, 3)
+    assert diag.reject_rate == pytest.approx(3 / P)
+    text = " ".join(diag.reasons)
+    assert "non-finite" in text
+    assert "negative counters" in text
+    assert "non-positive elapsed" in text
+    keep = np.arange(3, P)
+    np.testing.assert_array_equal(
+        np.asarray(kept.placements), np.asarray(clean.placements)[keep]
+    )
+    np.testing.assert_allclose(
+        np.asarray(kept.local_read), np.asarray(clean.local_read)[keep]
+    )
+
+
+def test_clean_samples_passthrough_and_empty_batch():
+    """A healthy batch passes through untouched (zero-copy); an all-bad
+    batch raises by default and returns empty under on_empty='ignore' —
+    the accumulate-across-batches mode the recalibration stream uses."""
+    samples = collect_sweep(E5_2630_V3)
+    kept, diag = clean_samples(samples)
+    assert kept is samples
+    assert diag.n_rejected == 0 and diag.reject_rate == 0.0 and diag.reasons == ()
+    all_bad = samples._replace(
+        elapsed=np.zeros((samples.n_samples,), np.float64)
+    )
+    with pytest.raises(ValueError, match="rejected"):
+        clean_samples(all_bad)
+    empty, ediag = clean_samples(all_bad, on_empty="ignore")
+    assert empty.n_samples == 0
+    assert ediag.n_kept == 0 and ediag.n_rejected == samples.n_samples
+
+
+def test_concat_and_take_samples_round_trip():
+    """Splitting a sweep into partial batches and concatenating them back
+    reproduces the original — the accumulation step of the production
+    recalibration stream — and mismatched batches fail loudly."""
+    samples = collect_sweep(E5_2630_V3)
+    P = samples.n_samples
+    head = take_samples(samples, np.arange(P // 2))
+    tail = take_samples(samples, np.arange(P // 2, P))
+    assert head.n_samples + tail.n_samples == P
+    merged = concat_samples([head, tail])
+    assert merged.n_samples == P
+    np.testing.assert_array_equal(
+        np.asarray(merged.placements), np.asarray(samples.placements)
+    )
+    for a, b in zip(merged.wl_arrays, samples.wl_arrays):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+    np.testing.assert_allclose(
+        np.asarray(merged.remote_write), np.asarray(samples.remote_write)
+    )
+    assert concat_samples([samples]) is samples  # single batch: passthrough
+    with pytest.raises(ValueError, match="at least one"):
+        concat_samples([])
+    with pytest.raises(ValueError, match="node count"):
+        concat_samples([samples, collect_sweep(E5_2699_V3_SNC2)])
+    with pytest.raises(ValueError, match="workload shape"):
+        concat_samples(
+            [samples, collect_sweep(E5_2630_V3, probe_suite(E5_2630_V3, 3))]
+        )
+
+
+def test_partial_sweep_still_fits():
+    """A fit from whatever 60% of the probe suite a production trace
+    happened to cover still recovers the links — partial sweeps are a
+    first-class input, not a degraded mode."""
+    m = E5_2630_V3
+    samples = collect_sweep(m)
+    idx = np.random.default_rng(3).choice(
+        samples.n_samples, size=int(samples.n_samples * 0.6), replace=False
+    )
+    res = fit_machine(blind_template(m), take_samples(samples, idx), steps=120)
+    assert float(link_relative_errors(res.machine, m).max()) < 0.1
+    errs = local_bw_relative_errors(res.machine, m)
+    assert float(errs["read"].max()) < 0.1
+
+
+def test_fit_clean_true_survives_poisoned_rows():
+    """fit_machine's default clean=True drops corrupted rows (receipts in
+    result.diagnostics) and fits from the survivors as if the poison never
+    arrived; clean=False on a healthy sweep records no diagnostics."""
+    m = E5_2630_V3
+    clean, bad = _poisoned_sweep(m)
+    res = fit_machine(blind_template(m), bad, steps=120)
+    assert res.diagnostics is not None
+    assert res.diagnostics.n_rejected == 3
+    assert np.isfinite(res.final_loss)
+    assert float(link_relative_errors(res.machine, m).max()) < 0.05
+    res_raw = fit_machine(blind_template(m), clean, steps=1, clean=False)
+    assert res_raw.diagnostics is None
+
+
+def test_huber_fit_tolerates_outlier_rows():
+    """Finite-but-garbage rows (8x counter blowup — past what clean_samples
+    can detect) pull a Huber fit linearly instead of quadratically: the
+    robust loss stays within tolerance where the squared loss degrades."""
+    m = E5_2630_V3
+    samples = collect_sweep(m)
+    lr = np.array(samples.local_read, np.float64)
+    rr = np.array(samples.remote_read, np.float64)
+    lr[4] *= 8.0
+    rr[5] *= 8.0
+    bad = samples._replace(local_read=lr, remote_read=rr)
+    robust = fit_machine(blind_template(m), bad, steps=150, huber_delta=0.05)
+    squared = fit_machine(blind_template(m), bad, steps=150)
+    err_robust = float(link_relative_errors(robust.machine, m).max())
+    err_squared = float(link_relative_errors(squared.machine, m).max())
+    assert err_robust < 0.1, (err_robust, err_squared)
+    assert err_robust <= err_squared + 1e-6
+
+
+def test_sweep_median_error_is_the_swap_guard_ordering():
+    """The metric the live-recalibration guard gates on: the truth spec
+    replays its own noise-free sweep near-exactly, a drifted spec scores
+    strictly worse — so guard comparisons order specs correctly."""
+    m = E5_2630_V3
+    samples = collect_sweep(m)
+    per_row = counter_errors_pct(m, samples)
+    assert per_row.shape == (samples.n_samples,)
+    true_err = sweep_median_error_pct(m, samples)
+    assert true_err < 0.5
+    drifted = m._replace(
+        remote_read_bw=m.remote_read_bw * 0.6,
+        remote_write_bw=m.remote_write_bw * 0.6,
+    )
+    assert sweep_median_error_pct(drifted, samples) > true_err + 1.0
+    with pytest.raises(ValueError, match="zero samples"):
+        counter_errors_pct(m, take_samples(samples, np.arange(0)))
+    with pytest.raises(ValueError, match="nodes"):
+        counter_errors_pct(E5_2699_V3_SNC2, samples)

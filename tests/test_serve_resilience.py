@@ -1,0 +1,598 @@
+"""Resilience layer of the advisor service (``repro.serve``): fault
+injection, the deadline degradation ladder, spec-epoch hot-swap, live
+recalibration, and close/drain semantics.
+
+Contracts under test (the deterministic twins of what
+``benchmarks/serve_resilience.py`` gates open-loop):
+
+* **FaultInjector** — armed faults fire exactly their budget, the log
+  records the scenario, the skewed clock and counter corruption behave
+  deterministically, ``NO_FAULTS`` stays inert.
+* **Degradation ladder** — a deadline-armed query whose exact tier fails
+  answers ``ranked``; with the ranked rung also failing it answers
+  ``stale`` off the last known good, else ``fallback`` (even spread).
+  Degraded answers are tagged, never cached, and the next healthy query
+  is ``exact`` again.
+* **Search retries** — injected search-attempt failures within the retry
+  budget are absorbed (the answer stays exact); beyond it they surface.
+* **Hot-swap** — epochs only move forward; invalidation is per-machine;
+  in-flight batches finish on the spec they were admitted under; a
+  concurrent query stream straddling a swap never observes two answers
+  for one ``(signature, epoch)``; rollback restores the previous spec.
+* **Recalibration** — NaN rows rejected at ingest, insufficient samples
+  refused, an unmeetable guard rejects the refit (previous spec keeps
+  serving, rollback counted), and a clean refit of a drifted spec is
+  accepted and swapped in.
+* **Lifecycle** — close is idempotent and concurrent-safe; queries racing
+  a close either answer or raise ``ServiceClosedError``, never hang.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.numa import E5_2630_V3, E7_4830_V3
+from repro.core.numa import calibrate as C
+from repro.serve import (
+    Advice,
+    AdvisorService,
+    FIDELITIES,
+    FaultError,
+    FaultInjector,
+    NO_FAULTS,
+    QuerySignature,
+    Recalibrator,
+    ServiceClosedError,
+)
+
+
+def _sigs(n, seed=0):
+    from repro.launch.advisor_serve import signature_pool
+
+    return signature_pool(n, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector
+# ---------------------------------------------------------------------------
+
+
+def test_fault_injector_error_budget_and_log():
+    fi = FaultInjector()
+    fi.fire("batch")  # nothing armed: no-op
+    fi.inject_error("batch", times=2)
+    with pytest.raises(FaultError):
+        fi.fire("batch")
+    with pytest.raises(FaultError):
+        fi.fire("batch")
+    fi.fire("batch")  # budget exhausted: healed
+    assert fi.fired("batch") == 2
+    assert fi.log == [("batch", "error"), ("batch", "error")]
+
+
+def test_fault_injector_slow_and_custom_exception():
+    fi = FaultInjector()
+    fi.inject_slow("batch", 0.05, times=1)
+    t0 = time.perf_counter()
+    fi.fire("batch")
+    assert time.perf_counter() - t0 >= 0.05
+    fi.inject_error("search", exc_factory=lambda: KeyError("boom"))
+    with pytest.raises(KeyError):
+        fi.fire("search")
+
+
+def test_fault_injector_clear_and_clock_skew():
+    fi = FaultInjector()
+    fi.inject_error("batch", times=None)  # unlimited
+    with pytest.raises(FaultError):
+        fi.fire("batch")
+    fi.clear("batch")
+    fi.fire("batch")  # disarmed
+    fi.inject_clock_skew(3.5)
+    assert fi.now() - time.monotonic() == pytest.approx(3.5, abs=0.05)
+    fi.clear()
+    assert fi.now() - time.monotonic() == pytest.approx(0.0, abs=0.05)
+
+
+def test_fault_injector_counter_corruption_deterministic():
+    fi = FaultInjector()
+    arrays = tuple(np.arange(8, dtype=np.float64) + i for i in range(3))
+    same = fi.corrupt_counters(arrays)
+    assert same is arrays  # disarmed: identity, no copy
+    fi.inject_counter_corruption(fraction=0.25, times=1, seed=3)
+    poisoned = fi.corrupt_counters(arrays)
+    bad_rows = np.isnan(np.stack(poisoned)).any(axis=0)
+    assert bad_rows.sum() == 2  # round(0.25 * 8)
+    # every leaf is poisoned on the SAME rows (a corrupt sample is
+    # corrupt across all its counters)
+    for arr in poisoned:
+        assert (np.isnan(arr) == bad_rows).all()
+    # budget consumed: the next batch passes clean
+    clean = fi.corrupt_counters(arrays)
+    assert not np.isnan(np.stack(clean)).any()
+
+
+def test_no_faults_singleton_is_inert():
+    NO_FAULTS.fire("batch")
+    NO_FAULTS.fire("anything")
+    arrays = (np.ones(4),)
+    assert NO_FAULTS.corrupt_counters(arrays) is arrays
+    assert NO_FAULTS.log == []
+
+
+# ---------------------------------------------------------------------------
+# Degradation ladder
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture()
+def faulty_service():
+    fi = FaultInjector()
+    svc = AdvisorService(max_wait_s=0.002, faults=fi)
+    yield svc, fi
+    fi.clear()
+    svc.close()
+
+
+def test_deadline_miss_degrades_to_ranked(faulty_service):
+    svc, fi = faulty_service
+    fp = svc.register(E5_2630_V3)
+    svc.warmup(fp, 8)
+    fi.inject_error("batch", times=1)
+    adv = svc.query(fp, _sigs(1, seed=1)[0], 8, deadline_s=5.0)
+    assert adv.tier == "degraded" and adv.fidelity == "ranked"
+    p = np.asarray(adv.placement)
+    assert p.sum() == 8 and (p >= 0).all()
+    assert adv.objective > 0  # the roofline rung still scores its pick
+    assert np.isnan(adv.predicted_bandwidth)  # ...but never simulates
+    snap = svc.metrics.snapshot()
+    assert snap["tier_counts"]["degraded"] == 1
+    assert snap["fidelity_counts"]["ranked"] == 1
+    assert snap["degraded_rate"] > 0
+
+
+def test_ladder_falls_to_stale_then_fallback(faulty_service):
+    svc, fi = faulty_service
+    fp = svc.register(E5_2630_V3)
+    exact = svc.warmup(fp, 8)  # populates the last-known-good cache
+    # exact tier AND the ranked rung both fail -> last known good
+    fi.inject_error("batch", times=1)
+    fi.inject_error("rank", times=1)
+    adv = svc.query(fp, _sigs(1, seed=2)[0], 8, deadline_s=5.0)
+    assert adv.fidelity == "stale" and adv.tier == "degraded"
+    assert adv.placement == exact.placement  # it IS the old exact answer
+    assert adv.objective == exact.objective
+
+
+def test_ladder_fallback_is_even_spread():
+    fi = FaultInjector()
+    # fresh service, no warmup: the last-known-good cache is empty
+    svc = AdvisorService(max_wait_s=0.002, faults=fi)
+    fp = svc.register(E5_2630_V3)
+    fi.inject_error("batch", times=1)
+    fi.inject_error("rank", times=1)
+    adv = svc.query(fp, _sigs(1, seed=3)[0], 9, deadline_s=5.0)
+    svc.close()
+    assert adv.fidelity == "fallback" and adv.tier == "degraded"
+    assert adv.placement == (5, 4)  # divmod even spread, remainder first
+    assert np.isnan(adv.objective) and np.isnan(adv.predicted_bandwidth)
+
+
+def test_degraded_answers_are_never_cached(faulty_service):
+    svc, fi = faulty_service
+    fp = svc.register(E5_2630_V3)
+    svc.warmup(fp, 8)
+    sig = _sigs(1, seed=4)[0]
+    fi.inject_error("batch", times=1)
+    degraded = svc.query(fp, sig, 8, deadline_s=5.0)
+    assert degraded.fidelity == "ranked"
+    # the world healed: the SAME signature now answers exact, proving the
+    # degraded answer never entered the cache
+    healed = svc.query(fp, sig, 8, deadline_s=5.0)
+    assert healed.fidelity == "exact" and healed.tier == "batch"
+    assert svc.query(fp, sig, 8) is healed  # and THIS one is cached
+
+
+def test_all_answers_fidelity_tagged_in_mixed_chaos(faulty_service):
+    svc, fi = faulty_service
+    fp = svc.register(E5_2630_V3)
+    svc.warmup(fp, 8)
+    sigs = _sigs(40, seed=5)
+    fi.inject_slow("batch", 0.05, times=2)
+    fi.inject_error("batch", times=3)
+    fi.inject_error("batcher", times=1)
+    answers = {}
+    lock = threading.Lock()
+    idx = iter(range(len(sigs)))
+
+    def worker():
+        while True:
+            with lock:
+                i = next(idx, None)
+            if i is None:
+                return
+            answers[i] = svc.query(fp, sigs[i], 8, deadline_s=2.0)
+
+    threads = [threading.Thread(target=worker) for _ in range(3)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(answers) == len(sigs)
+    assert all(a.fidelity in FIDELITIES for a in answers.values())
+    snap = svc.metrics.snapshot()
+    assert snap["worker_restarts"] >= 1  # the batcher kill self-healed
+    # recovery: once the faults are spent, fresh queries are exact again
+    fi.clear()
+    post = svc.query(fp, _sigs(1, seed=6)[0], 8, deadline_s=2.0)
+    assert post.fidelity == "exact"
+
+
+# ---------------------------------------------------------------------------
+# Search-tier retries
+# ---------------------------------------------------------------------------
+
+
+def test_search_faults_absorbed_within_retry_budget():
+    fi = FaultInjector()
+    # sweep_limit=1 forces even the 2-socket machine onto the search tier
+    svc = AdvisorService(
+        sweep_limit=1, search_retries=2, search_backoff_s=0.001, faults=fi
+    )
+    fi.inject_error("search", times=2)
+    adv = svc.query(E5_2630_V3, _sigs(1, seed=7)[0], 8, timeout=300)
+    svc.close()
+    assert adv.tier == "search" and adv.fidelity == "exact"
+    assert np.asarray(adv.placement).sum() == 8
+    # both armed failures were consumed (the healthy attempt fires no
+    # armed fault, so it does not log)
+    assert fi.fired("search") == 2
+
+
+def test_search_faults_beyond_budget_surface_without_deadline():
+    fi = FaultInjector()
+    svc = AdvisorService(
+        sweep_limit=1, search_retries=1, search_backoff_s=0.001, faults=fi
+    )
+    fi.inject_error("search", times=3)  # budget is 1+1 attempts
+    with pytest.raises(FaultError):
+        svc.query(E5_2630_V3, _sigs(1, seed=8)[0], 8, timeout=300)
+    svc.close()
+
+
+def test_search_faults_beyond_budget_degrade_with_deadline():
+    fi = FaultInjector()
+    svc = AdvisorService(
+        sweep_limit=1, search_retries=1, search_backoff_s=0.001, faults=fi
+    )
+    fi.inject_error("search", times=3)
+    adv = svc.query(E5_2630_V3, _sigs(1, seed=9)[0], 8, deadline_s=30.0)
+    svc.close()
+    assert adv.tier == "degraded" and adv.fidelity == "ranked"
+
+
+# ---------------------------------------------------------------------------
+# Spec epochs & hot-swap
+# ---------------------------------------------------------------------------
+
+
+def _drift(spec, factor=0.8):
+    return spec._replace(
+        remote_read_bw=spec.remote_read_bw * factor,
+        remote_write_bw=spec.remote_write_bw * factor,
+    )
+
+
+def test_swap_bumps_epoch_and_answers_move():
+    svc = AdvisorService(max_wait_s=0.0)
+    fp = svc.register(E5_2630_V3, machine_id="prod")
+    assert fp == "prod" and svc.epoch_of(fp) == 0
+    sig = _sigs(1, seed=10)[0]
+    before = svc.query(fp, sig, 8)
+    assert before.epoch == 0
+    new_epoch = svc.swap_machine(fp, _drift(E5_2630_V3))
+    assert new_epoch == 1 and svc.epoch_of(fp) == 1
+    assert svc.machine_spec(fp) == _drift(E5_2630_V3)
+    after = svc.query(fp, sig, 8)
+    assert after.epoch == 1
+    assert after is not before  # epoch-0 answer was invalidated
+    assert svc.metrics.snapshot()["swaps"] == 1
+    svc.close()
+
+
+def test_swap_invalidation_is_per_machine():
+    svc = AdvisorService(max_wait_s=0.0)
+    a = svc.register(E5_2630_V3, machine_id="a")
+    b = svc.register(E7_4830_V3, machine_id="b")
+    sig = _sigs(1, seed=11)[0]
+    adv_a = svc.query(a, sig, 8)
+    adv_b = svc.query(b, sig, 24)
+    svc.swap_machine(a, _drift(E5_2630_V3))
+    # machine b's cached answer survived machine a's swap
+    assert svc.query(b, sig, 24) is adv_b
+    assert svc.query(a, sig, 8) is not adv_a
+    svc.close()
+
+
+def test_swap_rejects_structural_change_and_unknown_handle():
+    svc = AdvisorService()
+    fp = svc.register(E5_2630_V3)
+    with pytest.raises(ValueError):
+        svc.swap_machine(fp, E7_4830_V3)  # 2 nodes -> 4 nodes
+    with pytest.raises(KeyError):
+        svc.swap_machine("nope", E5_2630_V3)
+    svc.close()
+
+
+def test_register_is_idempotent_across_swaps():
+    svc = AdvisorService(max_wait_s=0.0)
+    fp = svc.register(E5_2630_V3, machine_id="prod")
+    svc.swap_machine(fp, _drift(E5_2630_V3))
+    # re-presenting the original spec must NOT clobber the swapped one
+    assert svc.register(E5_2630_V3, machine_id="prod") == fp
+    assert svc.machine_spec(fp) == _drift(E5_2630_V3)
+    svc.close()
+
+
+def test_rollback_restores_previous_spec_as_new_epoch():
+    svc = AdvisorService(max_wait_s=0.0)
+    fp = svc.register(E5_2630_V3, machine_id="prod")
+    with pytest.raises(RuntimeError):
+        svc.rollback_machine(fp)  # nothing to roll back to yet
+    svc.swap_machine(fp, _drift(E5_2630_V3))
+    epoch = svc.rollback_machine(fp)
+    assert epoch == 2  # epochs only move forward
+    assert svc.machine_spec(fp) == E5_2630_V3
+    snap = svc.metrics.snapshot()
+    assert snap["swaps"] == 1 and snap["rollbacks"] == 1
+    svc.close()
+
+
+def test_inflight_batch_pins_its_epoch():
+    """Queries admitted before a swap answer on the OLD spec/epoch even
+    when the swap lands while they wait in the pending queue."""
+    svc = AdvisorService(max_batch=8, max_wait_s=0.3)
+    fp = svc.register(E5_2630_V3, machine_id="prod")
+    svc.warmup(fp, 8)
+    # reference: what the old spec answers
+    sigs = _sigs(3, seed=12)
+    ref = [svc.query(fp, s, 8) for s in sigs]
+    fresh = _sigs(3, seed=13)
+    # submit misses; the batcher holds the queue open for max_wait_s
+    futures = [svc.submit(fp, s, 8) for s in fresh]
+    svc.swap_machine(fp, _drift(E5_2630_V3, 0.5))  # lands mid-wait
+    answers = [f.result(timeout=60) for f in futures]
+    assert all(a.epoch == 0 for a in answers)
+    # bit-identical to the old spec's serial answers
+    old = AdvisorService(max_wait_s=0.0)
+    want = [old.query(E5_2630_V3, s, 8) for s in fresh]
+    old.close()
+    for got, ref_adv in zip(answers, want):
+        assert got.placement == ref_adv.placement
+        assert got.objective == ref_adv.objective
+    # post-swap queries are epoch 1
+    assert svc.query(fp, sigs[0], 8).epoch == 1
+    assert ref[0].epoch == 0
+    svc.close()
+
+
+def test_sustained_stream_straddling_swap_has_no_torn_reads():
+    svc = AdvisorService(max_wait_s=0.002)
+    fp = svc.register(E5_2630_V3, machine_id="prod")
+    svc.warmup(fp, 8)
+    sigs = _sigs(6, seed=14)
+    for s in sigs:
+        svc.query(fp, s, 8)
+    observed = []
+    stop = threading.Event()
+
+    def streamer():
+        i = 0
+        while not stop.is_set() and i < 20_000:
+            sig = sigs[i % len(sigs)]
+            adv = svc.query(fp, sig, 8)
+            observed.append(
+                (i % len(sigs), adv.epoch, adv.placement, adv.objective)
+            )
+            i += 1
+
+    threads = [threading.Thread(target=streamer) for _ in range(2)]
+    for t in threads:
+        t.start()
+    time.sleep(0.05)
+    svc.swap_machine(fp, _drift(E5_2630_V3))
+    time.sleep(0.05)
+    svc.rollback_machine(fp)
+    time.sleep(0.05)
+    stop.set()
+    for t in threads:
+        t.join()
+    svc.close()
+    assert {e for _, e, _, _ in observed} >= {0, 1}  # stream saw a swap
+    by_key = {}
+    for sig_id, epoch, placement, obj in observed:
+        key, val = (sig_id, epoch), (placement, obj)
+        assert by_key.setdefault(key, val) == val, f"torn read at {key}"
+
+
+# ---------------------------------------------------------------------------
+# Recalibration
+# ---------------------------------------------------------------------------
+
+
+def _sweep(machine, n_threads=4, noise_std=0.0):
+    return C.collect_sweep(
+        machine, C.probe_suite(machine, n_threads=n_threads),
+        noise_std=noise_std,
+    )
+
+
+def test_recalibrator_rejects_nan_rows_at_ingest():
+    fi = FaultInjector()
+    svc = AdvisorService(faults=fi)
+    fp = svc.register(E5_2630_V3, machine_id="prod")
+    recal = Recalibrator(svc)
+    samples = _sweep(E5_2630_V3)
+    fi.inject_counter_corruption(fraction=0.5, times=1, seed=1)
+    diag = recal.ingest(fp, samples)
+    assert diag.n_rejected == round(0.5 * samples.n_samples)
+    assert diag.n_kept == samples.n_samples - diag.n_rejected
+    assert recal.buffered(fp) == diag.n_kept
+    svc.close()
+
+
+def test_recalibrator_refuses_insufficient_samples():
+    svc = AdvisorService()
+    fp = svc.register(E5_2630_V3, machine_id="prod")
+    recal = Recalibrator(svc, min_samples=10_000)
+    recal.ingest(fp, _sweep(E5_2630_V3))
+    event = recal.recalibrate(fp)
+    svc.close()
+    assert not event.accepted and "insufficient" in event.reason
+    assert svc.epoch_of(fp) == 0  # no swap happened
+    assert recal.events == [event]
+    assert recal.buffered(fp) == 0  # the buffer was consumed regardless
+
+
+def test_recalibrator_guard_rejects_and_rolls_back():
+    svc = AdvisorService()
+    fp = svc.register(E5_2630_V3, machine_id="prod")
+    # a guard demanding a >=100pp improvement is unmeetable: the refit is
+    # deterministically rejected whatever the fit quality
+    recal = Recalibrator(
+        svc, min_samples=4, fit_steps=5, max_error_regression_pp=-100.0
+    )
+    recal.ingest(fp, _sweep(E5_2630_V3))
+    event = recal.recalibrate(fp)
+    svc.close()
+    assert not event.accepted and "previous spec retained" in event.reason
+    assert svc.epoch_of(fp) == 0  # never swapped
+    assert svc.machine_spec(fp) == E5_2630_V3
+    assert svc.metrics.snapshot()["rollbacks"] == 1
+    assert event.new_error_pct == event.new_error_pct  # scored, not NaN
+
+
+def test_recalibrator_fit_failure_is_an_event_not_a_crash():
+    fi = FaultInjector()
+    svc = AdvisorService(faults=fi)
+    fp = svc.register(E5_2630_V3, machine_id="prod")
+    recal = Recalibrator(svc, min_samples=4)
+    recal.ingest(fp, _sweep(E5_2630_V3))
+    fi.inject_error("recalibrate", times=1)
+    event = recal.recalibrate(fp)
+    svc.close()
+    assert not event.accepted and "refit failed" in event.reason
+    assert svc.epoch_of(fp) == 0
+
+
+@pytest.mark.slow
+def test_recalibrator_accepts_refit_of_drifted_spec():
+    """The full loop: a service starts on a drifted spec, ingests a clean
+    sweep measured on the TRUE machine, and the guarded refit is accepted
+    and hot-swapped in with a better counter error than the drifted
+    spec's."""
+    truth = E5_2630_V3
+    drifted = _drift(truth, 0.7)
+    svc = AdvisorService(max_wait_s=0.0)
+    fp = svc.register(drifted, machine_id="prod")
+    svc.warmup(fp, 8)
+    recal = Recalibrator(svc, min_samples=8, fit_steps=150)
+    recal.ingest(fp, _sweep(truth, n_threads=8, noise_std=0.01))
+    event = recal.recalibrate(fp)
+    assert event.accepted, event.reason
+    assert event.new_error_pct < event.old_error_pct
+    assert event.epoch == 1 and svc.epoch_of(fp) == 1
+    assert svc.machine_spec(fp) != drifted
+    # the swapped spec serves immediately
+    adv = svc.query(fp, _sigs(1, seed=15)[0], 8)
+    assert adv.epoch == 1 and adv.fidelity == "exact"
+    svc.close()
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle: close/drain
+# ---------------------------------------------------------------------------
+
+
+def test_closed_service_raises_everywhere():
+    svc = AdvisorService()
+    fp = svc.register(E5_2630_V3)
+    svc.close()
+    svc.close()  # idempotent
+    sig = _sigs(1)[0]
+    with pytest.raises(ServiceClosedError):
+        svc.query(fp, sig, 8)
+    with pytest.raises(ServiceClosedError):
+        svc.submit(fp, sig, 8)
+    with pytest.raises(ServiceClosedError):
+        svc.query_schedule(fp, [(sig, 1.0)], 8)
+    with pytest.raises(ServiceClosedError):
+        svc.swap_machine(fp, _drift(E5_2630_V3))
+
+
+def test_concurrent_close_calls_are_safe():
+    svc = AdvisorService()
+    svc.register(E5_2630_V3)
+    threads = [threading.Thread(target=svc.close) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30)
+    assert not any(t.is_alive() for t in threads)
+
+
+def test_close_during_query_hammer_never_hangs():
+    """Queries racing a close either answer or raise ServiceClosedError —
+    no third outcome, no hang."""
+    svc = AdvisorService(max_batch=4, max_wait_s=0.01)
+    fp = svc.register(E5_2630_V3, machine_id="prod")
+    svc.warmup(fp, 8)
+    sigs = _sigs(64, seed=16)
+    outcomes = []
+    lock = threading.Lock()
+    idx = iter(range(len(sigs)))
+
+    def worker():
+        while True:
+            with lock:
+                i = next(idx, None)
+            if i is None:
+                return
+            try:
+                adv = svc.query(fp, sigs[i], 8, timeout=30)
+                with lock:
+                    outcomes.append(adv)
+            except ServiceClosedError:
+                with lock:
+                    outcomes.append("closed")
+
+    threads = [threading.Thread(target=worker) for _ in range(4)]
+    for t in threads:
+        t.start()
+    time.sleep(0.05)  # let some queries land mid-flight
+    svc.close()
+    for t in threads:
+        t.join(timeout=30)
+    assert not any(t.is_alive() for t in threads), "a query hung on close"
+    assert len(outcomes) == len(sigs)
+    answered = [o for o in outcomes if isinstance(o, Advice)]
+    for adv in answered:
+        assert np.asarray(adv.placement).sum() == 8
+
+
+def test_close_drains_pending_batches():
+    """Futures already queued when close begins resolve — exactly (the
+    drain) or with ServiceClosedError (the cutoff) — never silently."""
+    svc = AdvisorService(max_batch=8, max_wait_s=0.5)
+    fp = svc.register(E5_2630_V3, machine_id="prod")
+    svc.warmup(fp, 8)
+    futures = [svc.submit(fp, s, 8) for s in _sigs(3, seed=17)]
+    svc.close()  # batcher is mid-wait holding the group open
+    for f in futures:
+        try:
+            adv = f.result(timeout=30)
+            assert isinstance(adv, Advice)
+        except ServiceClosedError:
+            pass

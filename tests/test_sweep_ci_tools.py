@@ -434,6 +434,176 @@ def test_gate_schedule_records_fail_above_time_cap(gate):
     assert len(failures) == 1 and "time-to-solution" in failures[0]
 
 
+def _chaos_rec(sweep="resil-chaos", **over):
+    rec = {
+        "sweep": sweep, "queries": 100, "qps": 100.0, "degraded_rate": 0.1,
+        "hangs": 0, "all_tagged": True, "search_retry_ok": True,
+    }
+    rec.update(over)
+    return rec
+
+
+def _chaos_base(**over):
+    return _chaos_rec(
+        min_qps=25.0, max_degraded_rate=0.5, max_hangs=0, **over
+    )
+
+
+def test_gate_resilience_chaos_pass_and_fail(gate):
+    base = [_chaos_base()]
+    ok = [_chaos_rec(qps=50.0, degraded_rate=0.3)]
+    assert gate.check(ok, base, error_tolerance=0.25, min_pps_ratio=0.0) == []
+    bad = [_chaos_rec(degraded_rate=0.9)]
+    failures = gate.check(bad, base, error_tolerance=0.25, min_pps_ratio=0.0)
+    assert len(failures) == 1 and "degraded_rate" in failures[0]
+    hung = [_chaos_rec(hangs=1)]
+    failures = gate.check(hung, base, error_tolerance=0.25, min_pps_ratio=0.0)
+    assert len(failures) == 1 and "hangs" in failures[0]
+    slow = [_chaos_rec(qps=5.0)]
+    failures = gate.check(slow, base, error_tolerance=0.25, min_pps_ratio=0.0)
+    assert len(failures) == 1 and "min_qps" in failures[0]
+
+
+def test_gate_resilience_chaos_fails_on_untagged_or_surfaced_fault(gate):
+    """The chaos record's boolean contracts: every answer fidelity-tagged
+    and the search-tier query answered exact through retries."""
+    base = [_chaos_base()]
+    untagged = [_chaos_rec(all_tagged=False)]
+    failures = gate.check(
+        untagged, base, error_tolerance=0.25, min_pps_ratio=0.0
+    )
+    assert len(failures) == 1 and "all_tagged" in failures[0]
+    surfaced = [_chaos_rec(search_retry_ok=False)]
+    failures = gate.check(
+        surfaced, base, error_tolerance=0.25, min_pps_ratio=0.0
+    )
+    assert len(failures) == 1 and "search_retry_ok" in failures[0]
+
+
+def test_gate_resilience_recovery_nan_means_never_recovered(gate):
+    """recovery_s = NaN encodes "never answered exact again" — it must
+    FAIL the ceiling, not slip through a NaN comparison."""
+    base = [{"sweep": "resil-rec", "recovery_s": 0.1, "max_recovery_s": 10.0}]
+    ok = [{"sweep": "resil-rec", "recovery_s": 2.0}]
+    assert gate.check(ok, base, error_tolerance=0.25, min_pps_ratio=0.0) == []
+    never = [{"sweep": "resil-rec", "recovery_s": float("nan")}]
+    failures = gate.check(never, base, error_tolerance=0.25, min_pps_ratio=0.0)
+    assert len(failures) == 1 and "recovery_s" in failures[0]
+    slow = [{"sweep": "resil-rec", "recovery_s": 60.0}]
+    failures = gate.check(slow, base, error_tolerance=0.25, min_pps_ratio=0.0)
+    assert len(failures) == 1
+
+
+def _swap_rec(**over):
+    rec = {
+        "sweep": "resil-swap", "swaps": 1, "rollbacks": 1,
+        "torn_reads": 0, "nan_rejected": 4,
+    }
+    rec.update(over)
+    return rec
+
+
+def test_gate_resilience_hot_swap_exact_counts_and_torn_reads(gate):
+    base = [_swap_rec(
+        expected_swaps=1, expected_rollbacks=1, max_torn_reads=0,
+        min_nan_rejected=1,
+    )]
+    assert gate.check(
+        [_swap_rec()], base, error_tolerance=0.25, min_pps_ratio=0.0
+    ) == []
+    # exact-count semantics: too MANY swaps fails just like too few
+    for bad in (
+        _swap_rec(swaps=2), _swap_rec(rollbacks=0),
+        _swap_rec(torn_reads=1), _swap_rec(nan_rejected=0),
+    ):
+        failures = gate.check(
+            [bad], base, error_tolerance=0.25, min_pps_ratio=0.0
+        )
+        assert len(failures) == 1, bad
+
+
+def test_gate_resilience_record_never_trips_serve_branch(gate):
+    """The chaos record carries min_qps AND resilience keys — dispatch
+    order (resilience before serve) must route it to the resilience
+    branch, where a missing p99_ms is fine."""
+    base = [
+        _chaos_base(),
+        _serve_base("serve-a"),
+    ]
+    new = [_chaos_rec(qps=50.0), _serve_rec("serve-a", qps=600.0)]
+    assert gate.check(new, base, error_tolerance=0.25, min_pps_ratio=0.0) == []
+
+
+def test_committed_baseline_resilience_records():
+    """ISSUE-10 acceptance: the committed baseline pins zero hangs, zero
+    torn reads, exactly one swap and one rollback, and NaN rejection."""
+    baseline = json.loads(
+        (Path(__file__).resolve().parents[1] / "benchmarks"
+         / "sweep_baseline.json").read_text()
+    )
+    by_sweep = {rec["sweep"]: rec for rec in baseline}
+    chaos = by_sweep["serve-resilience chaos-mixed"]
+    assert chaos["max_hangs"] == 0 and chaos["all_tagged"] is True
+    swap = by_sweep["serve-resilience hot-swap"]
+    assert swap["max_torn_reads"] == 0
+    assert swap["expected_swaps"] == 1 and swap["expected_rollbacks"] == 1
+    assert swap["min_nan_rejected"] >= 1
+    assert by_sweep["serve-resilience recovery"]["max_recovery_s"] > 0
+
+
+def test_dashboard_trends_schedule_records(dashboard, tmp_path):
+    hist = tmp_path / "hist"
+    d = hist / "2026-01-01__run-a"
+    d.mkdir(parents=True)
+    (d / "schedule_search.json").write_text(
+        json.dumps([_schedule_rec("sched-a", gain=0.8, tts=0.05)])
+    )
+    current = tmp_path / "current.json"
+    current.write_text(
+        json.dumps([_rec("a", 0.1), _schedule_rec("sched-a", gain=1.0,
+                                                  tts=0.04)])
+    )
+    runs = dashboard.load_history(hist, current)
+    series = dashboard.aggregate(runs)
+    assert series["sched-a"]["gain"] == [0.8, 1.0]
+    assert series["sched-a"]["stts"] == [0.05, 0.04]
+    md = dashboard.render_markdown(series)
+    assert "Schedule search" in md
+    assert "| sched-a | 2 | 1.0000 | 1.0000 | 0.040 |" in md
+    # the sweep table must not pick up the schedule record
+    assert "| sched-a | 1 |" not in md
+
+
+def test_dashboard_trends_resilience_records(dashboard, tmp_path):
+    hist = tmp_path / "hist"
+    d = hist / "2026-01-01__run-a"
+    d.mkdir(parents=True)
+    (d / "serve_resilience.json").write_text(json.dumps([
+        _chaos_rec(degraded_rate=0.2),
+        {"sweep": "resil-rec", "recovery_s": 0.5},
+        _swap_rec(torn_reads=0),
+    ]))
+    current = tmp_path / "current.json"
+    current.write_text(json.dumps([
+        _chaos_rec(degraded_rate=0.1),
+        {"sweep": "resil-rec", "recovery_s": 0.3},
+        _swap_rec(torn_reads=0),
+    ]))
+    runs = dashboard.load_history(hist, current)
+    series = dashboard.aggregate(runs)
+    # chaos record carries qps too; resilience branch must win dispatch
+    assert series["resil-chaos"]["resilience"] == [0.2, 0.1]
+    assert series["resil-chaos"]["metric"] == "degraded_rate"
+    assert series["resil-rec"]["resilience"] == [0.5, 0.3]
+    assert series["resil-rec"]["metric"] == "recovery_s"
+    assert series["resil-swap"]["metric"] == "torn_reads"
+    md = dashboard.render_markdown(series)
+    assert "Serve resilience" in md
+    assert "| resil-chaos | 2 | degraded_rate | 0.1 | 0.2 |" in md
+    # no qps table row for the chaos record
+    assert "Advisor service" not in md
+
+
 @pytest.fixture()
 def docgate():
     import importlib.util
